@@ -1,0 +1,36 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import problems
+from repro.data import synthetic
+
+
+def timed(fn, *args, **kwargs):
+    t0 = time.time()
+    out = fn(*args, **kwargs)
+    return out, time.time() - t0
+
+
+def make_ridge(n_samples=2000, n_features=400, lam=1e-4, seed=0):
+    """Fig. 1 stand-in: dense synthetic normal regression (paper: 10000x1000).
+
+    Reduced by default so the CPU container sweeps in minutes; pass the
+    paper's sizes for the full reproduction."""
+    x, y, _ = synthetic.regression(n_samples, n_features, seed=seed)
+    return problems.ridge_primal(jnp.asarray(x), jnp.asarray(y), lam), (x, y)
+
+
+def make_lasso(n_samples=2000, n_features=400, lam=1e-5, seed=1):
+    """Webspam stand-in (paper: 350k x 16M sparse)."""
+    x, y, _ = synthetic.regression(n_samples, n_features, seed=seed,
+                                   sparsity_solution=0.1)
+    return problems.lasso(jnp.asarray(x), jnp.asarray(y), lam), (x, y)
+
+
+def csv_row(*cols):
+    print(",".join(str(c) for c in cols), flush=True)

@@ -1,0 +1,60 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp oracle, us/call.
+
+On CPU the timings only sanity-check plumbing (interpret mode executes the
+kernel body in Python); the numbers that matter for the TPU target come from
+the roofline analysis. Reported anyway for completeness."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.core import problems
+from repro.core.cola import build_env
+from repro.core.partition import make_partition
+from repro.core.subproblem import SubproblemSpec, cd_solve_all
+from repro.data import synthetic
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ops import cd_solve_pallas
+from repro.models.attention import chunked_attention
+
+
+def _time(fn, iters=3):
+    fn()  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(fast: bool = True):
+    csv_row("fig", "kernel", "case", "us_per_call")
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    b, s, h, kvh, hd = 1, 256, 8, 2, 64
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kvh, hd))
+    v = jax.random.normal(ks[2], (b, s, kvh, hd))
+    pos = jnp.tile(jnp.arange(s), (b, 1)).astype(jnp.int32)
+    csv_row("kernels", "flash_attention(pallas-interp)", f"{s}x{s}",
+            f"{_time(lambda: flash_attention(q, k, v, pos, pos, mode='causal', block_q=64, block_kv=64)):.0f}")
+    csv_row("kernels", "chunked_attention(jnp)", f"{s}x{s}",
+            f"{_time(lambda: chunked_attention(q, k, v, pos, pos, mode='causal', kv_chunk=64)):.0f}")
+
+    x, y, _ = synthetic.regression(256, 128, seed=0)
+    prob = problems.ridge_primal(jnp.asarray(x), jnp.asarray(y), 1e-2)
+    kk = 8
+    part = make_partition(prob.n, kk)
+    env = build_env(prob, part)
+    grads = jax.vmap(prob.grad_f)(jnp.zeros((kk, prob.d)))
+    xp = jnp.zeros((kk, part.block))
+    spec = SubproblemSpec(sigma_over_tau=kk / prob.tau, inv_k=1.0 / kk)
+    csv_row("kernels", "cd_glm(pallas-interp)", f"K={kk},pass=1",
+            f"{_time(lambda: cd_solve_pallas(prob, spec, env.a_parts, xp, grads, env.gp_parts, env.masks, part.block)):.0f}")
+    csv_row("kernels", "cd_glm(jnp-oracle)", f"K={kk},pass=1",
+            f"{_time(lambda: cd_solve_all(prob, spec, env.a_parts, xp, grads, env.gp_parts, env.masks, part.block)):.0f}")
+
+
+if __name__ == "__main__":
+    run()

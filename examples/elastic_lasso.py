@@ -1,0 +1,47 @@
+"""Elastic decentralized LASSO: nodes drop out and re-join mid-training.
+
+Reproduces the Fig.-4 fault-tolerance setting in miniature: every round each
+node stays in the network with probability p; leavers freeze their block
+(Theta_k = 1) and the surviving nodes re-normalize the Metropolis weights.
+CoLA keeps converging monotonically — no tuning, no restart.
+
+  PYTHONPATH=src python examples/elastic_lasso.py [--p-stay 0.8]
+"""
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import problems, topology as topo
+from repro.core.cola import ColaConfig, run_cola, solve_reference
+from repro.data import synthetic
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--p-stay", type=float, default=0.8)
+    ap.add_argument("--rounds", type=int, default=200)
+    args = ap.parse_args()
+
+    x, y, _ = synthetic.regression(1500, 300, seed=1, sparsity_solution=0.1)
+    prob = problems.lasso(jnp.asarray(x), jnp.asarray(y), lam=1e-3)
+    opt = solve_reference(prob, rounds=500, kappa=8)
+    graph = topo.connected_cycle(16, 2)
+
+    def churn(t, rng):
+        return rng.random(16) < args.p_stay
+
+    res = run_cola(prob, graph, ColaConfig(kappa=2.0), rounds=args.rounds,
+                   record_every=args.rounds // 10,
+                   active_schedule=churn, leave_mode="freeze")
+    print(f"p_stay={args.p_stay}: suboptimality trajectory")
+    for t, p in zip(res.history["round"], res.history["primal"]):
+        print(f"  round {t:4d}  F_A - F* = {p - opt:10.6f}")
+
+    x_final = res.state.x_parts.reshape(-1)[: prob.n]
+    nnz = int(np.sum(np.abs(np.asarray(x_final)) > 1e-6))
+    print(f"solution sparsity: {nnz}/{prob.n} nonzeros")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Quickstart: decentralized ridge regression with CoLA (Algorithm 1).
+
+16 nodes on a ring, no central coordinator, parameter-free defaults
+(gamma = 1, sigma' = K). Prints the decentralized duality gap + consensus
+violation per round and finishes with the Prop.-1 LOCAL certificate — each
+node certifies the GLOBAL duality gap from its own neighborhood only.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.core import problems, topology as topo
+from repro.core.cola import ColaConfig, build_env, run_cola
+from repro.core.duality import block_spectral_norms, local_certificates
+from repro.core.partition import make_partition
+from repro.data import synthetic
+
+
+def main() -> None:
+    # data: dense synthetic regression, columns (features) spread over nodes
+    x, y, _ = synthetic.regression(2000, 400, seed=0)
+    prob = problems.ridge_primal(jnp.asarray(x), jnp.asarray(y), lam=1e-4)
+
+    graph = topo.ring(16)
+    w = topo.metropolis_weights(graph)
+    print(f"ring of {graph.num_nodes}: beta={topo.beta(w):.4f} "
+          f"(spectral gap {topo.spectral_gap(w):.4f})")
+
+    res = run_cola(prob, graph, ColaConfig(kappa=2.0), rounds=200,
+                   record_every=25)
+    for t, p, g, cv in zip(res.history["round"], res.history["primal"],
+                           res.history["gap"],
+                           res.history["consensus_violation"]):
+        print(f"round {t:4d}  F_A={p:10.4f}  gap={g:10.4f}  "
+              f"consensus-violation={cv:.3e}")
+
+    # Prop. 1 requires L-bounded support of g_i (lasso-type); certify a
+    # lasso run — each node checks the GLOBAL gap from local quantities.
+    # (The certificate's condition 10 is conservative by the worst-case
+    # factor sqrt(K sum n_k^2 sigma_k)/(1-beta), so it fires once the run is
+    # well past the target accuracy — use a smaller instance to get there.)
+    lx, ly, _ = synthetic.regression(800, 96, seed=3, sparsity_solution=0.2)
+    lprob = problems.lasso(jnp.asarray(lx), jnp.asarray(ly), lam=5e-2,
+                           box=5.0)
+    lres = run_cola(lprob, graph, ColaConfig(kappa=8.0), rounds=2500,
+                    record_every=2499)
+    part = make_partition(lprob.n, graph.num_nodes)
+    env = build_env(lprob, part)
+    # f32 gradient-disagreement noise floor is ~1e-6; the conservative
+    # condition-10 scaling maps that to a certifiable eps of ~1e-1 here.
+    eps = max(10.0 * lres.history["gap"][-1], 1e-1)
+    cert = local_certificates(
+        lprob, part, lres.state.x_parts, lres.state.v_stack, env.a_parts,
+        env.gp_parts, env.masks, graph.adjacency, topo.beta(w),
+        block_spectral_norms(env.a_parts), eps, lprob.l_bound)
+    print(f"\nlasso true gap {lres.history['gap'][-1]:.4f}; local "
+          f"certificate for eps={eps:.4f}: certified={bool(cert.certified)} "
+          f"(condition 9 on {int(cert.local_gap_ok.sum())}/16 nodes, "
+          f"condition 10 on {int(cert.grad_ok.sum())}/16)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.configs.base import (  # noqa: F401
+    ARCHS,
+    InputShape,
+    ModelConfig,
+    SHAPES,
+    get_config,
+    smoke_variant,
+)

@@ -1,0 +1,10 @@
+"""DBRX-132B [hf:databricks/dbrx-base]: fine-grained MoE, 16 experts top-4."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b", family="moe",
+    num_layers=40, d_model=6144, num_heads=48, num_kv_heads=8, head_dim=128,
+    d_ff=10752, vocab_size=100352,
+    num_experts=16, experts_per_token=4,
+    source="hf:databricks/dbrx-base (16 experts top-4, fine-grained)",
+)

@@ -1,0 +1,18 @@
+# CoLA: Decentralized Linear Learning (He, Bian, Jaggi — NeurIPS 2018).
+# The paper's primary contribution as a composable JAX module: gossip mixing
+# over arbitrary graph topologies, data-local quadratic subproblems with
+# Theta-approximate coordinate-descent solvers, decentralized duality gaps and
+# local certificates, elasticity/fault tolerance, and the baselines it is
+# evaluated against.
+from repro.core import (  # noqa: F401
+    baselines,
+    cola,
+    duality,
+    mixing,
+    partition,
+    problems,
+    subproblem,
+    topology,
+)
+from repro.core.cola import ColaConfig, ColaState, run_cola  # noqa: F401
+from repro.core.problems import PROBLEMS, Problem  # noqa: F401

@@ -1,0 +1,211 @@
+"""CoLA — Algorithm 1, plus the CoCoA special case and the elastic runtime.
+
+The single-host simulator keeps all K nodes' state stacked:
+  x_parts (K, n_k), v_stack (K, d); one round is a single jitted program
+(gossip mix -> vmapped local CD solve -> local updates). The shard_map
+distributed runtime in ``repro.dist.runtime`` executes the same math with the
+node axis laid out over mesh devices; tests assert bitwise-equivalent rounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mixing, topology as topo
+from repro.core.duality import GapReport, gap_report
+from repro.core.partition import Partition, make_partition
+from repro.core.problems import Problem
+from repro.core.subproblem import SubproblemSpec, cd_solve_all
+
+
+@dataclasses.dataclass(frozen=True)
+class ColaConfig:
+    """Hyper-parameters of Algorithm 1. The paper's safe defaults need no tuning."""
+
+    gamma: float = 1.0              # aggregation parameter (paper uses 1)
+    sigma_prime: float | None = None  # subproblem relaxation; default gamma*K
+    kappa: float = 1.0              # CD passes over the local block per round;
+    #   kappa * n_k = the paper's "number of coordinates updated" (Fig. 1),
+    #   the knob controlling the local accuracy Theta. May be fractional.
+    gossip_steps: int = 1           # B gossip steps per round (App. E.2)
+    grad_mode: str = "local"        # "local" (Eq. 2) | "mixed" (App. E.1)
+
+    def resolved_sigma(self, k: int) -> float:
+        return self.gamma * k if self.sigma_prime is None else self.sigma_prime
+
+    def coord_steps(self, block: int) -> int:
+        return max(1, int(round(self.kappa * block)))
+
+
+class ColaState(NamedTuple):
+    x_parts: jax.Array  # (K, n_k)
+    v_stack: jax.Array  # (K, d)
+
+
+class ColaEnv(NamedTuple):
+    """Per-run arrays derived from the problem + partition."""
+
+    a_parts: jax.Array   # (K, d, n_k)
+    gp_parts: jax.Array  # (K, n_k)
+    masks: jax.Array     # (K, n_k)
+
+
+def build_env(problem: Problem, part: Partition) -> ColaEnv:
+    return ColaEnv(
+        a_parts=part.split_matrix(problem.a),
+        gp_parts=part.split_vector(problem.g_params()),
+        masks=part.mask(problem.a.dtype),
+    )
+
+
+def init_state(problem: Problem, part: Partition) -> ColaState:
+    return ColaState(
+        x_parts=jnp.zeros((part.num_nodes, part.block), dtype=problem.a.dtype),
+        v_stack=jnp.zeros((part.num_nodes, problem.d), dtype=problem.a.dtype),
+    )
+
+
+def make_round(problem: Problem, part: Partition, cfg: ColaConfig
+               ) -> Callable[[ColaState, ColaEnv, jax.Array, jax.Array], ColaState]:
+    """Build the jitted one-round function of Algorithm 1.
+
+    Returned signature: round(state, env, w, active) -> state. ``w`` and
+    ``active`` are dynamic so fault-tolerance schedules don't retrigger
+    compilation.
+    """
+    k = part.num_nodes
+    sigma = cfg.resolved_sigma(k)
+    spec = SubproblemSpec(sigma_over_tau=sigma / problem.tau, inv_k=1.0 / k)
+
+    @jax.jit
+    def one_round(state: ColaState, env: ColaEnv, w: jax.Array,
+                  active: jax.Array,
+                  budgets: jax.Array | None = None) -> ColaState:
+        # Step 4: gossip mixing of the local estimates (B steps, App. E.2).
+        v_half = mixing.mix_power(w, state.v_stack, cfg.gossip_steps)
+
+        # Gradient each node uses for its subproblem.
+        grads = jax.vmap(problem.grad_f)(v_half)
+        if cfg.grad_mode == "mixed":
+            # App. E.1: use the neighborhood-mixed gradient sum_l W_kl grad f(v_l).
+            grads = mixing.dense_mix(w, grads)
+
+        # Step 5: Theta-approximate local subproblem solve (kappa * n_k CD
+        # steps; per-node budgets model heterogeneous Theta_k, Definition 5).
+        dx = cd_solve_all(problem, spec, env.a_parts, state.x_parts, grads,
+                          env.gp_parts, env.masks, cfg.coord_steps(part.block),
+                          step_budgets=budgets)
+        dx = dx * active[:, None].astype(dx.dtype)
+
+        # Steps 6-8: local variable + local estimate updates.
+        x_new = state.x_parts + cfg.gamma * dx
+        dv = jnp.einsum("kdn,kn->kd", env.a_parts, dx)
+        v_new = v_half + cfg.gamma * k * dv
+        return ColaState(x_parts=x_new, v_stack=v_new)
+
+    return one_round
+
+
+def cocoa_mixing(k: int) -> np.ndarray:
+    """W = (1/K) 11^T: one gossip step yields the exact consensus v_c = Ax,
+    recovering centralized CoCoA as a special case of CoLA."""
+    return np.full((k, k), 1.0 / k)
+
+
+class RunResult(NamedTuple):
+    state: ColaState
+    history: dict  # lists keyed by metric name
+
+
+def run_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
+             rounds: int, *, record_every: int = 1,
+             active_schedule: Callable[[int, np.random.Generator], np.ndarray] | None = None,
+             budget_schedule: Callable[[int, np.random.Generator], np.ndarray] | None = None,
+             leave_mode: str = "freeze", seed: int = 0,
+             w_override: np.ndarray | None = None) -> RunResult:
+    """Driver: runs Algorithm 1 and records Lemma-1/2 diagnostics.
+
+    Args:
+      active_schedule: optional (round, rng) -> (K,) bool mask simulating node
+        churn (Fig. 4/6). W is re-normalized over the active subgraph each
+        round via Metropolis weights.
+      budget_schedule: optional (round, rng) -> (K,) int CD-step budgets —
+        heterogeneous per-node solver quality Theta_k (Definition 5):
+        stragglers do fewer coordinate updates this round.
+      leave_mode: "freeze" (paper's main model: x_[k] frozen) or "reset"
+        (App. D Fig. 6: x_[k] zeroed and all v_j adjusted to preserve the
+        Lemma-1 mean invariant).
+      w_override: use this mixing matrix instead of Metropolis weights
+        (e.g. ``cocoa_mixing(K)`` for the centralized special case).
+    """
+    k = graph.num_nodes
+    part = make_partition(problem.n, k)
+    env = build_env(problem, part)
+    state = init_state(problem, part)
+    one_round = make_round(problem, part, cfg)
+    base_w = w_override if w_override is not None else topo.metropolis_weights(graph)
+    rng = np.random.default_rng(seed)
+
+    dtype = problem.a.dtype
+    w = jnp.asarray(base_w, dtype=dtype)
+    all_active = np.ones((k,), dtype=bool)
+    history: dict = {"round": [], "primal": [], "hamiltonian": [], "dual": [],
+                     "gap": [], "consensus_violation": []}
+
+    report = jax.jit(lambda s: gap_report(problem, part, s.x_parts, s.v_stack))
+
+    prev_active = all_active
+    for t in range(rounds):
+        if active_schedule is not None:
+            active = np.asarray(active_schedule(t, rng), dtype=bool)
+            if not active.any():
+                active = all_active.copy()  # never let the whole network die
+            w_t = jnp.asarray(topo.reweight_for_active(graph, active), dtype=dtype)
+            if leave_mode == "reset":
+                leavers = prev_active & ~active
+                if leavers.any():
+                    state = _reset_leavers(state, env, part, leavers)
+            prev_active = active
+        else:
+            active, w_t = all_active, w
+        budgets = None
+        if budget_schedule is not None:
+            budgets = jnp.asarray(budget_schedule(t, rng), dtype=jnp.int32)
+        state = one_round(state, env, w_t,
+                          jnp.asarray(active, dtype=dtype), budgets)
+        if t % record_every == 0 or t == rounds - 1:
+            rep = report(state)
+            history["round"].append(t)
+            for name in ("primal", "hamiltonian", "dual", "gap",
+                         "consensus_violation"):
+                history[name].append(float(getattr(rep, name)))
+    return RunResult(state=state, history=history)
+
+
+def _reset_leavers(state: ColaState, env: ColaEnv, part: Partition,
+                   leavers: np.ndarray) -> ColaState:
+    """Fig.-6 model: zero x_[k] of leaving nodes; every node subtracts
+    A_[k] x_[k] from its local estimate so (1/K) sum v_k = A x still holds."""
+    leave = jnp.asarray(leavers)
+    contrib = jnp.einsum("kdn,kn->kd", env.a_parts,
+                         state.x_parts * leave[:, None])  # (K, d)
+    total = jnp.sum(contrib, axis=0)                      # A_[k] x_[k] summed
+    x_new = jnp.where(leave[:, None], 0.0, state.x_parts)
+    v_new = state.v_stack - total[None, :]
+    return ColaState(x_parts=x_new, v_stack=v_new)
+
+
+def solve_reference(problem: Problem, rounds: int = 3000,
+                    kappa: int = 10) -> float:
+    """High-accuracy reference optimum via single-node CoCoA (used as F* when
+    reporting suboptimality, mirroring the paper's methodology in App. D)."""
+    graph = topo.complete(2)
+    cfg = ColaConfig(kappa=kappa)
+    res = run_cola(problem, graph, cfg, rounds, record_every=max(rounds // 4, 1),
+                   w_override=cocoa_mixing(2))
+    return min(res.history["primal"])

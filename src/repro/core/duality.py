@@ -1,0 +1,118 @@
+"""Decentralized duality machinery: H_A / H_B objectives (Eq. DA/DB), the
+decentralized duality gap (Lemma 2, Eq. 6), consensus violation, and the
+Prop.-1 local certificates.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import Partition
+
+
+class GapReport(NamedTuple):
+    primal: jax.Array             # F_A(x)
+    hamiltonian: jax.Array        # H_A(x, {v_k})
+    dual: jax.Array               # -H_B({w_k}) with w_k = grad f(v_k)
+    gap: jax.Array                # G_H (Eq. 6)
+    consensus_violation: jax.Array  # sum_k ||v_k - Ax||^2
+
+
+def hamiltonian(problem, x_global: jax.Array, v_stack: jax.Array) -> jax.Array:
+    """H_A(x, {v_k}) = (1/K) sum_k f(v_k) + g(x)   (Eq. DA)."""
+    f_vals = jax.vmap(problem.f)(v_stack)
+    return jnp.mean(f_vals) + problem.g(x_global)
+
+
+def gap_report(problem, part: Partition, x_parts: jax.Array,
+               v_stack: jax.Array) -> GapReport:
+    """All Lemma-1/2 quantities at the optimality choice w_k = grad f(v_k)."""
+    x = part.merge_vector(x_parts)
+    ax = problem.a @ x
+    w_stack = jax.vmap(problem.grad_f)(v_stack)          # (K, d)
+    w_bar = jnp.mean(w_stack, axis=0)
+    f_vals = jax.vmap(problem.f)(v_stack)
+    fc_vals = jax.vmap(problem.f_conj)(w_stack)
+    g_val = problem.g(x)
+    gc_val = jnp.sum(problem.g_conj_el(-(problem.a.T @ w_bar), problem.g_params()))
+    h_a = jnp.mean(f_vals) + g_val
+    h_b = jnp.mean(fc_vals) + gc_val
+    gap = h_a + h_b
+    cv = jnp.sum((v_stack - ax[None, :]) ** 2)
+    return GapReport(primal=problem.f(ax) + g_val, hamiltonian=h_a,
+                     dual=-h_b, gap=gap, consensus_violation=cv)
+
+
+def block_spectral_norms(a_parts: jax.Array, iters: int = 50,
+                         seed: int = 0) -> jax.Array:
+    """sigma_k = ||A_[k]||_2^2 (Eq. 7) for every node, by power iteration."""
+    k, d, n_k = a_parts.shape
+    key = jax.random.PRNGKey(seed)
+    v0 = jax.random.normal(key, (k, n_k), dtype=a_parts.dtype)
+
+    def body(_, v):
+        u = jnp.einsum("kdn,kn->kd", a_parts, v)
+        w = jnp.einsum("kdn,kd->kn", a_parts, u)
+        return w / (jnp.linalg.norm(w, axis=1, keepdims=True) + 1e-30)
+
+    v = jax.lax.fori_loop(0, iters, body, v0)
+    u = jnp.einsum("kdn,kn->kd", a_parts, v)
+    num = jnp.einsum("kn,kn->k", jnp.einsum("kdn,kd->kn", a_parts, u), v)
+    den = jnp.einsum("kn,kn->k", v, v)
+    return num / (den + 1e-30)
+
+
+class CertificateReport(NamedTuple):
+    """Prop. 1: per-node booleans whose conjunction certifies G_H <= eps."""
+
+    local_gap: jax.Array          # (K,) LHS of Eq. 9
+    local_gap_ok: jax.Array       # (K,) Eq. 9 holds
+    grad_disagreement: jax.Array  # (K,) LHS of Eq. 10
+    grad_ok: jax.Array            # (K,) Eq. 10 holds
+    certified: jax.Array          # scalar bool: all nodes pass both
+
+
+def local_certificates(problem, part: Partition, x_parts: jax.Array,
+                       v_stack: jax.Array, a_parts: jax.Array,
+                       gp_parts: jax.Array, masks: jax.Array,
+                       adjacency: np.ndarray, beta_ub: float,
+                       sigma_k: jax.Array, eps: float,
+                       l_bound: float) -> CertificateReport:
+    """Evaluate the Prop.-1 conditions (9) and (10) from local quantities only.
+
+    The only cross-node data each node uses is its neighbors' gradients
+    grad f(v_j), j in N_k — exactly what one gossip exchange provides.
+    """
+    k_nodes = v_stack.shape[0]
+    grads = jax.vmap(problem.grad_f)(v_stack)            # (K, d)
+
+    # -- condition (9): local subproblem duality gap ------------------------
+    def node_gap(v_k, g_k, a_k, x_k, gp_k, m_k):
+        conj = problem.g_conj_el(-(a_k.T @ g_k), gp_k)
+        prim = problem.g_el(x_k, gp_k)
+        return jnp.dot(v_k, g_k) + jnp.sum((prim + conj) * m_k)
+
+    local_gap = jax.vmap(node_gap)(v_stack, grads, a_parts, x_parts,
+                                   gp_parts, masks)
+    cond9 = local_gap <= eps / (2.0 * k_nodes)
+
+    # -- condition (10): gradient agreement with the neighborhood -----------
+    # N_k includes k itself (W_kk > 0 for Metropolis weights).
+    adj_self = jnp.asarray(adjacency, dtype=grads.dtype) + jnp.eye(
+        k_nodes, dtype=grads.dtype)
+    deg = jnp.sum(adj_self, axis=1, keepdims=True)
+    neigh_mean = (adj_self @ grads) / deg
+    disagree = jnp.linalg.norm(grads - neigh_mean, axis=1)
+    n_k_sizes = jnp.sum(masks, axis=1)
+    scale = jnp.sum(n_k_sizes ** 2 * sigma_k)
+    thresh = (scale ** -0.5) * (1.0 - beta_ub) / (2.0 * l_bound *
+                                                  jnp.sqrt(k_nodes)) * eps
+    cond10 = disagree <= thresh
+
+    return CertificateReport(
+        local_gap=local_gap, local_gap_ok=cond9,
+        grad_disagreement=disagree, grad_ok=cond10,
+        certified=jnp.all(cond9 & cond10))

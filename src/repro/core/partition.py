@@ -1,0 +1,68 @@
+"""Column partitioning of the data matrix A over K nodes (paper §1.1).
+
+We use equal-size contiguous blocks (with zero-padding of A's columns when
+``n % K != 0``) so the per-node state stacks into dense ``(K, d, n_k)`` /
+``(K, n_k)`` arrays — the layout both the vmapped single-host simulator and the
+shard_map distributed runtime operate on. Padded columns are all-zero, so their
+coordinate updates are exact no-ops (guarded against 0/0 in the solver), and
+``g`` contributions of padded coordinates are masked out.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """Equal block partition of n columns over K nodes."""
+
+    num_nodes: int
+    n: int            # true number of coordinates
+    block: int        # n_k, coordinates per node (after padding)
+
+    @property
+    def n_padded(self) -> int:
+        return self.num_nodes * self.block
+
+    def pad_width(self) -> int:
+        return self.n_padded - self.n
+
+    def mask(self, dtype=jnp.float32) -> jax.Array:
+        """(K, block) mask: 1 for real coordinates, 0 for padding."""
+        flat = jnp.arange(self.n_padded) < self.n
+        return flat.reshape(self.num_nodes, self.block).astype(dtype)
+
+    def split_matrix(self, a: jax.Array) -> jax.Array:
+        """(d, n) -> (K, d, block) column blocks."""
+        d, n = a.shape
+        assert n == self.n, (n, self.n)
+        a_pad = jnp.pad(a, ((0, 0), (0, self.pad_width())))
+        return jnp.moveaxis(a_pad.reshape(d, self.num_nodes, self.block), 1, 0)
+
+    def split_vector(self, x: jax.Array) -> jax.Array:
+        """(n,) -> (K, block)."""
+        x_pad = jnp.pad(x, (0, self.pad_width()))
+        return x_pad.reshape(self.num_nodes, self.block)
+
+    def merge_vector(self, x_parts: jax.Array) -> jax.Array:
+        """(K, block) -> (n,)."""
+        return x_parts.reshape(-1)[: self.n]
+
+
+def make_partition(n: int, num_nodes: int) -> Partition:
+    block = -(-n // num_nodes)  # ceil division
+    return Partition(num_nodes=num_nodes, n=n, block=block)
+
+
+def shuffle_columns(a: np.ndarray, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Shuffle columns before partitioning (the paper shuffles and distributes).
+
+    Returns the shuffled matrix and the permutation used.
+    """
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(a.shape[1])
+    return a[:, perm], perm

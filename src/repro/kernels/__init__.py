@@ -1,0 +1,9 @@
+# Pallas TPU kernels for the perf-critical compute layers, each with a jit'd
+# wrapper (ops.py) and a pure-jnp oracle (ref.py):
+#   * flash_attention — GQA flash attention with positional masking (all
+#     four attention variants of the zoo, ring-buffer caches included)
+#   * cd_glm — the CoLA local-subproblem block coordinate-descent solver
+#     (the paper's compute hotspot), whole node block resident in VMEM
+from repro.kernels.cd_glm import cd_solve_blocks  # noqa: F401
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.ops import cd_solve_pallas, flash_attention_ops  # noqa: F401

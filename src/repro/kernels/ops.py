@@ -1,0 +1,41 @@
+"""jit'd wrappers connecting the Pallas kernels to the framework APIs.
+
+* ``cd_solve_pallas`` — drop-in replacement for
+  ``repro.core.subproblem.cd_solve_all`` (the CoLA local solver), dispatching
+  a Problem's generalized prox scalars to the cd_glm kernel.
+* ``flash_attention_ops`` — drop-in for
+  ``repro.models.attention.chunked_attention``.
+
+Both run the kernel body in interpret mode on CPU (this container) and as a
+compiled Mosaic kernel on TPU.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.partition import Partition
+from repro.core.problems import Problem
+from repro.core.subproblem import SubproblemSpec
+from repro.kernels import cd_glm, flash_attention as fa
+
+
+def cd_solve_pallas(problem: Problem, spec: SubproblemSpec,
+                    a_parts: jax.Array, x_parts: jax.Array,
+                    grads: jax.Array, gp_parts: jax.Array,
+                    masks: jax.Array, num_steps: int, *,
+                    interpret: bool = True) -> jax.Array:
+    """Same signature/semantics as ``cd_solve_all`` but on the Pallas kernel."""
+    l1, l2, box = problem.prox_spec
+    return cd_glm.cd_solve_blocks(
+        a_parts, x_parts, grads, gp_parts, masks,
+        num_steps=num_steps, sigma_over_tau=float(spec.sigma_over_tau),
+        l1=float(l1), l2=float(l2), box=float(box), interpret=interpret)
+
+
+def flash_attention_ops(q, k, v, q_pos, kv_pos, *, mode: str,
+                        window: int = 0, block_q: int = 128,
+                        block_kv: int = 128, interpret: bool = True):
+    """Drop-in for chunked_attention (same argument convention)."""
+    return fa.flash_attention(q, k, v, q_pos, kv_pos, mode=mode,
+                              window=window, block_q=block_q,
+                              block_kv=block_kv, interpret=interpret)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets in tests).
+
+* CD-GLM subproblem solver: ``repro.core.subproblem.cd_solve_all`` — the
+  vmapped cyclic coordinate-descent reference.
+* Flash attention: ``repro.models.attention.reference_attention`` — the naive
+  O(Sq*Skv) softmax attention with explicit position masking.
+"""
+from repro.core.subproblem import cd_solve_all as cd_solve_ref  # noqa: F401
+from repro.models.attention import (  # noqa: F401
+    chunked_attention as chunked_attention_ref,
+    reference_attention as attention_ref,
+)

@@ -1,0 +1,32 @@
+"""Production meshes for the TPU v5e target.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import, while tests and benchmarks see the single real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.dist.sharding import MeshAxes
+
+# TPU v5e hardware constants used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (~per direction)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes(multi_pod: bool = False) -> MeshAxes:
+    return MeshAxes(pod="pod") if multi_pod else MeshAxes()
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over the host devices (tests / CPU examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,67 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no allocation).
+
+``input_specs(cfg, shape)`` returns the abstract batch for an (architecture x
+input shape) pair; ``state_specs`` / ``cache_specs`` build the abstract
+train-state and decode-cache pytrees via ``jax.eval_shape``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer
+from repro.train.steps import TrainHParams, init_train_state
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Abstract input batch for one step of this (arch, shape) pair."""
+    b = shape.global_batch
+    if shape.kind == "decode":
+        batch = {"tokens": _sds((b, 1), jnp.int32)}
+    else:
+        s = shape.seq_len
+        if cfg.family == "vlm":
+            # patches occupy part of the context; text fills the rest
+            s = max(1, s - cfg.num_prefix_tokens)
+            batch = {"tokens": _sds((b, s), jnp.int32),
+                     "patches": _sds((b, cfg.num_prefix_tokens,
+                                      cfg.frontend_dim), jnp.bfloat16)}
+        elif cfg.family == "encdec":
+            # audio frames from the stubbed codec frontend, same length budget
+            batch = {"tokens": _sds((b, s), jnp.int32),
+                     "enc_embeds": _sds((b, s, cfg.frontend_dim),
+                                        jnp.bfloat16)}
+        else:
+            batch = {"tokens": _sds((b, s), jnp.int32)}
+        if shape.kind == "train":
+            batch["labels"] = _sds(batch["tokens"].shape, jnp.int32)
+    return batch
+
+
+def state_specs(cfg: ModelConfig, hp: TrainHParams = TrainHParams()) -> Any:
+    """Abstract TrainState (params + AdamW moments) — no allocation."""
+    return jax.eval_shape(
+        lambda key: init_train_state(cfg, key, hp), jax.random.key(0))
+
+
+def params_specs(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(lambda key: transformer.init_params(cfg, key),
+                          jax.random.key(0))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    params = params_specs(cfg)
+    return jax.eval_shape(
+        lambda p: transformer.init_cache(cfg, p, batch, max_len), params)
+
+
+def param_bytes(tree: Any) -> int:
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(tree))

@@ -1,0 +1,120 @@
+"""End-to-end training driver.
+
+Two modes:
+  * canonical data-parallel (all-reduce) training,
+  * ``--gossip K``: CoLA-style gossip data-parallelism — K node replicas,
+    local AdamW steps, Metropolis parameter mixing over a ring instead of a
+    global gradient all-reduce, with optional node dropout (--drop-p).
+
+On this CPU container use ``--smoke`` (reduced config). Example:
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
+      --steps 100 --batch 8 --seq 64
+  PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --smoke \
+      --gossip 4 --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config, smoke_variant
+from repro.optim import gossip as gsp
+from repro.train import checkpoint
+from repro.train.data import TokenBatches
+from repro.train.steps import TrainHParams, init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--gossip", type=int, default=0,
+                    help="number of gossip-DP nodes (0 = all-reduce DP)")
+    ap.add_argument("--topology", default="ring")
+    ap.add_argument("--drop-p", type=float, default=0.0,
+                    help="per-round node dropout probability (gossip mode)")
+    ap.add_argument("--mix-every", type=int, default=1,
+                    help="local steps between gossip rounds (gossip mode)")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    hp = TrainHParams(lr=args.lr)
+    key = jax.random.PRNGKey(args.seed)
+    pipe = TokenBatches(cfg.vocab_size, args.batch, args.seq, seed=args.seed)
+
+    if args.gossip:
+        run_gossip(cfg, hp, pipe, args)
+        return
+
+    state = init_train_state(cfg, key, hp)
+    step_fn = jax.jit(make_train_step(cfg, hp))
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = jax.tree.map(jnp.asarray, pipe(i))
+        state, metrics = step_fn(state, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            print(f"step {i:5d}  loss {m['loss']:.4f}  ce {m['ce']:.4f}  "
+                  f"gnorm {m['grad_norm']:.3f}  "
+                  f"{(time.time() - t0) / (i + 1):.2f}s/step", flush=True)
+    if args.ckpt:
+        checkpoint.save(args.ckpt, state.params)
+        print(f"saved params -> {args.ckpt}")
+
+
+def run_gossip(cfg, hp, pipe, args) -> None:
+    k = args.gossip
+    gcfg = gsp.GossipConfig(num_nodes=k, topology=args.topology,
+                            mix_every=args.mix_every)
+    key = jax.random.PRNGKey(args.seed)
+    state0 = init_train_state(cfg, key, hp)
+    states = gsp.replicate_state(state0, k)
+    local = make_train_step(cfg, hp)
+    step_fn = gsp.make_gossip_step(local, gcfg)
+    rng = np.random.default_rng(args.seed)
+    w_full = jnp.asarray(gcfg.weights(), jnp.float32)
+    t0 = time.time()
+    for i in range(args.steps):
+        if args.drop_p > 0:
+            active_np = rng.random(k) >= args.drop_p
+            if not active_np.any():
+                active_np[:] = True
+            w = jnp.asarray(gcfg.weights(active_np), jnp.float32)
+        else:
+            active_np, w = np.ones(k, bool), w_full
+        # node j draws its own shard of the stream (stateless addressing)
+        batches = jax.tree.map(
+            jnp.asarray,
+            jax.tree.map(lambda *xs: np.stack(xs),
+                         *[pipe(i, shard=j) for j in range(k)]))
+        states, metrics = step_fn(states, batches,
+                                  w, jnp.asarray(active_np, jnp.float32),
+                                  do_mix=(i % gcfg.mix_every == 0))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            loss = float(jnp.mean(metrics["loss"]))
+            cons = float(gsp.consensus_distance(states.params))
+            print(f"round {i:5d}  mean-loss {loss:.4f}  "
+                  f"consensus-dist {cons:.3e}  active {int(active_np.sum())}/{k}"
+                  f"  {(time.time() - t0) / (i + 1):.2f}s/round", flush=True)
+    if args.ckpt:
+        checkpoint.save(args.ckpt, gsp.average_params(states.params))
+        print(f"saved consensus-averaged params -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

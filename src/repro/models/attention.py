@@ -1,0 +1,126 @@
+"""Memory-efficient (flash-style) attention in pure JAX.
+
+One chunked-KV implementation serves training, prefill and decode for all
+attention variants in the zoo:
+
+  * ``causal``         — standard autoregressive attention
+  * ``sliding``        — sliding-window (h2o-danube3, zamba2 long mode)
+  * ``chunked_local``  — non-overlapping local chunks (llama4 iRoPE-style)
+  * ``cross``          — encoder-decoder cross attention (no causal mask)
+
+The KV axis is processed in blocks under ``lax.scan`` with running
+log-sum-exp, so the (Sq, Skv) score matrix is never materialized — this is
+what keeps the 32k-prefill dry-runs within HBM, and it doubles as the
+reference oracle for the Pallas flash kernel in ``repro.kernels``.
+
+GQA is expressed by grouping query heads over KV heads. Positions are passed
+explicitly so ring-buffer caches (SWA decode) and padded caches work without
+special cases: a KV slot is attendable iff its position is valid (>= 0) and
+the mode's positional predicate admits it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def _mode_mask(mode: str, q_pos: jax.Array, kv_pos: jax.Array,
+               window: int) -> jax.Array:
+    """(..., Sq, Skv) boolean mask from positions."""
+    q = q_pos[..., :, None]
+    k = kv_pos[..., None, :]
+    valid = k >= 0  # negative position = empty cache slot
+    if mode == "causal":
+        return valid & (k <= q)
+    if mode == "sliding":
+        return valid & (k <= q) & (k > q - window)
+    if mode == "chunked_local":
+        return valid & (k <= q) & ((k // window) == (q // window))
+    if mode == "cross":
+        return valid
+    raise ValueError(f"unknown attention mode: {mode}")
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "window", "kv_chunk",
+                                             "compute_dtype"))
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_pos: jax.Array, kv_pos: jax.Array, *, mode: str,
+                      window: int = 0, kv_chunk: int = 512,
+                      compute_dtype: str = "float32") -> jax.Array:
+    """Flash-style GQA attention.
+
+    Args:
+      q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd) with H = G * KV.
+      q_pos: (B, Sq) int32 absolute positions of the queries.
+      kv_pos: (B, Skv) int32 positions of KV slots; -1 marks empty slots.
+      mode/window: attention variant (see module docstring).
+      kv_chunk: KV block size for the scan.
+
+    Returns:
+      (B, Sq, H, hd) attention output in q.dtype.
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = hd ** -0.5
+
+    # pad KV to a multiple of the chunk; padded slots get position -1 (masked)
+    n_chunks = -(-skv // kv_chunk)
+    pad = n_chunks * kv_chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+
+    cdt = jnp.dtype(compute_dtype)
+    qg = (q.reshape(b, sq, kvh, g, hd).astype(jnp.float32)
+          * scale).astype(cdt)
+    k_chunks = k.reshape(b, n_chunks, kv_chunk, kvh, hd).swapaxes(0, 1)
+    v_chunks = v.reshape(b, n_chunks, kv_chunk, kvh, hd).swapaxes(0, 1)
+    pos_chunks = kv_pos.reshape(b, n_chunks, kv_chunk).swapaxes(0, 1)
+
+    def body(carry, chunk):
+        m, l, acc = carry
+        k_c, v_c, p_c = chunk
+        # scores: (B, Sq, KV, G, chunk) — operands in ``compute_dtype``
+        # (bf16 halves HBM traffic on TPU), accumulation forced to f32.
+        s = jnp.einsum("bqkgh,bckh->bqkgc", qg, k_c.astype(cdt),
+                       preferred_element_type=jnp.float32)
+        mask = _mode_mask(mode, q_pos, p_c, window)          # (B, Sq, chunk)
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqkgc,bckh->bqkgh", p.astype(cdt), v_c.astype(cdt),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, kvh, g), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((b, sq, kvh, g), dtype=jnp.float32)
+    acc0 = jnp.zeros((b, sq, kvh, g, hd), dtype=jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, acc0),
+                              (k_chunks, v_chunks, pos_chunks))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def reference_attention(q, k, v, q_pos, kv_pos, *, mode: str,
+                        window: int = 0) -> jax.Array:
+    """Naive O(Sq*Skv) oracle used in tests against chunked_attention."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bckh->bqkgc", qg, k.astype(jnp.float32)) * hd ** -0.5
+    mask = _mode_mask(mode, q_pos, kv_pos, window)
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgc,bckh->bqkgh", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)

@@ -1,0 +1,198 @@
+"""Feed-forward layers: SwiGLU MLP and Mixture-of-Experts.
+
+MoE uses capacity-based scatter dispatch. Two execution modes:
+
+* ``dense`` — every expert processes every token, outputs combined by router
+  weights. Exact (no dropping); used for small smoke configs and as the
+  reference oracle in tests.
+* ``scatter`` — tokens are scattered into per-expert capacity buffers,
+  experts run batched matmuls, outputs gathered back. When a mesh axis is
+  given the whole dispatch runs under a partial-manual ``shard_map`` over the
+  ``model`` axis: each device owns E/num_shards experts, activations are
+  replicated over ``model`` (as in tensor parallelism), and the only
+  communication is the combining ``psum`` — no all-to-all and no global
+  token shuffle. This is the expert-parallel layout used by the dry-runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import dense_init
+
+
+# ---------------------------------------------------------------------------
+# Dense SwiGLU
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+def moe_init(key, d_model: int, d_ff: int, num_experts: int, dtype,
+             shared_expert: bool = False) -> dict:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(k1, (d_model, num_experts), jnp.float32),
+        "w_gate": dense_init(k2, (num_experts, d_model, d_ff), dtype,
+                             fan_in=d_model),
+        "w_up": dense_init(k3, (num_experts, d_model, d_ff), dtype,
+                           fan_in=d_model),
+        "w_down": dense_init(k4, (num_experts, d_ff, d_model), dtype,
+                             fan_in=d_ff),
+    }
+    if shared_expert:
+        p["shared"] = mlp_init(k5, d_model, d_ff, dtype)
+    return p
+
+
+def _router(p: dict, x_flat: jax.Array, experts_per_token: int):
+    """Top-k routing. Returns (weights (T,k) f32, idx (T,k) i32, aux loss)."""
+    logits = (x_flat.astype(jnp.float32) @ p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, experts_per_token)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    # Switch-style load-balance auxiliary loss.
+    e = probs.shape[-1]
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return w, idx, aux
+
+
+def _expert_ffn(w_gate, w_up, w_down, buf):
+    """buf: (E, C, d) -> (E, C, d) through per-expert SwiGLU."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, w_up)
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def _scatter_moe_local(w_gate, w_up, w_down, x_flat, w_topk, idx, capacity,
+                       e_offset, num_local_experts):
+    """Capacity dispatch for the experts [e_offset, e_offset+E_loc).
+
+    x_flat: (T, d); w_topk/idx: (T, k). Tokens routed to non-local experts are
+    dropped here (they're handled by the other model shards).
+    """
+    t, k = idx.shape
+    d = x_flat.shape[-1]
+    flat_e = idx.reshape(-1) - e_offset                     # (T*k,)
+    local = (flat_e >= 0) & (flat_e < num_local_experts)
+    flat_e_c = jnp.where(local, flat_e, 0)
+    # position of each (token, choice) within its expert's capacity buffer
+    oh = jax.nn.one_hot(jnp.where(local, flat_e, num_local_experts),
+                        num_local_experts + 1, dtype=jnp.int32)
+    pos = (jnp.cumsum(oh, axis=0) - 1)                      # (T*k, E_loc+1)
+    pos = jnp.sum(pos * oh, axis=-1)                        # (T*k,)
+    keep = local & (pos < capacity)
+    pos_c = jnp.clip(pos, 0, capacity - 1)
+
+    tok = jnp.repeat(jnp.arange(t), k)
+    contrib = x_flat[tok] * keep[:, None].astype(x_flat.dtype)
+    buf = jnp.zeros((num_local_experts, capacity, d), dtype=x_flat.dtype)
+    buf = buf.at[flat_e_c, pos_c].add(contrib)
+
+    out_buf = _expert_ffn(w_gate, w_up, w_down, buf)        # (E_loc, C, d)
+
+    gathered = out_buf[flat_e_c, pos_c]                     # (T*k, d)
+    gathered = gathered * (keep[:, None] * w_topk.reshape(-1)[:, None]
+                           ).astype(x_flat.dtype)
+    return jnp.sum(gathered.reshape(t, k, d), axis=1)
+
+
+def moe_apply(p: dict, x: jax.Array, *, experts_per_token: int,
+              capacity_factor: float = 1.25, mode: str = "scatter",
+              mesh=None, model_axis: str | None = None,
+              dispatch_groups: int = 0, group_axes=None):
+    """Apply the MoE layer. x: (B, S, d). Returns (y, aux_loss).
+
+    ``dispatch_groups`` > 0 selects token-grouped dispatch: tokens are split
+    into G groups (aligned with the data-parallel shards), each group runs
+    its own capacity dispatch, and the expert einsums carry a leading group
+    axis. With expert weights FSDP-sharded on a NON-contracting dim, GSPMD
+    then all-gathers weights once per layer instead of all-reducing the
+    (E, C, d_ff) partial sums over the data axis — the §Perf MoE fix.
+    """
+    b, s, d = x.shape
+    x_flat = x.reshape(b * s, d)
+    w_topk, idx, aux = _router(p, x_flat, experts_per_token)
+    e = p["w_gate"].shape[0]
+
+    if mode == "scatter" and dispatch_groups > 1 and model_axis is None:
+        g = dispatch_groups
+        t = b * s
+        capacity = max(1, int(round(t // g * experts_per_token / e
+                                    * capacity_factor)))
+        xg = x_flat.reshape(g, t // g, d)
+        wg = w_topk.reshape(g, t // g, -1)
+        ig = idx.reshape(g, t // g, -1)
+        if mesh is not None and group_axes is not None:
+            from jax.sharding import NamedSharding
+            cons = lambda a, spec: jax.lax.with_sharding_constraint(
+                a, NamedSharding(mesh, spec))
+            xg = cons(xg, P(group_axes, None, None))
+            wg = cons(wg, P(group_axes, None, None))
+            ig = cons(ig, P(group_axes, None, None))
+        y = jax.vmap(
+            lambda xf, wt, ix: _scatter_moe_local(
+                p["w_gate"], p["w_up"], p["w_down"], xf, wt, ix, capacity,
+                0, e))(xg, wg, ig)
+        if mesh is not None and group_axes is not None:
+            y = cons(y, P(group_axes, None, None))
+        y = y.reshape(t, d)
+        if "shared" in p:
+            y = y + mlp_apply(p["shared"], x_flat)
+        return y.reshape(b, s, d), aux
+
+    if mode == "dense":
+        # reference: all experts on all tokens
+        h = jax.nn.silu(jnp.einsum("td,edf->etf", x_flat, p["w_gate"]))
+        h = h * jnp.einsum("td,edf->etf", x_flat, p["w_up"])
+        all_out = jnp.einsum("etf,efd->etd", h, p["w_down"])  # (E, T, d)
+        comb = jnp.sum(
+            jax.nn.one_hot(idx, e, dtype=jnp.float32)
+            * w_topk[..., None], axis=1)                      # (T, E)
+        y = jnp.einsum("te,etd->td", comb.astype(x.dtype), all_out)
+    elif mesh is None or model_axis is None:
+        capacity = max(1, int(round(b * s * experts_per_token / e
+                                    * capacity_factor)))
+        y = _scatter_moe_local(p["w_gate"], p["w_up"], p["w_down"], x_flat,
+                               w_topk, idx, capacity, 0, e)
+    else:
+        n_shards = mesh.shape[model_axis]
+        e_loc = e // n_shards
+        capacity = max(1, int(round(b * s * experts_per_token / e
+                                    * capacity_factor)))
+
+        def shard_fn(wg, wu, wd, xf, wt, ix):
+            shard = jax.lax.axis_index(model_axis)
+            out = _scatter_moe_local(wg, wu, wd, xf, wt, ix, capacity,
+                                     shard * e_loc, e_loc)
+            return jax.lax.psum(out, model_axis)
+
+        y = jax.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(model_axis), P(model_axis), P(model_axis),
+                      P(), P(), P()),
+            out_specs=P(), axis_names={model_axis})(
+                p["w_gate"], p["w_up"], p["w_down"], x_flat, w_topk, idx)
+
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x_flat)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,36 @@
+"""Public model API: build_model(cfg) -> ModelApi with init/forward/decode."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.models.blocks import DEFAULT_CTX, ModelCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable          # (params, batch, ctx=) -> (logits, aux)
+    init_cache: Callable       # (params, batch_size, max_len) -> cache
+    prefill: Callable          # (params, batch, cache, ctx=) -> (logits, cache)
+    decode_step: Callable      # (params, tokens, t, cache, ...) -> (logits, cache)
+    encode: Callable | None    # encdec only
+    param_count: Callable
+
+
+def build_model(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(
+        cfg=cfg,
+        init=partial(transformer.init_params, cfg),
+        forward=partial(transformer.forward, cfg),
+        init_cache=partial(transformer.init_cache, cfg),
+        prefill=partial(transformer.prefill, cfg),
+        decode_step=partial(transformer.decode_step, cfg),
+        encode=(partial(transformer.encode, cfg)
+                if cfg.family == "encdec" else None),
+        param_count=transformer.param_count,
+    )

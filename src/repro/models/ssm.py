@@ -1,0 +1,360 @@
+"""Recurrent sequence-mixing blocks: Mamba2 (SSD), mLSTM and sLSTM.
+
+All three follow the same execution pattern:
+
+* training / prefill: **chunkwise parallel scan** — quadratic attention-like
+  computation inside fixed-size chunks, a `lax.scan` carrying the recurrent
+  state across chunks. Sub-quadratic in sequence length (O(S * chunk)).
+* decode: O(1)-state single-step recurrence against a carried state — this is
+  what makes the ``long_500k`` shape feasible for the SSM/hybrid archs.
+
+Mamba2 follows the SSD formulation (scalar-per-head A, shared B/C group).
+mLSTM/sLSTM follow the xLSTM paper (arXiv:2405.04517) with the stabilized
+exponential gating (running log-scale max m).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import dense_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv. x: (B, S, C), w: (width, C).
+
+    Returns (y, new_state) where state caches the last (width-1) inputs for
+    decode. If ``state`` is given, x is treated as the continuation.
+    """
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), dtype=x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)
+    new_state = xx[:, -(width - 1):, :]
+    # windows: y_t = sum_{i} w_i * xx[t + i]
+    y = jnp.zeros_like(x)
+    for i in range(width):
+        y = y + xx[:, i:i + x.shape[1], :] * w[i]
+    return y, new_state
+
+
+def _chunk(x: jax.Array, q: int) -> jax.Array:
+    """(B, S, ...) -> (n_chunks, B, q, ...); S must be divisible by q."""
+    b, s = x.shape[:2]
+    return jnp.moveaxis(x.reshape(b, s // q, q, *x.shape[2:]), 1, 0)
+
+
+def _pad_len(s: int, chunk: int) -> int:
+    """Padding that makes s a positive multiple of chunk."""
+    return (-s) % chunk if s >= chunk else chunk - s
+
+
+def _pad_seq(x: jax.Array, pad: int, value: float = 0.0) -> jax.Array:
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[1] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _unchunk(x: jax.Array) -> jax.Array:
+    n, b, q = x.shape[:3]
+    return jnp.moveaxis(x, 0, 1).reshape(b, n * q, *x.shape[3:])
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD
+# ---------------------------------------------------------------------------
+
+def mamba2_init(key, d_model: int, ssm_state: int, dtype, *,
+                expand: int = 2, head_dim: int = 64, conv_width: int = 4) -> dict:
+    d_inner = expand * d_model
+    heads = d_inner // head_dim
+    ks = jax.random.split(key, 4)
+    conv_ch = d_inner + 2 * ssm_state
+    return {
+        "in_proj": dense_init(ks[0], (d_model,
+                                      2 * d_inner + 2 * ssm_state + heads),
+                              dtype),
+        "conv_w": dense_init(ks[1], (conv_width, conv_ch), dtype,
+                             fan_in=conv_width),
+        "a_log": jnp.zeros((heads,), dtype=jnp.float32),
+        "dt_bias": jnp.full((heads,), -2.0, dtype=jnp.float32),
+        "d_skip": jnp.ones((heads,), dtype=jnp.float32),
+        "norm_scale": jnp.zeros((d_inner,), dtype=jnp.float32),
+        "out_proj": dense_init(ks[2], (d_inner, d_model), dtype),
+    }
+
+
+def _ssd_chunk_scan(xh, dt, a, bmat, cmat, h0, chunk: int):
+    """Chunkwise SSD. xh: (B,S,H,P); dt: (B,S,H); a: (H,) negative;
+    bmat/cmat: (B,S,N). h0: (B,H,P,N). Returns (y (B,S,H,P), hT)."""
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    la = dt * a[None, None, :]                     # (B,S,H) log-decay <= 0
+    xs = (_chunk(xh, chunk), _chunk(dt, chunk), _chunk(la, chunk),
+          _chunk(bmat, chunk), _chunk(cmat, chunk))
+
+    def body(hprev, inp):
+        xq, dtq, laq, bq, cq = inp                 # (B,q,H,P) etc.
+        cum = jnp.cumsum(laq, axis=1)              # (B,q,H)
+        # intra-chunk: y_i += sum_{j<=i} (c_i . b_j) exp(cum_i - cum_j) dt_j x_j
+        seg = cum[:, :, None, :] - cum[:, None, :, :]        # (B,q_i,q_j,H)
+        iq = jnp.arange(chunk)
+        causal = (iq[:, None] >= iq[None, :])[None, :, :, None]
+        decay = jnp.where(causal, jnp.exp(seg), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", cq, bq)          # (B,q,q)
+        w = scores[:, :, :, None] * decay * dtq[:, None, :, :]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xq)
+        # inter-chunk: y_i += (c_i . h_prev) * exp(cum_i)
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", cq, hprev,
+                             jnp.exp(cum))
+        # state update: h' = h * exp(cum_end) + sum_j exp(cum_end - cum_j) dt_j b_j x_j^T
+        tail = jnp.exp(cum[:, -1:, :] - cum)                 # (B,q,H)
+        hnew = hprev * jnp.exp(cum[:, -1])[:, :, None, None] + jnp.einsum(
+            "bjh,bjn,bjhp->bhpn", tail * dtq, bq, xq)
+        return hnew, y_intra + y_inter
+
+    h_t, ys = lax.scan(body, h0, xs)
+    return _unchunk(ys), h_t
+
+
+def mamba2_apply(p: dict, x: jax.Array, *, ssm_state: int, chunk: int = 256,
+                 state: dict | None = None):
+    """x: (B, S, d). Returns (y, new_state) with state = {conv, ssm}."""
+    b, s, d = x.shape
+    proj = x @ p["in_proj"]
+    d_inner = (proj.shape[-1] - 2 * ssm_state) * 0 + p["out_proj"].shape[0]
+    heads = p["a_log"].shape[0]
+    head_dim = d_inner // heads
+    z, xbc, dt_raw = jnp.split(
+        proj, [d_inner, 2 * d_inner + 2 * ssm_state], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xbc, conv_state = causal_conv1d(jax.nn.silu(xbc), p["conv_w"], conv_state)
+    x_in, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + ssm_state], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])     # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                # (H,)
+    xh = x_in.reshape(b, s, heads, head_dim)
+
+    h0 = (state["ssm"] if state is not None else
+          jnp.zeros((b, heads, head_dim, ssm_state), dtype=jnp.float32))
+    if s == 1:
+        # decode: single recurrent step
+        la = (dt * a[None, None, :])[:, 0]                   # (B,H)
+        hnew = h0 * jnp.exp(la)[:, :, None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dt[:, 0], bmat[:, 0].astype(jnp.float32),
+            xh[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0].astype(jnp.float32),
+                       hnew)[:, None]
+        y = y.reshape(b, 1, heads, head_dim)
+        h_t = hnew
+    else:
+        # pad S to a positive multiple of chunk; padded steps carry dt = 0,
+        # so decay = exp(0) = 1 and zero contribution -> state is preserved.
+        pad = _pad_len(s, chunk)
+        y, h_t = _ssd_chunk_scan(
+            _pad_seq(xh.astype(jnp.float32), pad),
+            _pad_seq(dt, pad), a,
+            _pad_seq(bmat.astype(jnp.float32), pad),
+            _pad_seq(cmat.astype(jnp.float32), pad), h0,
+            min(chunk, s + pad))
+        y = y[:, :s]
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    y = rms_norm(y, p["norm_scale"])
+    return y @ p["out_proj"], {"conv": conv_state, "ssm": h_t}
+
+
+def mamba2_init_state(p: dict, batch: int, ssm_state: int) -> dict:
+    heads = p["a_log"].shape[0]
+    d_inner = p["out_proj"].shape[0]
+    width = p["conv_w"].shape[0]
+    conv_ch = p["conv_w"].shape[1]
+    return {
+        "conv": jnp.zeros((batch, width - 1, conv_ch), dtype=p["in_proj"].dtype),
+        "ssm": jnp.zeros((batch, heads, d_inner // heads, ssm_state),
+                         dtype=jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory cell, stabilized exponential gating)
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, d_model: int, num_heads: int, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d_model, d_model), dtype),
+        "wk": dense_init(ks[1], (d_model, d_model), dtype),
+        "wv": dense_init(ks[2], (d_model, d_model), dtype),
+        "w_if": dense_init(ks[3], (d_model, 2 * num_heads), dtype),
+        "w_o": dense_init(ks[4], (d_model, d_model), dtype),
+        "out_proj": dense_init(ks[5], (d_model, d_model), dtype),
+        "if_bias": jnp.concatenate([
+            jnp.zeros((num_heads,)), 3.0 * jnp.ones((num_heads,))]
+        ).astype(jnp.float32),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_i, log_f, state, chunk: int):
+    """q,k,v: (B,S,H,P) f32; log_i/log_f: (B,S,H). state: (C (B,H,P,N=P),
+    n (B,H,P), m (B,H)). Chunkwise stabilized mLSTM."""
+    b, s, h, p = q.shape
+
+    xs = tuple(_chunk(t, chunk) for t in (q, k, v, log_i, log_f))
+
+    def body(carry, inp):
+        cmat, nvec, m = carry
+        qq, kq, vq, liq, lfq = inp                  # (B,q,H,*)
+        bq = jnp.cumsum(lfq, axis=1)                # (B,q,H) cumulative log f
+        # g_i = max_{j<=i} (log_i_j - b_j); stabilizer m_i = b_i + max(m_st, g_i)
+        gi = lax.cummax(liq - bq, axis=1)
+        m_st = m[:, None, :]                        # carry stabilizer
+        m_new = bq + jnp.maximum(m_st, gi)          # (B,q,H)
+        # intra-chunk weights: exp(b_i - b_j + log_i_j - m_i) for j <= i
+        iq = jnp.arange(chunk)
+        causal = (iq[:, None] >= iq[None, :])[None, :, :, None]
+        logw = (bq[:, :, None, :] - bq[:, None, :, :]
+                + liq[:, None, :, :] - m_new[:, :, None, :])
+        w = jnp.where(causal, jnp.exp(logw), 0.0)   # (B,qi,qj,H)
+        scores = jnp.einsum("bihp,bjhp->bijh", qq, kq) * (p ** -0.5)
+        num_intra = jnp.einsum("bijh,bijh,bjhd->bihd", scores, w, vq)
+        # denominator: n^T q with the same decay weights
+        den_intra = jnp.einsum("bijh,bijh->bih", scores, w)
+        # inter-chunk: decay exp(b_i + m_st - m_i)
+        inter = jnp.exp(bq + m_st - m_new)          # (B,q,H)
+        num_inter = jnp.einsum("bihp,bhdp,bih->bihd", qq, cmat, inter) * (p ** -0.5)
+        den_inter = jnp.einsum("bihp,bhp,bih->bih", qq, nvec, inter) * (p ** -0.5)
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        hout = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        # state update to end of chunk
+        m_end = m_new[:, -1]                        # (B,H)
+        tail = jnp.exp(bq[:, -1:, :] - bq + liq - m_end[:, None, :])
+        c_new = (cmat * jnp.exp(bq[:, -1] + m - m_end)[:, :, None, None]
+                 + jnp.einsum("bjh,bjhd,bjhp->bhdp", tail, vq, kq))
+        n_new = (nvec * jnp.exp(bq[:, -1] + m - m_end)[:, :, None]
+                 + jnp.einsum("bjh,bjhp->bhp", tail, kq))
+        return (c_new, n_new, m_end), hout
+
+    (cmat, nvec, m), ys = lax.scan(body, state, xs)
+    return _unchunk(ys), (cmat, nvec, m)
+
+
+def mlstm_apply(p: dict, x: jax.Array, *, num_heads: int, chunk: int = 256,
+                state=None):
+    """x: (B, S, d). Returns (y, state)."""
+    b, s, d = x.shape
+    hd = d // num_heads
+    q = (x @ p["wq"]).reshape(b, s, num_heads, hd).astype(jnp.float32)
+    k = (x @ p["wk"]).reshape(b, s, num_heads, hd).astype(jnp.float32)
+    v = (x @ p["wv"]).reshape(b, s, num_heads, hd).astype(jnp.float32)
+    gates = (x @ p["w_if"]).astype(jnp.float32) + p["if_bias"]
+    log_i, f_raw = jnp.split(gates, 2, axis=-1)     # (B,S,H) each
+    log_f = jax.nn.log_sigmoid(f_raw)
+    o = jax.nn.sigmoid(x @ p["w_o"])
+
+    if state is None:
+        state = mlstm_init_state(p, b, num_heads)
+    st = (state["c"], state["n"], state["m"])
+    if s == 1:
+        cmat, nvec, m = st
+        li, lf = log_i[:, 0], log_f[:, 0]
+        m_new = jnp.maximum(lf + m, li)
+        fp = jnp.exp(lf + m - m_new)
+        ip = jnp.exp(li - m_new)
+        c_new = cmat * fp[:, :, None, None] + jnp.einsum(
+            "bhd,bhp->bhdp", v[:, 0], k[:, 0]) * ip[:, :, None, None]
+        n_new = nvec * fp[:, :, None] + k[:, 0] * ip[:, :, None]
+        num = jnp.einsum("bhp,bhdp->bhd", q[:, 0], c_new) * (hd ** -0.5)
+        den = jnp.einsum("bhp,bhp->bh", q[:, 0], n_new) * (hd ** -0.5)
+        hout = (num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+                )[:, None]
+        st_new = (c_new, n_new, m_new)
+    else:
+        # pad with i-gate = 0 (log_i = -inf) and f-gate = 1 (log_f = 0) so the
+        # padded tail neither adds to nor decays the carried state.
+        pad = _pad_len(s, chunk)
+        hout, st_new = _mlstm_chunk_scan(
+            _pad_seq(q, pad), _pad_seq(k, pad), _pad_seq(v, pad),
+            _pad_seq(log_i, pad, value=-1e30), _pad_seq(log_f, pad), st,
+            min(chunk, s + pad))
+        hout = hout[:, :s]
+    y = hout.reshape(b, s, d).astype(x.dtype) * o
+    return y @ p["out_proj"], {"c": st_new[0], "n": st_new[1], "m": st_new[2]}
+
+
+def mlstm_init_state(p: dict, batch: int, num_heads: int) -> dict:
+    d = p["wq"].shape[0]
+    hd = d // num_heads
+    return {
+        "c": jnp.zeros((batch, num_heads, hd, hd), dtype=jnp.float32),
+        "n": jnp.zeros((batch, num_heads, hd), dtype=jnp.float32),
+        "m": jnp.full((batch, num_heads), -1e30, dtype=jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar cell with block-diagonal recurrence, exponential gating)
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, d_model: int, num_heads: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    hd = d_model // num_heads
+    return {
+        "w_in": dense_init(ks[0], (d_model, 4 * d_model), dtype),
+        # recurrent block-diagonal: (H, hd, 4*hd)
+        "r": dense_init(ks[1], (num_heads, hd, 4 * hd), dtype, fan_in=hd),
+        "bias": jnp.concatenate([
+            jnp.zeros((2 * d_model,)), 3.0 * jnp.ones((d_model,)),
+            jnp.zeros((d_model,))]).astype(jnp.float32),
+        "out_proj": dense_init(ks[2], (d_model, d_model), dtype),
+    }
+
+
+def slstm_apply(p: dict, x: jax.Array, *, num_heads: int, state=None):
+    """x: (B, S, d). Sequential scan over time (inherently recurrent)."""
+    b, s, d = x.shape
+    hd = d // num_heads
+    pre = (x @ p["w_in"]).astype(jnp.float32)       # (B,S,4d)
+
+    if state is None:
+        state = slstm_init_state(p, b, num_heads)
+
+    def step(carry, pre_t):
+        c, n, h, m = carry                          # (B,H,hd) x3, (B,H,hd)
+        rec = jnp.einsum("bhp,hpq->bhq", h, p["r"].astype(jnp.float32))
+        tot = pre_t.reshape(b, num_heads, 4 * hd) + rec + \
+            p["bias"].reshape(num_heads, 4 * hd)[None]
+        z_r, i_r, f_r, o_r = jnp.split(tot, 4, axis=-1)  # (B,H,hd)
+        log_f = jax.nn.log_sigmoid(f_r)
+        m_new = jnp.maximum(log_f + m, i_r)
+        fp = jnp.exp(log_f + m - m_new)
+        ip = jnp.exp(i_r - m_new)
+        z = jnp.tanh(z_r)
+        c_new = fp * c + ip * z
+        n_new = fp * n + ip
+        h_new = jax.nn.sigmoid(o_r) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    st = (state["c"], state["n"], state["h"], state["m"])
+    pre_t = jnp.moveaxis(pre, 1, 0)                 # (S,B,4d)
+    st_new, hs = lax.scan(step, st, pre_t)
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    new_state = {"c": st_new[0], "n": st_new[1], "h": st_new[2],
+                 "m": st_new[3]}
+    return y @ p["out_proj"], new_state
+
+
+def slstm_init_state(p: dict, batch: int, num_heads: int) -> dict:
+    d = p["out_proj"].shape[0]
+    hd = d // num_heads
+    z = lambda: jnp.zeros((batch, num_heads, hd), dtype=jnp.float32)
+    return {"c": z(), "n": z(), "h": z(),
+            "m": jnp.full((batch, num_heads, hd), -1e30, dtype=jnp.float32)}

@@ -1,0 +1,355 @@
+"""Model assembly: stacked layers under ``lax.scan`` (O(1) HLO in depth),
+per-family wiring, and the three entry points every architecture exposes:
+
+  * ``forward``      — full-sequence logits (training)
+  * ``init_cache``   — decode state (KV caches / SSM states / ring buffers)
+  * ``decode_step``  — one token in, one token's logits out, state updated
+
+``prefill`` is ``forward`` against a cache (fills it and returns last logits).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks
+from repro.models.blocks import DEFAULT_CTX, ModelCtx
+from repro.models.common import dense_init, embed_init, rms_norm
+
+
+def _stack_init(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _num_groups(cfg: ModelConfig) -> int:
+    if cfg.family == "xlstm":
+        return max(1, cfg.num_layers // 2)      # one group = mLSTM + sLSTM
+    if cfg.family == "hybrid":
+        return max(1, cfg.num_layers // (cfg.blocks_per_attn + 1))
+    if cfg.family == "moe" and cfg.moe_every > 1:
+        return max(1, cfg.num_layers // cfg.moe_every)
+    return cfg.num_layers
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    n_groups = _num_groups(cfg)
+    params: dict = {
+        "embed": embed_init(keys[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "ln_f": jnp.zeros((cfg.d_model,), dtype=jnp.float32),
+        "unembed": dense_init(keys[1], (cfg.d_model, cfg.vocab_size), dtype),
+    }
+    if cfg.family == "dense":
+        params["layers"] = _stack_init(
+            lambda k: blocks.dense_layer_init(k, cfg), keys[2], n_groups)
+    elif cfg.family == "moe":
+        init_one = (blocks.moe_group_init if cfg.moe_every > 1
+                    else blocks.moe_layer_init)
+        params["layers"] = _stack_init(
+            lambda k: init_one(k, cfg), keys[2], n_groups)
+    elif cfg.family == "xlstm":
+        params["layers"] = _stack_init(
+            lambda k: blocks.xlstm_pair_init(k, cfg), keys[2], n_groups)
+    elif cfg.family == "hybrid":
+        params["layers"] = _stack_init(
+            lambda k: blocks.hybrid_group_init(k, cfg), keys[2], n_groups)
+        params["shared"] = blocks.hybrid_shared_init(keys[3], cfg)
+    elif cfg.family == "encdec":
+        params["layers"] = _stack_init(
+            lambda k: blocks.decoder_xattn_layer_init(k, cfg), keys[2],
+            cfg.num_layers)
+        params["enc_layers"] = _stack_init(
+            lambda k: blocks.encoder_layer_init(k, cfg), keys[3],
+            cfg.encoder_layers)
+        params["enc_in_proj"] = dense_init(keys[4],
+                                           (cfg.frontend_dim, cfg.d_model),
+                                           dtype)
+        params["enc_ln_f"] = jnp.zeros((cfg.d_model,), dtype=jnp.float32)
+    elif cfg.family == "vlm":
+        params["layers"] = _stack_init(
+            lambda k: blocks.dense_layer_init(k, cfg), keys[2], n_groups)
+        params["patch_proj"] = dense_init(keys[4],
+                                          (cfg.frontend_dim, cfg.d_model),
+                                          dtype)
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# stacked-layer scan
+# ---------------------------------------------------------------------------
+
+def _group_apply(cfg: ModelConfig, params: dict, ctx: ModelCtx):
+    """The per-group apply fn; closes over shared (non-scanned) params."""
+    if cfg.family in ("dense", "vlm"):
+        fn = lambda p, x, pos, c: blocks.dense_layer_apply(cfg, p, x, pos, c, ctx)
+    elif cfg.family == "moe":
+        apply_one = (blocks.moe_group_apply if cfg.moe_every > 1
+                     else blocks.moe_layer_apply)
+        fn = lambda p, x, pos, c: apply_one(cfg, p, x, pos, c, ctx)
+    elif cfg.family == "xlstm":
+        fn = lambda p, x, pos, c: blocks.xlstm_pair_apply(cfg, p, x, pos, c, ctx)
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+        fn = lambda p, x, pos, c: blocks.hybrid_group_apply(
+            cfg, p, shared, x, pos, c, ctx)
+    else:
+        raise ValueError(cfg.family)
+    return fn
+
+
+def _remat(cfg: ModelConfig, fn):
+    if not cfg.remat or cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        # save matmul outputs, recompute only elementwise — trades a little
+        # memory for a big cut in backward recompute FLOPs
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _constrain(x: jax.Array, ctx: ModelCtx):
+    """Optional activation sharding constraint (batch over data axes) —
+    pins GSPMD's layer-boundary layout so it can't replicate the batch."""
+    if ctx.act_spec is None or ctx.mesh is None:
+        return x
+    from jax.sharding import NamedSharding
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, ctx.act_spec))
+
+
+def _run_stack(cfg: ModelConfig, params: dict, x: jax.Array,
+               positions: jax.Array, caches, ctx: ModelCtx):
+    """scan the stacked groups; caches may be None (training)."""
+    inner = _group_apply(cfg, params, ctx)
+    fn = _remat(cfg, lambda p, h, pos, c: inner(p, _constrain(h, ctx), pos, c))
+
+    if caches is None:
+        def body(carry, p_l):
+            h, aux = carry
+            h, _, aux_l = fn(p_l, h, positions, None)
+            return (h, aux + aux_l), None
+
+        (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+        return x, None, aux
+
+    def body(carry, xs):
+        h, aux = carry
+        p_l, c_l = xs
+        h, c_new, aux_l = fn(p_l, h, positions, c_l)
+        return (h, aux + aux_l), c_new
+
+    (x, aux), new_caches = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                    (params["layers"], caches))
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# encoder (encdec family)
+# ---------------------------------------------------------------------------
+
+def encode(cfg: ModelConfig, params: dict, enc_embeds: jax.Array,
+           ctx: ModelCtx = DEFAULT_CTX):
+    """enc_embeds: (B, S_enc, frontend_dim) from the stubbed modality frontend."""
+    params = compute_cast(cfg, params)
+    x = (enc_embeds.astype(jnp.dtype(cfg.dtype)) @ params["enc_in_proj"])
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    fn = lambda p, h: blocks.encoder_layer_apply(cfg, p, _constrain(h, ctx),
+                                                 positions)
+    fn = _remat(cfg, fn)
+
+    def body(h, p_l):
+        return fn(p_l, h), None
+
+    x, _ = lax.scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["enc_ln_f"]), positions
+
+
+def _enc_kv_all_layers(cfg: ModelConfig, params: dict, enc_out: jax.Array):
+    """Precompute per-decoder-layer cross K/V (stacked on the group axis)."""
+    return jax.vmap(lambda p: blocks.cross_kv(cfg, p["xattn"], enc_out)
+                    )(params["layers"])
+
+
+def _run_decoder_xattn(cfg: ModelConfig, params: dict, x, positions, caches,
+                       enc_kv, enc_pos, ctx: ModelCtx):
+    fn = lambda p, h, c, kv: blocks.decoder_xattn_layer_apply(
+        cfg, p, _constrain(h, ctx), positions, c, kv, enc_pos, ctx)
+    fn = _remat(cfg, fn)
+
+    if caches is None:
+        def body(carry, xs):
+            p_l, kv_l = xs
+            h, _, _ = fn(p_l, carry, None, kv_l)
+            return h, None
+        x, _ = lax.scan(body, x, (params["layers"], enc_kv))
+        return x, None
+
+    def body(carry, xs):
+        p_l, kv_l, c_l = xs
+        h, c_new, _ = fn(p_l, carry, c_l, kv_l)
+        return h, c_new
+
+    x, new_caches = lax.scan(body, x, (params["layers"], enc_kv, caches))
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def compute_cast(cfg: ModelConfig, params: dict) -> dict:
+    """Cast float params to the activation dtype (mixed-precision matmuls).
+
+    Master params stay in ``param_dtype`` (f32) inside the optimizer; the
+    forward pass consumes a ``cfg.dtype`` (bf16) copy so every matmul hits
+    the MXU at low precision. Norm/gate math upcasts internally.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    if dtype == jnp.dtype(cfg.param_dtype):
+        return params
+    return jax.tree.map(
+        lambda p: p.astype(dtype)
+        if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+
+
+def embed_tokens(cfg: ModelConfig, params: dict, tokens: jax.Array):
+    return params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict,
+            ctx: ModelCtx = DEFAULT_CTX):
+    """Full-sequence logits. batch keys per family:
+
+      dense/moe/xlstm/hybrid: tokens (B, S)
+      vlm:    tokens (B, S_text) + patches (B, P, frontend_dim)
+      encdec: tokens (B, S_dec) + enc_embeds (B, S_enc, frontend_dim)
+
+    Returns (logits (B, S*, V) float32, aux_loss scalar).
+    """
+    params = compute_cast(cfg, params)
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    x = embed_tokens(cfg, params, tokens)
+
+    if cfg.family == "vlm":
+        patches = (batch["patches"].astype(x.dtype) @ params["patch_proj"])
+        x = jnp.concatenate([patches, x], axis=1)
+
+    s = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    if cfg.family == "encdec":
+        enc_out, enc_pos = encode(cfg, params, batch["enc_embeds"], ctx)
+        enc_kv = _enc_kv_all_layers(cfg, params, enc_out)
+        x, _ = _run_decoder_xattn(cfg, params, x, positions, None, enc_kv,
+                                  enc_pos, ctx)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        x, _, aux = _run_stack(cfg, params, x, positions, None, ctx)
+
+    x = rms_norm(x, params["ln_f"])
+    logits = (x @ params["unembed"]).astype(jnp.float32)
+    return logits, aux
+
+
+def init_cache(cfg: ModelConfig, params: dict, batch: int, max_len: int):
+    """Decode state for the whole stack (leading axis = scanned groups)."""
+    dtype = jnp.dtype(cfg.dtype)
+    cache_len = max_len
+    if cfg.attention in ("sliding", "chunked_local") and cfg.family in (
+            "dense", "moe"):
+        # ring buffer: both SWA and chunked-local attend only to keys within
+        # the last `window` positions, so O(window) cache suffices for decode.
+        cache_len = min(max_len, cfg.window)
+    if cfg.family == "moe" and cfg.moe_every > 1:
+        return jax.vmap(
+            lambda _: blocks.moe_group_init_cache(cfg, batch, cache_len,
+                                                  dtype)
+        )(params["layers"]["moe"]["ln1"])
+    if cfg.family in ("dense", "moe", "vlm"):
+        return jax.vmap(
+            lambda _: blocks.init_kv_cache(cfg, batch, cache_len, dtype)
+        )(params["layers"]["ln1"])
+    if cfg.family == "xlstm":
+        return jax.vmap(lambda p: blocks.xlstm_init_cache(cfg, p, batch)
+                        )(params["layers"])
+    if cfg.family == "hybrid":
+        attn_len = min(max_len, cfg.window) if cfg.attention == "sliding" \
+            else max_len
+        return jax.vmap(
+            lambda p: blocks.hybrid_init_cache(cfg, p, batch, attn_len, dtype)
+        )(params["layers"])
+    if cfg.family == "encdec":
+        return jax.vmap(
+            lambda _: blocks.init_kv_cache(cfg, batch, cache_len, dtype)
+        )(params["layers"]["ln1"])
+    raise ValueError(cfg.family)
+
+
+def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                t: jax.Array, cache, *, enc_kv=None, enc_pos=None,
+                ctx: ModelCtx = DEFAULT_CTX):
+    """One decode step. tokens: (B, 1); t: scalar int32 position.
+
+    For encdec pass enc_kv/enc_pos from ``encode`` + ``_enc_kv_all_layers``.
+    Returns (logits (B, 1, V) f32, new_cache).
+    """
+    params = compute_cast(cfg, params)
+    b = tokens.shape[0]
+    x = embed_tokens(cfg, params, tokens)
+    positions = jnp.full((b, 1), t, dtype=jnp.int32)
+
+    if cfg.family == "encdec":
+        x, new_cache = _run_decoder_xattn(cfg, params, x, positions, cache,
+                                          enc_kv, enc_pos, ctx)
+    else:
+        x, new_cache, _ = _run_stack(cfg, params, x, positions, cache, ctx)
+
+    x = rms_norm(x, params["ln_f"])
+    logits = (x @ params["unembed"]).astype(jnp.float32)
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, cache,
+            ctx: ModelCtx = DEFAULT_CTX):
+    """Process a full prompt against a cache; returns (last_logits, cache)."""
+    params = compute_cast(cfg, params)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+    if cfg.family == "vlm":
+        patches = (batch["patches"].astype(x.dtype) @ params["patch_proj"])
+        x = jnp.concatenate([patches, x], axis=1)
+        s = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    if cfg.family == "encdec":
+        enc_out, enc_pos = encode(cfg, params, batch["enc_embeds"], ctx)
+        enc_kv = _enc_kv_all_layers(cfg, params, enc_out)
+        x, new_cache = _run_decoder_xattn(cfg, params, x, positions, cache,
+                                          enc_kv, enc_pos, ctx)
+    else:
+        x, new_cache, _ = _run_stack(cfg, params, x, positions, cache, ctx)
+    x = rms_norm(x[:, -1:], params["ln_f"])
+    logits = (x @ params["unembed"]).astype(jnp.float32)
+    return logits, new_cache
+
+
+def param_count(params) -> int:
+    return sum(p.size for p in jax.tree.leaves(params))

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import adamw, sgd_momentum  # noqa: F401
+from repro.optim.schedules import cosine_schedule, linear_warmup  # noqa: F401

@@ -1,0 +1,43 @@
+"""Dependency-free pytree checkpointing (npz, path-keyed).
+
+Leaves are stored under their ``jax.tree_util.keystr`` path, so restore is
+order-independent and validates structure against a reference pytree.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(path): leaf for path, leaf in leaves}
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Load a checkpoint into the structure (and dtypes) of ``like``."""
+    with np.load(path) as data:
+        stored = dict(data)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for key_path, leaf in leaves:
+        key = jax.tree_util.keystr(key_path)
+        if key not in stored:
+            raise KeyError(f"checkpoint {path} is missing leaf {key}")
+        arr = stored[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,155 @@
+"""Training and serving step functions for every architecture in the zoo.
+
+``make_train_step`` builds the canonical data-parallel step: forward (+MoE
+aux loss), backward, global-norm clip, AdamW. ``make_prefill_step`` /
+``make_decode_step`` build the serving steps the inference shapes lower.
+
+All steps are pure jittable functions of (state/params, batch) so the launch
+layer can wrap them in ``jax.jit`` with explicit in/out shardings — both for
+real execution and for the multi-pod dry-run (AOT ``.lower().compile()``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.models.blocks import DEFAULT_CTX, ModelCtx
+from repro.models.common import softmax_cross_entropy
+from repro.optim.optimizers import Optimizer, adamw, clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    lr: float = 3e-4
+    grad_clip: float = 1.0
+    aux_weight: float = 0.01     # MoE load-balance loss weight
+    weight_decay: float = 0.01
+    state_dtype: str = "float32"  # optimizer moment dtype
+    microbatches: int = 1        # gradient-accumulation chunks per step
+
+
+def init_train_state(cfg: ModelConfig, key: jax.Array,
+                     hp: TrainHParams = TrainHParams()) -> TrainState:
+    params = transformer.init_params(cfg, key)
+    opt = _optimizer(hp)
+    return TrainState(params=params, opt_state=opt.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def _optimizer(hp: TrainHParams) -> Optimizer:
+    return adamw(weight_decay=hp.weight_decay,
+                 state_dtype=jnp.dtype(hp.state_dtype))
+
+
+def loss_fn(cfg: ModelConfig, params: Any, batch: dict, ctx: ModelCtx,
+            aux_weight: float):
+    """Next-token cross entropy (text positions only) + MoE aux loss."""
+    logits, aux = transformer.forward(cfg, params, batch, ctx)
+    tokens = batch["tokens"]
+    # VLM prepends patch positions: score only the text suffix.
+    logits = logits[:, -tokens.shape[1]:]
+    labels = batch.get("labels")
+    if labels is None:
+        labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+    mask = jnp.ones(labels.shape, dtype=jnp.float32).at[:, -1].set(0.0) \
+        if "labels" not in batch else None
+    ce = softmax_cross_entropy(logits, labels, mask)
+    return ce + aux_weight * aux, (ce, aux)
+
+
+def make_train_step(cfg: ModelConfig, hp: TrainHParams = TrainHParams(),
+                    ctx: ModelCtx = DEFAULT_CTX) -> Callable:
+    """(state, batch) -> (state, metrics) — the canonical all-reduce DP step."""
+    opt = _optimizer(hp)
+
+    def train_step(state: TrainState, batch: dict):
+        grad_fn = jax.value_and_grad(
+            partial(loss_fn, cfg), has_aux=True)
+        if hp.microbatches > 1:
+            # gradient accumulation: scan over microbatch chunks so peak
+            # activation memory scales with B / microbatches
+            m = hp.microbatches
+            micro = jax.tree.map(
+                lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]),
+                batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc, ce_acc, aux_acc = carry
+                (l, (ce, aux)), g = grad_fn(state.params, mb, ctx,
+                                            hp.aux_weight)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l, ce_acc + ce, aux_acc + aux), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss, ce, aux), _ = jax.lax.scan(
+                acc_body, (zeros, 0.0, 0.0, 0.0), micro)
+            grads = jax.tree.map(lambda g: (g / m), grads)
+            loss, ce, aux = loss / m, ce / m, aux / m
+        else:
+            (loss, (ce, aux)), grads = grad_fn(state.params, batch, ctx,
+                                               hp.aux_weight)
+        grads, gnorm = clip_by_global_norm(grads, hp.grad_clip)
+        params, opt_state = opt.update(grads, state.opt_state, state.params,
+                                       state.step, hp.lr)
+        metrics = {"loss": loss, "ce": ce, "aux": aux, "grad_norm": gnorm}
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig,
+                      ctx: ModelCtx = DEFAULT_CTX) -> Callable:
+    """(params, batch, cache) -> (last_logits, cache)."""
+    def prefill_step(params, batch, cache):
+        return transformer.prefill(cfg, params, batch, cache, ctx)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig,
+                     ctx: ModelCtx = DEFAULT_CTX) -> Callable:
+    """(params, tokens (B,1), t, cache[, enc_kv, enc_pos]) -> (logits, cache).
+
+    This is the step the decode_32k / long_500k shapes lower: ONE new token
+    against a cache of seq_len (ring-buffered to the window for SWA/chunked
+    variants, O(1) recurrent state for SSM/hybrid).
+    """
+    def decode_step(params, tokens, t, cache, **kw):
+        return transformer.decode_step(cfg, params, tokens, t, cache,
+                                       ctx=ctx, **kw)
+    return decode_step
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt: jax.Array,
+                    num_steps: int, max_len: int,
+                    ctx: ModelCtx = DEFAULT_CTX):
+    """Host-side reference generation loop (examples/tests)."""
+    b, s = prompt.shape
+    cache = transformer.init_cache(cfg, params, b, max_len)
+    kw = {}
+    logits, cache = transformer.prefill(cfg, params, {"tokens": prompt},
+                                        cache, ctx)
+    out = [jnp.argmax(logits[:, -1], axis=-1)]
+    for i in range(num_steps - 1):
+        tok = out[-1][:, None]
+        logits, cache = transformer.decode_step(
+            cfg, params, tok, jnp.asarray(s + i, jnp.int32), cache, ctx=ctx,
+            **kw)
+        out.append(jnp.argmax(logits[:, -1], axis=-1))
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,18 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here on purpose — tests must see the
+single real CPU device; only the dry-run forces 512 placeholder devices
+(and the shard_map equivalence tests spawn their own subprocess)."""
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _no_nan_debug():
+    yield

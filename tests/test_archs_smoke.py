@@ -1,0 +1,111 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch, reduced
+same-family variant, one forward + one train step on CPU; output shapes and
+finiteness asserted. Decode consistency against the full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCHS, get_config, smoke_variant
+from repro.models import transformer
+from repro.models.blocks import ModelCtx
+from repro.models.model import build_model
+from repro.train.steps import TrainHParams, init_train_state, make_train_step
+
+
+def _batch(cfg, key, b=2, s=16):
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            key, (b, cfg.num_prefix_tokens, cfg.frontend_dim))
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jax.random.normal(key, (b, 12, cfg.frontend_dim))
+    return batch
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def arch_setup(request):
+    cfg = smoke_variant(get_config(request.param))
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return request.param, cfg, api, params
+
+
+def test_forward_shapes_and_finite(arch_setup):
+    arch, cfg, api, params = arch_setup
+    b, s = 2, 16
+    batch = _batch(cfg, jax.random.PRNGKey(1), b, s)
+    logits, aux = api.forward(params, batch)
+    extra = cfg.num_prefix_tokens if cfg.family == "vlm" else 0
+    assert logits.shape == (b, s + extra, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+    assert bool(jnp.isfinite(aux))
+
+
+def test_one_train_step_no_nans(arch_setup):
+    arch, cfg, api, params = arch_setup
+    hp = TrainHParams(lr=1e-3)
+    state = init_train_state(cfg, jax.random.PRNGKey(2), hp)
+    step = make_train_step(cfg, hp)
+    batch = _batch(cfg, jax.random.PRNGKey(3))
+    batch["labels"] = jnp.roll(batch["tokens"], -1, axis=1)
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert np.isfinite(float(metrics["grad_norm"]))
+    for leaf in jax.tree.leaves(state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf))), arch
+
+
+def test_decode_matches_forward(arch_setup):
+    arch, cfg, api, params = arch_setup
+    ctx = ModelCtx(moe_mode="dense")  # exact MoE (no capacity dropping)
+    if cfg.num_experts:
+        # route to ALL experts: top-k selection among near-tied router probs
+        # is shape-dependent at the last ulp, but the all-experts weighted
+        # combine is selection-order invariant -> decode comparison is exact.
+        import dataclasses
+        cfg = dataclasses.replace(cfg, experts_per_token=cfg.num_experts)
+        from repro.models.model import build_model as _bm
+        api = _bm(cfg)
+    b, s = 2, 10
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (b, s), 0,
+                                cfg.vocab_size)
+    batch = _batch(cfg, jax.random.PRNGKey(4), b, s)
+    batch["tokens"] = tokens
+    full, _ = api.forward(params, batch, ctx)
+    cache = api.init_cache(params, b,
+                           s + 4 + (cfg.num_prefix_tokens
+                                    if cfg.family == "vlm" else 0))
+    kw = {}
+    pre = dict(batch)
+    pre["tokens"] = tokens[:, :-1]
+    if cfg.family == "encdec":
+        enc_out, enc_pos = api.encode(params, batch["enc_embeds"])
+        kw = {"enc_kv": transformer._enc_kv_all_layers(cfg, params, enc_out),
+              "enc_pos": enc_pos}
+    _, cache = api.prefill(params, pre, cache, ctx)
+    pos = s - 1 + (cfg.num_prefix_tokens if cfg.family == "vlm" else 0)
+    dec, _ = api.decode_step(params, tokens[:, -1:],
+                             jnp.asarray(pos, jnp.int32), cache, **kw)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(full[:, -1]), atol=2e-4,
+                               err_msg=arch)
+
+
+def test_param_counts_match_full_config_order():
+    """Full configs instantiate abstractly with plausible parameter counts."""
+    import re
+    from repro.launch.specs import params_specs, param_bytes
+    expect = {  # rough total params in billions (wide tolerance)
+        "qwen3_4b": (3, 6), "stablelm_12b": (9, 15), "xlstm_125m": (0.1, 0.3),
+        "h2o_danube3_4b": (3, 6), "llama4_maverick_400b": (350, 480),
+        "dbrx_132b": (110, 160), "mistral_large_123b": (100, 140),
+        "seamless_m4t_medium": (0.5, 2.0), "internvl2_26b": (19, 30),
+        # assignment spec (81L, d=3584, expand=2) gives ~4.6B; the marketed
+        # 7B includes dual shared blocks + LoRA adapters we don't replicate
+        "zamba2_7b": (4, 10),
+    }
+    for arch, (lo, hi) in expect.items():
+        cfg = get_config(arch)
+        n = sum(l.size for l in jax.tree.leaves(params_specs(cfg)))
+        assert lo * 1e9 <= n <= hi * 1e9, (arch, n / 1e9)

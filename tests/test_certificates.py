@@ -1,0 +1,88 @@
+"""Prop. 1 local certificates: soundness (certified => gap <= eps)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import problems, topology as topo
+from repro.core.cola import ColaConfig, build_env, init_state, make_round
+from repro.core.duality import (block_spectral_norms, gap_report,
+                                local_certificates)
+from repro.core.partition import make_partition
+from repro.data import synthetic
+
+
+@pytest.fixture(scope="module")
+def setup():
+    x, y, _ = synthetic.regression(150, 48, seed=2, sparsity_solution=0.2)
+    prob = problems.lasso(jnp.asarray(x), jnp.asarray(y), 5e-2, box=5.0)
+    k = 8
+    graph = topo.connected_cycle(k, 2)
+    part = make_partition(prob.n, k)
+    env = build_env(prob, part)
+    w = topo.metropolis_weights(graph)
+    return prob, graph, part, env, w
+
+
+def _run(prob, part, env, w, rounds, kappa=4.0):
+    state = init_state(prob, part)
+    rnd = make_round(prob, part, ColaConfig(kappa=kappa))
+    wj = jnp.asarray(w, jnp.float32)
+    act = jnp.ones((part.num_nodes,), jnp.float32)
+    for _ in range(rounds):
+        state = rnd(state, env, wj, act)
+    return state
+
+
+def test_certificate_soundness(setup):
+    """Whenever both local conditions hold for every node, the TRUE
+    decentralized duality gap is <= eps (Prop. 1 statement)."""
+    prob, graph, part, env, w = setup
+    sigma_k = block_spectral_norms(env.a_parts)
+    beta_ub = topo.beta(w)
+    for rounds in (5, 40, 200, 600):
+        state = _run(prob, part, env, w, rounds)
+        rep = gap_report(prob, part, state.x_parts, state.v_stack)
+        for eps in (1e-1, 1e0, 1e1, 1e2):
+            cert = local_certificates(
+                prob, part, state.x_parts, state.v_stack, env.a_parts,
+                env.gp_parts, env.masks, graph.adjacency, beta_ub, sigma_k,
+                eps, prob.l_bound)
+            if bool(cert.certified):
+                assert float(rep.gap) <= eps + 1e-6, (rounds, eps)
+
+
+def test_certificate_eventually_fires(setup):
+    """After enough rounds the certificate certifies a moderate eps."""
+    prob, graph, part, env, w = setup
+    sigma_k = block_spectral_norms(env.a_parts)
+    beta_ub = topo.beta(w)
+    state = _run(prob, part, env, w, 1200, kappa=8.0)
+    rep = gap_report(prob, part, state.x_parts, state.v_stack)
+    eps = max(10.0 * float(rep.gap), 1e-3)
+    cert = local_certificates(
+        prob, part, state.x_parts, state.v_stack, env.a_parts, env.gp_parts,
+        env.masks, graph.adjacency, beta_ub, sigma_k, eps, prob.l_bound)
+    # condition (9) needs the *local* gaps small; with enough optimization it
+    # must fire for an eps an order of magnitude above the true gap
+    assert bool(cert.certified), (float(rep.gap), eps,
+                                  np.asarray(cert.local_gap),
+                                  np.asarray(cert.grad_disagreement))
+
+
+def test_certificate_upper_bound_monotone_in_eps(setup):
+    """Certifying eps implies certifying any eps' >= eps."""
+    prob, graph, part, env, w = setup
+    sigma_k = block_spectral_norms(env.a_parts)
+    beta_ub = topo.beta(w)
+    state = _run(prob, part, env, w, 300)
+    fired = []
+    for eps in (1e-2, 1e-1, 1e0, 1e1, 1e2, 1e3):
+        cert = local_certificates(
+            prob, part, state.x_parts, state.v_stack, env.a_parts,
+            env.gp_parts, env.masks, graph.adjacency, beta_ub, sigma_k, eps,
+            prob.l_bound)
+        fired.append(bool(cert.certified))
+    # once true, stays true for larger eps
+    first = fired.index(True) if True in fired else len(fired)
+    assert all(fired[first:])

@@ -1,0 +1,143 @@
+"""Convergence behaviour of Algorithm 1 (Theorems 1-2, Lemma 1-2, Fig. 1/3)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import problems, topology as topo
+from repro.core.cola import ColaConfig, cocoa_mixing, run_cola, solve_reference
+from repro.data import synthetic
+
+
+@pytest.fixture(scope="module")
+def ridge():
+    x, y, _ = synthetic.regression(200, 64, seed=0)
+    return problems.ridge_primal(jnp.asarray(x), jnp.asarray(y), 1e-2)
+
+
+@pytest.fixture(scope="module")
+def lasso_prob():
+    x, y, _ = synthetic.regression(200, 64, seed=1, sparsity_solution=0.2)
+    return problems.lasso(jnp.asarray(x), jnp.asarray(y), 1e-2)
+
+
+@pytest.fixture(scope="module")
+def ridge_opt(ridge):
+    return solve_reference(ridge, rounds=1500, kappa=10)
+
+
+def test_linear_rate_strongly_convex(ridge, ridge_opt):
+    """Thm 1: log-suboptimality decreases ~linearly in rounds for ridge."""
+    res = run_cola(ridge, topo.ring(8), ColaConfig(kappa=2.0), rounds=120,
+                   record_every=20)
+    sub = np.array(res.history["primal"]) - ridge_opt + 1e-12
+    assert (sub > -1e-6).all()
+    logs = np.log(np.maximum(sub, 1e-12))
+    # halves of the log-curve drop by comparable amounts (linear rate)
+    drop_a = logs[0] - logs[len(logs) // 2]
+    drop_b = logs[len(logs) // 2] - logs[-1]
+    assert drop_a > 0.5 and drop_b > 0.25
+
+
+def test_sublinear_general_convex(lasso_prob):
+    """Thm 2: lasso duality gap decreases monotonically-ish and is positive."""
+    res = run_cola(lasso_prob, topo.ring(8), ColaConfig(kappa=2.0),
+                   rounds=150, record_every=25)
+    gaps = np.array(res.history["gap"])
+    assert gaps[-1] < gaps[0] * 0.05
+    assert (gaps > -1e-5).all()
+
+
+def test_duality_gap_upper_bounds_suboptimality(ridge, ridge_opt):
+    res = run_cola(ridge, topo.ring(8), ColaConfig(kappa=1.0), rounds=60,
+                   record_every=10)
+    for prim, gap in zip(res.history["primal"], res.history["gap"]):
+        assert gap >= prim - ridge_opt - 1e-4
+
+
+def test_lemma1_mean_invariant_and_sandwich(ridge):
+    """Lemma 1: (1/K) sum v_k = A x exactly; F_A <= H_A."""
+    from repro.core.cola import build_env, init_state, make_round
+    from repro.core.duality import gap_report
+    from repro.core.partition import make_partition
+
+    k = 8
+    part = make_partition(ridge.n, k)
+    env = build_env(ridge, part)
+    state = init_state(ridge, part)
+    rnd = make_round(ridge, part, ColaConfig(kappa=1.0))
+    w = jnp.asarray(topo.metropolis_weights(topo.ring(k)), jnp.float32)
+    act = jnp.ones((k,), jnp.float32)
+    for _ in range(5):
+        state = rnd(state, env, w, act)
+    x = part.merge_vector(state.x_parts)
+    np.testing.assert_allclose(np.asarray(jnp.mean(state.v_stack, axis=0)),
+                               np.asarray(ridge.a @ x), rtol=2e-4, atol=2e-5)
+    rep = gap_report(ridge, part, state.x_parts, state.v_stack)
+    assert float(rep.primal) <= float(rep.hamiltonian) + 1e-5
+
+
+def test_cocoa_special_case_keeps_consensus(ridge):
+    """W = (1/K)11^T: the post-mix estimate v_k^(t+1/2) every node solves its
+    subproblem against is the exact consensus v_c = Ax (CoCoA recovered)."""
+    res = run_cola(ridge, topo.complete(8), ColaConfig(kappa=1.0), rounds=10,
+                   w_override=cocoa_mixing(8))
+    from repro.core.mixing import dense_mix
+    from repro.core.partition import make_partition
+    w = jnp.asarray(cocoa_mixing(8), jnp.float32)
+    v_half = np.asarray(dense_mix(w, res.state.v_stack))
+    np.testing.assert_allclose(v_half, np.broadcast_to(v_half[:1],
+                                                       v_half.shape),
+                               atol=1e-4)
+    part = make_partition(ridge.n, 8)
+    x = part.merge_vector(res.state.x_parts)
+    np.testing.assert_allclose(v_half[0], np.asarray(ridge.a @ x), atol=1e-3)
+
+
+def test_topology_ordering(ridge, ridge_opt):
+    """Fig. 3: smaller beta converges faster (complete < ring suboptimality)."""
+    rounds = 60
+    sub = {}
+    for name, g in [("ring", topo.ring(16)), ("complete", topo.complete(16))]:
+        res = run_cola(ridge, g, ColaConfig(kappa=1.0), rounds=rounds,
+                       record_every=rounds - 1)
+        sub[name] = res.history["primal"][-1] - ridge_opt
+    assert sub["complete"] <= sub["ring"] + 1e-6
+
+
+def test_kappa_tradeoff(ridge, ridge_opt):
+    """Fig. 1a: more local work per round => fewer rounds to a target."""
+    rounds = 40
+    subs = []
+    for kappa in (0.25, 1.0, 8.0):
+        res = run_cola(ridge, topo.ring(8), ColaConfig(kappa=kappa),
+                       rounds=rounds, record_every=rounds - 1)
+        subs.append(res.history["primal"][-1] - ridge_opt)
+    # monotone non-increasing in kappa (saturates once the local subproblem
+    # is solved ~exactly and the network term dominates — Fig. 1a plateau)
+    tol = 1e-3 * max(abs(subs[0]), 1.0)
+    assert subs[2] <= subs[1] + tol <= subs[0] + 2 * tol
+
+
+def test_consensus_violation_vanishes(ridge):
+    res = run_cola(ridge, topo.ring(8), ColaConfig(kappa=2.0), rounds=150,
+                   record_every=30)
+    cv = res.history["consensus_violation"]
+    assert cv[-1] < cv[1] * 0.05
+
+
+def test_gossip_steps_b_greater_one(ridge, ridge_opt):
+    """App. E.2: B=3 gossip steps per round converges at least as fast."""
+    r1 = run_cola(ridge, topo.ring(16), ColaConfig(kappa=1.0, gossip_steps=1),
+                  rounds=50, record_every=49)
+    r3 = run_cola(ridge, topo.ring(16), ColaConfig(kappa=1.0, gossip_steps=3),
+                  rounds=50, record_every=49)
+    assert (r3.history["primal"][-1] - ridge_opt
+            <= r1.history["primal"][-1] - ridge_opt + 1e-6)
+
+
+def test_hessian_subproblem_variant(ridge, ridge_opt):
+    """App. E.1 mixed-gradient subproblem still converges."""
+    res = run_cola(ridge, topo.ring(8),
+                   ColaConfig(kappa=2.0, grad_mode="mixed"), rounds=80,
+                   record_every=79)
+    assert res.history["primal"][-1] - ridge_opt < 0.5

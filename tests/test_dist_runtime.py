@@ -1,0 +1,48 @@
+"""shard_map CoLA runtime == single-host simulator, bit-for-bit per round.
+
+Runs in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8
+so the main test process keeps the single real CPU device (per the dry-run
+isolation rule)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.data import synthetic
+    from repro.core import problems, topology as topo
+    from repro.core.cola import ColaConfig, run_cola
+    from repro.dist.runtime import run_dist_cola
+
+    x, y, w = synthetic.regression(160, 64, seed=0)
+    mesh = jax.make_mesh((8,), ("data",))
+    graph = topo.ring(8)
+    for pname, lam in (("ridge_primal", 1e-2), ("lasso", 1e-3)):
+        prob = problems.PROBLEMS[pname](jnp.asarray(x), jnp.asarray(y), lam)
+        for cfg in (ColaConfig(kappa=1.0), ColaConfig(kappa=0.5, gossip_steps=2)):
+            sim = run_cola(prob, graph, cfg, rounds=8)
+            for comm in ("dense", "ring"):
+                st, hist = run_dist_cola(prob, graph, cfg, mesh, rounds=8,
+                                         comm=comm)
+                assert np.allclose(hist["primal"][-1],
+                                   sim.history["primal"][-1], rtol=1e-5), (
+                    pname, comm, hist["primal"][-1], sim.history["primal"][-1])
+                assert np.allclose(hist["gap"][-1], sim.history["gap"][-1],
+                                   rtol=1e-4, atol=1e-5)
+    print("DIST_OK")
+""")
+
+
+@pytest.mark.slow
+def test_shardmap_runtime_matches_simulator():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert "DIST_OK" in out.stdout, out.stdout + "\n" + out.stderr

@@ -1,0 +1,111 @@
+"""Gossip data-parallel optimizer (the paper's communication pattern applied
+to deep-net training) — semantics + elasticity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, smoke_variant
+from repro.core import topology as topo
+from repro.optim import gossip as gsp
+from repro.train.data import TokenBatches
+from repro.train.steps import TrainHParams, init_train_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_variant(get_config("xlstm_125m"))
+    hp = TrainHParams(lr=1e-3)
+    state0 = init_train_state(cfg, jax.random.PRNGKey(0), hp)
+    local = make_train_step(cfg, hp)
+    pipe = TokenBatches(cfg.vocab_size, 2, 16, corpus_tokens=1 << 12)
+    return cfg, hp, state0, local, pipe
+
+
+def _stack_batches(pipe, step, k):
+    return jax.tree.map(jnp.asarray,
+                        jax.tree.map(lambda *xs: np.stack(xs),
+                                     *[pipe(step, shard=j) for j in range(k)]))
+
+
+def test_mixing_preserves_parameter_mean(setup):
+    """W doubly stochastic => the node-average of every leaf is invariant."""
+    cfg, hp, state0, local, pipe = setup
+    k = 4
+    gcfg = gsp.GossipConfig(num_nodes=k)
+    states = gsp.replicate_state(state0, k)
+    step = gsp.make_gossip_step(local, gcfg)
+    w = jnp.asarray(gcfg.weights(), jnp.float32)
+    act = jnp.ones((k,), jnp.float32)
+    states, _ = step(states, _stack_batches(pipe, 0, k), w, act)
+    before = gsp.average_params(states.params)
+    mixed = gsp.mix_pytree(w, states.params)
+    after = gsp.average_params(mixed)
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)
+
+
+def test_complete_graph_one_mix_reaches_consensus(setup):
+    cfg, hp, state0, local, pipe = setup
+    k = 4
+    gcfg = gsp.GossipConfig(num_nodes=k, topology="complete")
+    states = gsp.replicate_state(state0, k)
+    step = gsp.make_gossip_step(local, gcfg)
+    w = jnp.full((k, k), 1.0 / k, jnp.float32)  # CoCoA-style full averaging
+    act = jnp.ones((k,), jnp.float32)
+    states, _ = step(states, _stack_batches(pipe, 1, k), w, act)
+    assert float(gsp.consensus_distance(states.params)) < 1e-8
+
+
+def test_consensus_distance_decreases_over_rounds(setup):
+    cfg, hp, state0, local, pipe = setup
+    k = 4
+    gcfg = gsp.GossipConfig(num_nodes=k, topology="ring")
+    states = gsp.replicate_state(state0, k)
+    step = gsp.make_gossip_step(local, gcfg)
+    w = jnp.asarray(gcfg.weights(), jnp.float32)
+    act = jnp.ones((k,), jnp.float32)
+    dists, losses = [], []
+    for i in range(12):
+        states, metrics = step(states, _stack_batches(pipe, i, k), w, act)
+        dists.append(float(gsp.consensus_distance(states.params)))
+        losses.append(float(jnp.mean(metrics["loss"])))
+    # gossip keeps replicas within a bounded neighborhood (no divergence)
+    assert dists[-1] < 10 * (min(dists) + 1e-12) + 1e-6
+    assert losses[-1] < losses[0]  # and training still makes progress
+
+
+def test_frozen_nodes_keep_state(setup):
+    """Theta_k = 1 elasticity: an inactive node's state is not updated by the
+    local step (its params still move by mixing — by design)."""
+    cfg, hp, state0, local, pipe = setup
+    k = 4
+    gcfg = gsp.GossipConfig(num_nodes=k, gossip_steps=0)  # isolate local step
+    states = gsp.replicate_state(state0, k)
+    step = gsp.make_gossip_step(local, gcfg)
+    w = jnp.eye(k, dtype=jnp.float32)
+    act = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    new_states, _ = step(states, _stack_batches(pipe, 2, k), w, act)
+    p_old = jax.tree.leaves(states.params)
+    p_new = jax.tree.leaves(new_states.params)
+    for a, b in zip(p_old, p_new):
+        np.testing.assert_allclose(np.asarray(a[1]), np.asarray(b[1]))
+        np.testing.assert_allclose(np.asarray(a[3]), np.asarray(b[3]))
+        assert not np.allclose(np.asarray(a[0]), np.asarray(b[0]))
+
+
+def test_gossip_b_steps_contracts_faster(setup):
+    cfg, hp, state0, local, pipe = setup
+    k = 8
+    w = jnp.asarray(topo.metropolis_weights(topo.ring(k)), jnp.float32)
+    # perturb replicas, then measure contraction of consensus distance
+    states = gsp.replicate_state(state0, k)
+    noise = jax.tree.map(
+        lambda p: p + 0.01 * jax.random.normal(
+            jax.random.PRNGKey(5), p.shape, jnp.float32).astype(p.dtype),
+        states.params)
+    d0 = float(gsp.consensus_distance(noise))
+    d1 = float(gsp.consensus_distance(gsp.mix_pytree(w, noise, steps=1)))
+    d3 = float(gsp.consensus_distance(gsp.mix_pytree(w, noise, steps=3)))
+    assert d3 < d1 < d0

@@ -1,0 +1,96 @@
+"""Heterogeneous per-node solver quality Theta_k (Definition 5) and the
+spectral contraction of gossip mixing."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mixing, problems, topology as topo
+from repro.core.cola import ColaConfig, run_cola, solve_reference
+from repro.core.partition import make_partition
+from repro.core.cola import build_env
+from repro.core.subproblem import SubproblemSpec, cd_solve_all
+from repro.data import synthetic
+
+
+@pytest.fixture(scope="module")
+def ridge():
+    x, y, _ = synthetic.regression(200, 64, seed=0)
+    return problems.ridge_primal(jnp.asarray(x), jnp.asarray(y), 1e-2)
+
+
+@pytest.fixture(scope="module")
+def opt(ridge):
+    return solve_reference(ridge, rounds=800, kappa=10)
+
+
+def test_budget_zero_equals_no_update(ridge):
+    """Theta_k = 1 (budget 0) must leave dx = 0 for that node."""
+    k = 4
+    part = make_partition(ridge.n, k)
+    env = build_env(ridge, part)
+    import jax
+    grads = jax.vmap(ridge.grad_f)(
+        0.1 * jax.random.normal(jax.random.PRNGKey(0), (k, ridge.d)))
+    spec = SubproblemSpec(sigma_over_tau=k / ridge.tau, inv_k=1.0 / k)
+    budgets = jnp.asarray([part.block, 0, part.block, 0], jnp.int32)
+    dx = cd_solve_all(ridge, spec, env.a_parts,
+                      jnp.zeros((k, part.block)), grads, env.gp_parts,
+                      env.masks, part.block, step_budgets=budgets)
+    assert float(jnp.abs(dx[1]).max()) == 0.0
+    assert float(jnp.abs(dx[3]).max()) == 0.0
+    assert float(jnp.abs(dx[0]).max()) > 0.0
+
+
+def test_full_budget_matches_homogeneous(ridge):
+    """step_budgets = num_steps reproduces the budget-free path exactly."""
+    k = 4
+    part = make_partition(ridge.n, k)
+    env = build_env(ridge, part)
+    import jax
+    grads = jax.vmap(ridge.grad_f)(
+        0.1 * jax.random.normal(jax.random.PRNGKey(1), (k, ridge.d)))
+    spec = SubproblemSpec(sigma_over_tau=k / ridge.tau, inv_k=1.0 / k)
+    steps = 2 * part.block
+    a = cd_solve_all(ridge, spec, env.a_parts, jnp.zeros((k, part.block)),
+                     grads, env.gp_parts, env.masks, steps)
+    b = cd_solve_all(ridge, spec, env.a_parts, jnp.zeros((k, part.block)),
+                     grads, env.gp_parts, env.masks, steps,
+                     step_budgets=jnp.full((k,), steps, jnp.int32))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_stragglers_converge_but_slower(ridge, opt):
+    """Half the nodes on 1/4 budget: still converges, a bit slower."""
+    full = 2 * 8
+
+    def budgets(t, rng):
+        b = np.full(8, full)
+        b[rng.random(8) < 0.5] = full // 4
+        return b
+
+    het = run_cola(ridge, topo.ring(8), ColaConfig(kappa=2.0), rounds=120,
+                   record_every=119, budget_schedule=budgets)
+    hom = run_cola(ridge, topo.ring(8), ColaConfig(kappa=2.0), rounds=120,
+                   record_every=119)
+    sub_het = het.history["primal"][-1] - opt
+    sub_hom = hom.history["primal"][-1] - opt
+    assert sub_het < 0.05          # converged
+    assert sub_het >= sub_hom - 1e-6  # but no faster than homogeneous
+
+
+def test_gossip_contraction_matches_beta():
+    """||W v - v_bar|| <= beta ||v - v_bar|| with equality direction possible
+    (the spectral quantity the Thm 1/2 rates depend on)."""
+    for builder in (topo.ring, lambda k: topo.connected_cycle(k, 2),
+                    topo.complete):
+        k = 12
+        w = topo.metropolis_weights(builder(k))
+        beta = topo.beta(w)
+        rng = np.random.default_rng(0)
+        v = rng.normal(size=(k, 33)).astype(np.float32)
+        vbar = v.mean(axis=0, keepdims=True)
+        before = np.linalg.norm(v - vbar)
+        after = np.linalg.norm(
+            np.asarray(mixing.dense_mix(jnp.asarray(w), jnp.asarray(v)))
+            - vbar)
+        assert after <= beta * before + 1e-4

@@ -1,0 +1,86 @@
+"""Trip-count-aware HLO analyzer vs hand-computed costs."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax import lax
+
+from repro.launch.hlo_analysis import analyze
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+@pytest.mark.parametrize("length", [2, 8, 32])
+def test_scan_matmul_flops_scale_with_trip_count(length):
+    def f(x, w):
+        def body(c, wl):
+            return jnp.tanh(c @ wl), None
+        y, _ = lax.scan(body, x, w)
+        return y.sum()
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((length, 128, 128), jnp.float32)
+    r = analyze(_compile_text(f, x, w))
+    expect = length * 2 * 128 ** 3
+    assert 0.95 * expect <= r["flops"] <= 1.1 * expect
+
+
+def test_nested_scan_multiplicity():
+    def g(x, w):
+        def outer(c, wl):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ wl), None
+            c2, _ = lax.scan(inner, c, None, length=4)
+            return c2, None
+        y, _ = lax.scan(outer, x, w)
+        return y.sum()
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+    r = analyze(_compile_text(g, x, w))
+    expect = 8 * 4 * 2 * 128 ** 3
+    assert 0.95 * expect <= r["flops"] <= 1.1 * expect
+
+
+def test_fori_loop_trip_count():
+    def f(x):
+        return lax.fori_loop(0, 11, lambda i, c: jnp.tanh(c @ c), x)
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    r = analyze(_compile_text(f, x))
+    expect = 11 * 2 * 64 ** 3
+    assert 0.9 * expect <= r["flops"] <= 1.2 * expect
+
+
+def test_dot_general_contraction_dims():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+
+    a = jax.ShapeDtypeStruct((4, 32, 48), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 48, 16), jnp.float32)
+    r = analyze(_compile_text(f, a, b))
+    expect = 2 * 4 * 32 * 16 * 48
+    assert 0.95 * expect <= r["flops"] <= 1.3 * expect
+
+
+def test_traffic_counts_dot_operands_not_sliced_stacks():
+    """The scan weight fetch reads one layer per trip, not the whole stack."""
+    L, D = 16, 256
+
+    def f(x, w):
+        def body(c, wl):
+            return c @ wl, None
+        y, _ = lax.scan(body, x, w)
+        return y.sum()
+
+    x = jax.ShapeDtypeStruct((D, D), jnp.float32)
+    w = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    r = analyze(_compile_text(f, x, w))
+    # per trip: read w_l + read c + write out  (+ slice traffic) ~ 4 * D*D*4B
+    per_trip = 4 * D * D * 4
+    stack_bytes = L * D * D * 4
+    # stack-read-per-trip would be >= L * stack_bytes (67 MB here); the
+    # aliasing-aware model stays well under that while seeing real traffic
+    assert r["bytes"] < L * stack_bytes * 0.7
+    assert r["bytes"] >= L * per_trip * 0.5

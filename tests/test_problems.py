@@ -1,0 +1,100 @@
+"""GLM problem definitions: Fenchel duality + prox properties (Lemma 2/3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import problems
+from repro.data import synthetic
+
+
+def _mk(name, seed=0, lam=1e-2):
+    x, y, _ = synthetic.regression(40, 16, seed=seed)
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+    if name.startswith("logistic"):
+        yj = jnp.sign(yj) + (jnp.sign(yj) == 0)
+    return problems.PROBLEMS[name](xj, yj, lam)
+
+
+ALL = sorted(problems.PROBLEMS)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_fenchel_young_inequality_and_equality(name):
+    """f(v) + f*(w) >= <v, w>, equality at w = grad f(v)."""
+    prob = _mk(name)
+    key = jax.random.PRNGKey(0)
+    v = jax.random.normal(key, (prob.d,))
+    w_opt = prob.grad_f(v)
+    lhs = prob.f(v) + prob.f_conj(w_opt)
+    rhs = jnp.dot(v, w_opt)
+    np.testing.assert_allclose(float(lhs), float(rhs), rtol=2e-4, atol=2e-4)
+    # inequality for a perturbed w (scaled, so it stays in dom f* for the
+    # logistic conjugate whose domain is u = -w.y in [0, 1])
+    w = w_opt * 0.7
+    assert float(prob.f(v) + prob.f_conj(w)) >= float(jnp.dot(v, w)) - 1e-4
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_smoothness_constant(name):
+    """grad f is (1/tau)-Lipschitz along random directions."""
+    prob = _mk(name)
+    key = jax.random.PRNGKey(1)
+    v1 = jax.random.normal(key, (prob.d,))
+    v2 = v1 + 0.1 * jax.random.normal(jax.random.PRNGKey(2), (prob.d,))
+    lhs = float(jnp.linalg.norm(prob.grad_f(v1) - prob.grad_f(v2)))
+    rhs = float(jnp.linalg.norm(v1 - v2)) / prob.tau
+    assert lhs <= rhs * (1 + 1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(name=st.sampled_from(ALL), z=st.floats(-5, 5), step=st.floats(0.05, 5),
+       p=st.floats(-2, 2))
+def test_prox_is_argmin(name, z, step, p):
+    """prox_{g_i, step}(z) minimizes 0.5/step (u - z)^2 + g_i(u) on a grid."""
+    prob = _mk(name)
+    zj, stepj, pj = map(jnp.float32, (z, step, p))
+    if prob.g_param is None:
+        pj = jnp.float32(0.0)
+    u_star = prob.prox_g_el(zj, stepj, pj)
+    obj = lambda u: 0.5 / stepj * (u - zj) ** 2 + prob.g_el(u, pj)
+    grid = jnp.linspace(-12.0, 12.0, 4001)
+    vals = jax.vmap(obj)(grid)
+    best = jnp.nanmin(jnp.where(jnp.isfinite(vals), vals, jnp.nan))
+    assert float(obj(u_star)) <= float(best) + 1e-3
+
+
+@settings(max_examples=30, deadline=None)
+@given(name=st.sampled_from(ALL), u=st.floats(-3, 3), x=st.floats(-3, 3),
+       p=st.floats(-1, 1))
+def test_g_fenchel_young(name, u, x, p):
+    """g(x) + g*(u) >= x*u for the separable terms."""
+    prob = _mk(name)
+    pj = jnp.float32(0.0) if prob.g_param is None else jnp.float32(p)
+    g = float(prob.g_el(jnp.float32(x), pj))
+    gc = float(prob.g_conj_el(jnp.float32(u), pj))
+    if np.isfinite(g) and np.isfinite(gc):
+        assert g + gc >= x * u - 1e-4
+
+
+@pytest.mark.parametrize("name", ["ridge_primal", "ridge_dual"])
+def test_ridge_primal_dual_same_optimum(name):
+    """The two CoLA mappings of ridge reach the same training objective."""
+    x, y, _ = synthetic.regression(60, 20, seed=3)
+    lam = 1e-2
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+    # closed-form ridge: w = (X^T X + lam I)^-1 X^T y
+    w = np.linalg.solve(x.T @ x + lam * np.eye(20), x.T @ y)
+    primal_opt = 0.5 * np.sum((x @ w - y) ** 2) + 0.5 * lam * np.sum(w ** 2)
+    prob = _mk(name, seed=3)
+    prob = problems.PROBLEMS[name](xj, yj, lam)
+    # solve with plain (sub)gradient descent on F_A to moderate accuracy
+    from repro.core.cola import solve_reference
+    val = solve_reference(prob, rounds=400, kappa=8)
+    if name == "ridge_primal":
+        np.testing.assert_allclose(val, primal_opt, rtol=1e-3)
+    else:
+        # dual optimum value relates by strong duality:
+        # min F_B = -min F_A ... here F_B(w*) = -primal_opt (up to sign conv)
+        np.testing.assert_allclose(-val, primal_opt, rtol=1e-3)

@@ -1,0 +1,68 @@
+"""Topology / mixing-matrix properties (paper App. B) — property-based."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as topo
+
+BUILDERS = {
+    "ring": topo.ring,
+    "cycle2": lambda k: topo.connected_cycle(k, 2),
+    "complete": topo.complete,
+    "star": topo.star,
+    "grid": lambda k: topo.grid_2d(*topo._square_factors(k)),
+    "torus": lambda k: topo.torus_2d(*topo._square_factors(k)),
+}
+
+
+@settings(max_examples=40, deadline=None)
+@given(k=st.integers(5, 24), name=st.sampled_from(sorted(BUILDERS)))
+def test_metropolis_doubly_stochastic_symmetric(k, name):
+    w = topo.metropolis_weights(BUILDERS[name](k))
+    np.testing.assert_allclose(w.sum(0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(w, w.T, atol=1e-12)
+    assert (w >= -1e-15).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=st.integers(5, 24), name=st.sampled_from(sorted(BUILDERS)))
+def test_connected_graphs_have_positive_spectral_gap(k, name):
+    w = topo.metropolis_weights(BUILDERS[name](k))
+    assert topo.spectral_gap(w) > 1e-6
+
+
+def test_disconnected_gap_zero():
+    w = topo.metropolis_weights(topo.disconnected(6))
+    np.testing.assert_allclose(w, np.eye(6))
+    assert topo.spectral_gap(w) == pytest.approx(0.0, abs=1e-12)
+
+
+def test_edge_utilization():
+    g = topo.ring(8)
+    w = topo.metropolis_weights(g)
+    assert ((w > 0) == (g.adjacency | np.eye(8, dtype=bool))).all()
+
+
+def test_beta_ordering_matches_connectivity():
+    """Better-connected graphs have smaller beta (paper Fig. 3 intuition)."""
+    k = 16
+    betas = {n: topo.beta(topo.metropolis_weights(b(k)))
+             for n, b in BUILDERS.items()}
+    assert betas["complete"] < betas["cycle2"] < betas["ring"]
+    assert betas["torus"] < betas["ring"]
+
+
+@settings(max_examples=25, deadline=None)
+@given(k=st.integers(6, 20), drop=st.integers(1, 3), seed=st.integers(0, 99))
+def test_reweight_for_active_stays_doubly_stochastic(k, drop, seed):
+    rng = np.random.default_rng(seed)
+    active = np.ones(k, dtype=bool)
+    active[rng.choice(k, size=drop, replace=False)] = False
+    w = topo.reweight_for_active(topo.connected_cycle(k, 2), active)
+    np.testing.assert_allclose(w.sum(0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-12)
+    # inactive nodes are isolated: W_kk = 1
+    for i in np.nonzero(~active)[0]:
+        assert w[i, i] == pytest.approx(1.0)
+        assert w[i].sum() == pytest.approx(1.0)
