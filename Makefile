@@ -1,0 +1,21 @@
+# repo root on the path too: benchmarks/ imports `benchmarks.common`
+PY := PYTHONPATH=src:. python
+
+.PHONY: verify test quick bench bench-smoke
+
+# tier-1 gate: the full suite + the round-executor benchmark in smoke mode
+verify: test bench-smoke
+
+test:
+	$(PY) -m pytest -x -q
+
+# quick path: skip the slow subprocess equivalence tests
+quick:
+	$(PY) -m pytest -x -q -m "not slow"
+
+# full round-executor benchmark; writes BENCH_cola.json at the repo root
+bench:
+	$(PY) benchmarks/round_bench.py
+
+bench-smoke:
+	$(PY) benchmarks/round_bench.py --smoke

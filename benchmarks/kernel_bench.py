@@ -14,7 +14,7 @@ from benchmarks.common import csv_row
 from repro.core import problems
 from repro.core.cola import build_env
 from repro.core.partition import make_partition
-from repro.core.subproblem import SubproblemSpec, cd_solve_all
+from repro.core.subproblem import SubproblemSpec, block_gram, cd_solve_all
 from repro.data import synthetic
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ops import cd_solve_pallas
@@ -54,6 +54,14 @@ def run(fast: bool = True):
             f"{_time(lambda: cd_solve_pallas(prob, spec, env.a_parts, xp, grads, env.gp_parts, env.masks, part.block)):.0f}")
     csv_row("kernels", "cd_glm(jnp-oracle)", f"K={kk},pass=1",
             f"{_time(lambda: cd_solve_all(prob, spec, env.a_parts, xp, grads, env.gp_parts, env.masks, part.block)):.0f}")
+
+    # Gram-cached CD: O(n_k) per coordinate step vs the residual path's O(d)
+    gram = env.gram_parts if env.gram_parts is not None else block_gram(
+        env.a_parts)
+    csv_row("kernels", "cd_glm_gram(pallas-interp)", f"K={kk},pass=1",
+            f"{_time(lambda: cd_solve_pallas(prob, spec, env.a_parts, xp, grads, env.gp_parts, env.masks, part.block, cd_mode='gram', gram_parts=gram)):.0f}")
+    csv_row("kernels", "cd_glm_gram(jnp-oracle)", f"K={kk},pass=1",
+            f"{_time(lambda: cd_solve_all(prob, spec, env.a_parts, xp, grads, env.gp_parts, env.masks, part.block, gram_parts=gram)):.0f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,91 @@
+"""Rounds/sec of the CoLA drivers: per-round Python loop vs round-block scan.
+
+This is the framework-overhead benchmark behind the round-block engine
+(``repro.core.executor``): for the paper's regime — cheap local computation
+between communication rounds — the seed driver's per-round dispatch and its
+blocking metric sync dominate wall-clock. The block executor amortizes one
+dispatch over ``block_size`` rounds and records metrics on device.
+
+Writes ``BENCH_cola.json`` at the repo root (the committed trajectory the
+CI smoke run and future PRs compare against). ``--smoke`` runs a reduced
+config and skips the JSON write.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.core import problems, topology as topo
+from repro.core.cola import ColaConfig, run_cola
+from repro.data import synthetic
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _bench_case(prob, graph, cfg, rounds, record_every, **kwargs):
+    """Wall-clock one full run (after a warmup run that owns compilation)."""
+    run_cola(prob, graph, cfg, rounds, record_every=record_every, **kwargs)
+    t0 = time.perf_counter()
+    res = run_cola(prob, graph, cfg, rounds, record_every=record_every,
+                   **kwargs)
+    jax.block_until_ready(res.state.x_parts)
+    return rounds / (time.perf_counter() - t0), res
+
+
+def run(smoke: bool = False) -> dict:
+    rounds = 50 if smoke else 200
+    k = 16
+    n_samples, n_features = (128, 64) if smoke else (256, 128)
+    record_every = 1  # the run_cola default: the loop driver syncs per round
+    x, y, _ = synthetic.regression(n_samples, n_features, seed=0)
+    prob = problems.ridge_primal(jnp.asarray(x), jnp.asarray(y), 1e-2)
+    graph = topo.ring(k)
+    cfg = ColaConfig(kappa=1.0)
+
+    csv_row("fig", "executor", "case", "rounds_per_sec")
+    loop_rps, loop_res = _bench_case(prob, graph, cfg, rounds, record_every,
+                                     executor="loop")
+    csv_row("round_bench", "loop", f"K={k},T={rounds}", f"{loop_rps:.1f}")
+    block_rps, block_res = _bench_case(prob, graph, cfg, rounds, record_every,
+                                       executor="block", block_size=64)
+    csv_row("round_bench", "block", f"K={k},T={rounds}", f"{block_rps:.1f}")
+    speedup = block_rps / loop_rps
+    csv_row("round_bench", "speedup", f"K={k},T={rounds}", f"{speedup:.2f}x")
+
+    # the two drivers must agree (bitwise on state; tests assert it too)
+    import numpy as np
+    assert np.array_equal(np.asarray(loop_res.state.x_parts),
+                          np.asarray(block_res.state.x_parts)), \
+        "block executor diverged from the loop driver"
+
+    result = {
+        "bench": "cola_round_executor",
+        "config": {"K": k, "rounds": rounds, "n_samples": n_samples,
+                   "n_features": n_features, "record_every": record_every,
+                   "kappa": cfg.kappa, "topology": "ring",
+                   "backend": jax.default_backend()},
+        "loop_rounds_per_sec": round(loop_rps, 2),
+        "block_rounds_per_sec": round(block_rps, 2),
+        "speedup": round(speedup, 2),
+        "final_primal": {"loop": loop_res.history["primal"][-1],
+                         "block": block_res.history["primal"][-1]},
+    }
+    if not smoke:
+        out = ROOT / "BENCH_cola.json"
+        out.write_text(json.dumps(result, indent=2) + "\n")
+        csv_row("round_bench", "json", str(out), "written")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config, no BENCH_cola.json write")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -12,6 +12,11 @@ All of them address the sum-structured form  min_w sum_k F_k(w)  with
 F_k(w) = f(X_k w; y_k)/1 + (1/K) g(w): the data is partitioned by SAMPLES
 (rows), each node holds a full copy of w — in contrast to CoLA's column
 partitioning. This is their natural formulation and what the paper benchmarks.
+
+All three runners execute on the shared round-block engine
+(``repro.core.executor``) by default — ``block_size`` rounds per device
+dispatch, metrics recorded on device — with ``executor="loop"`` retained as
+the per-round reference path.
 """
 from __future__ import annotations
 
@@ -22,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import topology as topo
+from repro.core import executor as exec_engine, topology as topo
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,12 +107,47 @@ class BaselineResult(NamedTuple):
 
 
 def _run(prob: ConsensusProblem, round_fn: Callable, state, rounds: int,
-         record_every: int, extract_w: Callable) -> BaselineResult:
+         record_every: int, extract_w: Callable, executor: str = "block",
+         block_size: int = 64) -> BaselineResult:
+    """Drive ``round_fn`` for ``rounds`` rounds.
+
+    ``executor="block"`` scans ``block_size`` rounds per device dispatch with
+    on-device metric recording (see ``repro.core.executor``); "loop" is the
+    retained one-dispatch-per-round reference path. ``round_fn`` must be an
+    unjitted pure ``carry -> carry`` body.
+    """
+    def obj_fn(ws):
+        return prob.objective(jnp.mean(ws, axis=0))
+
+    def cons_fn(ws):
+        return jnp.sum((ws - jnp.mean(ws, axis=0)) ** 2)
+
+    if executor == "block":
+        def step_fn(carry, _ctx, _sched):
+            return round_fn(carry), None
+
+        def record_fn(carry):
+            ws = extract_w(carry)
+            return jnp.stack([obj_fn(ws), cons_fn(ws)])
+
+        rec = exec_engine.record_flags(rounds, record_every)
+        res = exec_engine.run_round_blocks(
+            step_fn, state, {}, record_fn=record_fn, record_mask=rec,
+            block_size=block_size, num_rounds=rounds)
+        history = {"round": [int(t) for t in np.nonzero(rec)[0]],
+                   "objective": [float(v) for v in res.metrics[:, 0]],
+                   "consensus": [float(v) for v in res.metrics[:, 1]]}
+        return BaselineResult(w_stack=extract_w(res.state), history=history)
+
+    if executor != "loop":
+        raise ValueError(f"unknown executor {executor!r} "
+                         "(want 'block' or 'loop')")
     history = {"round": [], "objective": [], "consensus": []}
-    obj = jax.jit(lambda ws: prob.objective(jnp.mean(ws, axis=0)))
-    cons = jax.jit(lambda ws: jnp.sum((ws - jnp.mean(ws, axis=0)) ** 2))
+    step = jax.jit(round_fn)
+    obj = jax.jit(obj_fn)
+    cons = jax.jit(cons_fn)
     for t in range(rounds):
-        state = round_fn(state)
+        state = step(state)
         if t % record_every == 0 or t == rounds - 1:
             ws = extract_w(state)
             history["round"].append(t)
@@ -121,12 +161,11 @@ def _run(prob: ConsensusProblem, round_fn: Callable, state, rounds: int,
 # ---------------------------------------------------------------------------
 
 def run_dgd(prob: ConsensusProblem, graph: topo.Topology, *, step: float,
-            rounds: int, record_every: int = 1,
-            diminishing: bool = False) -> BaselineResult:
+            rounds: int, record_every: int = 1, diminishing: bool = False,
+            executor: str = "block", block_size: int = 64) -> BaselineResult:
     w_mix = jnp.asarray(topo.metropolis_weights(graph), dtype=prob.x_parts.dtype)
     k, d = prob.num_nodes, prob.dim
 
-    @jax.jit
     def one_round(carry):
         ws, t = carry
         alpha = step / jnp.sqrt(t + 1.0) if diminishing else step
@@ -136,7 +175,8 @@ def run_dgd(prob: ConsensusProblem, graph: topo.Topology, *, step: float,
         return (new, t + 1.0)
 
     state = (jnp.zeros((k, d), dtype=prob.x_parts.dtype), jnp.asarray(0.0))
-    return _run(prob, one_round, state, rounds, record_every, lambda s: s[0])
+    return _run(prob, one_round, state, rounds, record_every, lambda s: s[0],
+                executor, block_size)
 
 
 # ---------------------------------------------------------------------------
@@ -144,11 +184,11 @@ def run_dgd(prob: ConsensusProblem, graph: topo.Topology, *, step: float,
 # ---------------------------------------------------------------------------
 
 def run_diging(prob: ConsensusProblem, graph: topo.Topology, *, step: float,
-               rounds: int, record_every: int = 1) -> BaselineResult:
+               rounds: int, record_every: int = 1, executor: str = "block",
+               block_size: int = 64) -> BaselineResult:
     w_mix = jnp.asarray(topo.metropolis_weights(graph), dtype=prob.x_parts.dtype)
     k, d = prob.num_nodes, prob.dim
 
-    @jax.jit
     def one_round(carry):
         ws, s, g_prev = carry
         ws_new = w_mix @ ws - step * s
@@ -163,8 +203,11 @@ def run_diging(prob: ConsensusProblem, graph: topo.Topology, *, step: float,
     g0 = prob.smooth_grad(ws0)
     if prob.reg == "l1":
         g0 = g0 + (prob.lam / k) * jnp.sign(ws0)
-    state = (ws0, g0, g0)
-    return _run(prob, one_round, state, rounds, record_every, lambda s: s[0])
+    # g0 appears twice in the carry; copy so state donation sees distinct
+    # buffers (donating the same buffer twice is an error)
+    state = (ws0, g0, jnp.array(g0))
+    return _run(prob, one_round, state, rounds, record_every, lambda s: s[0],
+                executor, block_size)
 
 
 # ---------------------------------------------------------------------------
@@ -173,7 +216,8 @@ def run_diging(prob: ConsensusProblem, graph: topo.Topology, *, step: float,
 
 def run_dadmm(prob: ConsensusProblem, graph: topo.Topology, *, rho: float,
               rounds: int, inner_steps: int = 10, inner_lr: float | None = None,
-              record_every: int = 1) -> BaselineResult:
+              record_every: int = 1, executor: str = "block",
+              block_size: int = 64) -> BaselineResult:
     """Consensus ADMM [Shi et al. 2014]:
 
       x_k^{t+1} = argmin F_k(x) + <a_k^t, x> + rho * d_k ||x - m_k^t||^2
@@ -191,7 +235,6 @@ def run_dadmm(prob: ConsensusProblem, graph: topo.Topology, *, rho: float,
         col_norm = float(jnp.max(jnp.sum(prob.x_parts ** 2, axis=(1, 2))))
         inner_lr = 1.0 / (col_norm + rho * float(jnp.max(deg)) * 2.0 + 1e-9)
 
-    @jax.jit
     def one_round(carry):
         xs, a = carry
         neigh_sum = adj @ xs                         # (K, d)
@@ -208,4 +251,5 @@ def run_dadmm(prob: ConsensusProblem, graph: topo.Topology, *, rho: float,
 
     xs0 = jnp.zeros((k, d), dtype=prob.x_parts.dtype)
     state = (xs0, jnp.zeros_like(xs0))
-    return _run(prob, one_round, state, rounds, record_every, lambda s: s[0])
+    return _run(prob, one_round, state, rounds, record_every, lambda s: s[0],
+                executor, block_size)

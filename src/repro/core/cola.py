@@ -5,6 +5,21 @@ The single-host simulator keeps all K nodes' state stacked:
 (gossip mix -> vmapped local CD solve -> local updates). The shard_map
 distributed runtime in ``repro.dist.runtime`` executes the same math with the
 node axis laid out over mesh devices; tests assert bitwise-equivalent rounds.
+
+Two interchangeable drivers execute the rounds (tests assert they are
+bitwise identical):
+
+* ``executor="loop"`` — the retained reference path: one ``make_round``
+  dispatch per round, metrics fetched synchronously every ``record_every``.
+* ``executor="block"`` (default) — the round-block engine
+  (``repro.core.executor``): schedules (per-round mixing matrices, active
+  masks, CD budgets, reset flags) are pre-materialized as stacked (T, ...)
+  arrays, ``block_size`` rounds run per device dispatch inside a
+  ``lax.scan``, metric history is recorded on device and fetched once at
+  the end, and the (K, n_k)/(K, d) state buffers are donated across blocks.
+
+The local CD solve picks between the residual and Gram-cached formulations
+(``repro.core.subproblem.gram_pays``) via ``ColaConfig.cd_mode``.
 """
 from __future__ import annotations
 
@@ -15,12 +30,14 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
-from repro.core import mixing, topology as topo
+from repro.core import executor as exec_engine, mixing, topology as topo
 from repro.core.duality import GapReport, gap_report
 from repro.core.partition import Partition, make_partition
 from repro.core.problems import Problem
-from repro.core.subproblem import SubproblemSpec, cd_solve_all
+from repro.core.subproblem import (SubproblemSpec, block_gram, cd_solve_all,
+                                   gram_pays)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,12 +51,22 @@ class ColaConfig:
     #   the knob controlling the local accuracy Theta. May be fractional.
     gossip_steps: int = 1           # B gossip steps per round (App. E.2)
     grad_mode: str = "local"        # "local" (Eq. 2) | "mixed" (App. E.1)
+    cd_mode: str = "auto"           # local solver formulation:
+    #   "auto" — Gram-cached when subproblem.gram_pays says it's cheaper,
+    #   "gram" / "residual" — force one path (see subproblem docstring).
 
     def resolved_sigma(self, k: int) -> float:
         return self.gamma * k if self.sigma_prime is None else self.sigma_prime
 
     def coord_steps(self, block: int) -> int:
         return max(1, int(round(self.kappa * block)))
+
+    def use_gram(self, d: int, n_k: int, itemsize: int = 4) -> bool:
+        if self.cd_mode == "gram":
+            return True
+        if self.cd_mode == "residual":
+            return False
+        return gram_pays(d, n_k, itemsize)
 
 
 class ColaState(NamedTuple):
@@ -53,13 +80,24 @@ class ColaEnv(NamedTuple):
     a_parts: jax.Array   # (K, d, n_k)
     gp_parts: jax.Array  # (K, n_k)
     masks: jax.Array     # (K, n_k)
+    # (K, n_k, n_k) node-local Gram blocks A_[k]^T A_[k] for the Gram-cached
+    # CD path, or None when the heuristic says the residual path is cheaper.
+    gram_parts: jax.Array | None = None
 
 
-def build_env(problem: Problem, part: Partition) -> ColaEnv:
+def build_env(problem: Problem, part: Partition, *,
+              with_gram: bool | None = None) -> ColaEnv:
+    """Materialize the per-run arrays. ``with_gram=None`` precomputes the
+    Gram blocks exactly when ``subproblem.gram_pays`` says the Gram-cached
+    CD formulation is the cheaper one for this (d, n_k, dtype)."""
+    a_parts = part.split_matrix(problem.a)
+    if with_gram is None:
+        with_gram = gram_pays(problem.d, part.block, a_parts.dtype.itemsize)
     return ColaEnv(
-        a_parts=part.split_matrix(problem.a),
+        a_parts=a_parts,
         gp_parts=part.split_vector(problem.g_params()),
         masks=part.mask(problem.a.dtype),
+        gram_parts=block_gram(a_parts) if with_gram else None,
     )
 
 
@@ -70,19 +108,15 @@ def init_state(problem: Problem, part: Partition) -> ColaState:
     )
 
 
-def make_round(problem: Problem, part: Partition, cfg: ColaConfig
-               ) -> Callable[[ColaState, ColaEnv, jax.Array, jax.Array], ColaState]:
-    """Build the jitted one-round function of Algorithm 1.
-
-    Returned signature: round(state, env, w, active) -> state. ``w`` and
-    ``active`` are dynamic so fault-tolerance schedules don't retrigger
-    compilation.
-    """
+def _round_body(problem: Problem, part: Partition, cfg: ColaConfig
+                ) -> Callable:
+    """The pure one-round function of Algorithm 1, shared verbatim by the
+    per-round loop (``make_round``) and the round-block scan executor —
+    which is what makes the two drivers bitwise identical."""
     k = part.num_nodes
     sigma = cfg.resolved_sigma(k)
     spec = SubproblemSpec(sigma_over_tau=sigma / problem.tau, inv_k=1.0 / k)
 
-    @jax.jit
     def one_round(state: ColaState, env: ColaEnv, w: jax.Array,
                   active: jax.Array,
                   budgets: jax.Array | None = None) -> ColaState:
@@ -97,9 +131,17 @@ def make_round(problem: Problem, part: Partition, cfg: ColaConfig
 
         # Step 5: Theta-approximate local subproblem solve (kappa * n_k CD
         # steps; per-node budgets model heterogeneous Theta_k, Definition 5).
+        use_gram = (env.gram_parts is not None
+                    and cfg.use_gram(problem.d, part.block,
+                                     env.a_parts.dtype.itemsize))
+        if cfg.cd_mode == "gram" and env.gram_parts is None:
+            raise ValueError(
+                "cd_mode='gram' but the env has no Gram blocks — build it "
+                "with build_env(problem, part, with_gram=True)")
         dx = cd_solve_all(problem, spec, env.a_parts, state.x_parts, grads,
                           env.gp_parts, env.masks, cfg.coord_steps(part.block),
-                          step_budgets=budgets)
+                          step_budgets=budgets,
+                          gram_parts=env.gram_parts if use_gram else None)
         dx = dx * active[:, None].astype(dx.dtype)
 
         # Steps 6-8: local variable + local estimate updates.
@@ -109,6 +151,17 @@ def make_round(problem: Problem, part: Partition, cfg: ColaConfig
         return ColaState(x_parts=x_new, v_stack=v_new)
 
     return one_round
+
+
+def make_round(problem: Problem, part: Partition, cfg: ColaConfig
+               ) -> Callable[[ColaState, ColaEnv, jax.Array, jax.Array], ColaState]:
+    """Build the jitted one-round function of Algorithm 1.
+
+    Returned signature: round(state, env, w, active) -> state. ``w`` and
+    ``active`` are dynamic so fault-tolerance schedules don't retrigger
+    compilation.
+    """
+    return jax.jit(_round_body(problem, part, cfg))
 
 
 def cocoa_mixing(k: int) -> np.ndarray:
@@ -122,12 +175,16 @@ class RunResult(NamedTuple):
     history: dict  # lists keyed by metric name
 
 
+_METRICS = ("primal", "hamiltonian", "dual", "gap", "consensus_violation")
+
+
 def run_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
              rounds: int, *, record_every: int = 1,
              active_schedule: Callable[[int, np.random.Generator], np.ndarray] | None = None,
              budget_schedule: Callable[[int, np.random.Generator], np.ndarray] | None = None,
              leave_mode: str = "freeze", seed: int = 0,
-             w_override: np.ndarray | None = None) -> RunResult:
+             w_override: np.ndarray | None = None,
+             executor: str = "block", block_size: int = 64) -> RunResult:
     """Driver: runs Algorithm 1 and records Lemma-1/2 diagnostics.
 
     Args:
@@ -142,22 +199,52 @@ def run_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         Lemma-1 mean invariant).
       w_override: use this mixing matrix instead of Metropolis weights
         (e.g. ``cocoa_mixing(K)`` for the centralized special case).
+      executor: "block" (default) runs ``block_size`` rounds per device
+        dispatch via the round-block engine; "loop" is the retained
+        one-dispatch-per-round reference path. Both consume the schedule
+        rngs identically and produce bitwise-identical states.
+      block_size: rounds per dispatch for the block executor.
     """
     k = graph.num_nodes
     part = make_partition(problem.n, k)
-    env = build_env(problem, part)
+    # honor cfg.cd_mode: forced "gram" must materialize the blocks even when
+    # the heuristic declines, forced "residual" must not pay for them
+    env = build_env(problem, part,
+                    with_gram=cfg.use_gram(problem.d, part.block,
+                                           problem.a.dtype.itemsize))
     state = init_state(problem, part)
-    one_round = make_round(problem, part, cfg)
     base_w = w_override if w_override is not None else topo.metropolis_weights(graph)
+    args = (problem, part, env, state, graph, cfg, rounds, record_every,
+            active_schedule, budget_schedule, leave_mode, seed, base_w)
+    if executor == "block":
+        return _run_cola_block(*args, block_size=block_size)
+    if executor == "loop":
+        return _run_cola_loop(*args)
+    raise ValueError(f"unknown executor {executor!r} (want 'block' or 'loop')")
+
+
+def _run_cola_loop(problem, part, env, state, graph, cfg, rounds, record_every,
+                   active_schedule, budget_schedule, leave_mode, seed,
+                   base_w) -> RunResult:
+    """Reference driver: one jitted dispatch per round, blocking metric sync
+    every ``record_every`` rounds (the seed behaviour, kept for equivalence
+    tests and as the benchmark baseline)."""
+    k = part.num_nodes
+    one_round = exec_engine.cached_driver(
+        ("cola-round", id(problem), part, cfg),
+        lambda: make_round(problem, part, cfg))
     rng = np.random.default_rng(seed)
 
     dtype = problem.a.dtype
     w = jnp.asarray(base_w, dtype=dtype)
     all_active = np.ones((k,), dtype=bool)
-    history: dict = {"round": [], "primal": [], "hamiltonian": [], "dual": [],
-                     "gap": [], "consensus_violation": []}
+    history: dict = {"round": []}
+    history.update({name: [] for name in _METRICS})
 
-    report = jax.jit(lambda s: gap_report(problem, part, s.x_parts, s.v_stack))
+    report = exec_engine.cached_driver(
+        ("cola-report", id(problem), part),
+        lambda: jax.jit(
+            lambda s: gap_report(problem, part, s.x_parts, s.v_stack)))
 
     prev_active = all_active
     for t in range(rounds):
@@ -181,10 +268,106 @@ def run_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         if t % record_every == 0 or t == rounds - 1:
             rep = report(state)
             history["round"].append(t)
-            for name in ("primal", "hamiltonian", "dual", "gap",
-                         "consensus_violation"):
+            for name in _METRICS:
                 history[name].append(float(getattr(rep, name)))
     return RunResult(state=state, history=history)
+
+
+def _materialize_schedule(graph, rounds, active_schedule, budget_schedule,
+                          leave_mode, seed, base_w, dtype) -> dict:
+    """Evaluate the host-side schedule callables for all T rounds up front,
+    into stacked (T, ...) arrays the scan executor can slice per block.
+
+    The rng is consumed in the same per-round order as the loop driver
+    (active draw, then budget draw), so both drivers see identical schedules
+    for the same seed.
+    """
+    k = graph.num_nodes
+    has_churn = active_schedule is not None
+    has_budget = budget_schedule is not None
+    has_reset = has_churn and leave_mode == "reset"
+    rng = np.random.default_rng(seed)
+
+    if has_churn:
+        w_stack = np.empty((rounds, k, k), dtype=dtype)
+        actives = np.empty((rounds, k), dtype=dtype)
+    else:
+        # no churn: every round shares base_w; broadcast views keep the
+        # schedule O(K^2) in host memory, copied blockwise at dispatch
+        w_stack = np.broadcast_to(np.asarray(base_w, dtype=dtype),
+                                  (rounds, k, k))
+        actives = np.broadcast_to(np.ones((k,), dtype=dtype), (rounds, k))
+    budgets = np.empty((rounds, k), np.int32) if has_budget else None
+    leavers = np.zeros((rounds, k), bool) if has_reset else None
+    reset_any = np.zeros((rounds,), bool) if has_reset else None
+
+    prev_active = np.ones((k,), dtype=bool)
+    if has_churn or has_budget:
+        for t in range(rounds):
+            if has_churn:
+                active = np.asarray(active_schedule(t, rng), dtype=bool)
+                if not active.any():
+                    active = np.ones((k,), dtype=bool)
+                w_stack[t] = topo.reweight_for_active(graph, active)
+                actives[t] = active.astype(dtype)
+                if has_reset:
+                    left = prev_active & ~active
+                    leavers[t] = left
+                    reset_any[t] = left.any()
+                prev_active = active
+            if has_budget:
+                budgets[t] = np.asarray(budget_schedule(t, rng),
+                                        dtype=np.int32)
+
+    sched = {"w": w_stack, "active": actives}
+    if has_budget:
+        sched["budgets"] = budgets
+    if has_reset:
+        sched["leavers"] = leavers
+        sched["reset_any"] = reset_any
+    return sched
+
+
+def _run_cola_block(problem, part, env, state, graph, cfg, rounds,
+                    record_every, active_schedule, budget_schedule,
+                    leave_mode, seed, base_w, *, block_size) -> RunResult:
+    """Round-block driver: ``block_size`` rounds per dispatch (see
+    ``repro.core.executor``), metrics recorded on device."""
+    dtype = problem.a.dtype
+    sched = _materialize_schedule(graph, rounds, active_schedule,
+                                  budget_schedule, leave_mode, seed, base_w,
+                                  dtype)
+    has_budget = "budgets" in sched
+    has_reset = "leavers" in sched
+    body = _round_body(problem, part, cfg)
+
+    def step_fn(st, env_ctx, s_t):
+        if has_reset:
+            # cond matches the loop driver's host-side `leavers.any()` gate,
+            # so rounds without leavers execute the identical program
+            st = lax.cond(
+                s_t["reset_any"],
+                lambda ss: _reset_leavers(ss, env_ctx, part, s_t["leavers"]),
+                lambda ss: ss, st)
+        st = body(st, env_ctx, s_t["w"], s_t["active"],
+                  s_t["budgets"] if has_budget else None)
+        return st, None
+
+    def record_fn(st):
+        rep = gap_report(problem, part, st.x_parts, st.v_stack)
+        return jnp.stack([getattr(rep, name) for name in _METRICS])
+
+    rec = exec_engine.record_flags(rounds, record_every)
+    res = exec_engine.run_round_blocks(
+        step_fn, state, sched, context=env, record_fn=record_fn,
+        record_mask=rec, block_size=block_size,
+        cache_key=("cola-block", id(problem), part, cfg, has_budget,
+                   has_reset))
+
+    history: dict = {"round": [int(t) for t in np.nonzero(rec)[0]]}
+    for j, name in enumerate(_METRICS):
+        history[name] = [float(v) for v in res.metrics[:, j]]
+    return RunResult(state=res.state, history=history)
 
 
 def _reset_leavers(state: ColaState, env: ColaEnv, part: Partition,

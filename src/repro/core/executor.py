@@ -1,0 +1,194 @@
+"""Round-block execution engine: many rounds per device dispatch.
+
+The per-round Python driver loop (seed ``run_cola`` / ``baselines._run``)
+pays, every round, (a) a host->device dispatch of one jitted program and
+(b) a blocking ``device_get`` sync whenever a metric is recorded. For the
+paper's regime — cheap computation between communication rounds (Fig. 1) —
+this framework overhead dominates wall-clock on fast hardware.
+
+This module amortizes it: the round body runs inside a ``lax.scan`` over a
+*block* of ``block_size`` rounds, so one dispatch executes the whole block.
+Everything the host used to feed in per round (mixing matrices, active
+masks, CD budgets, batches) is pre-materialized as stacked ``(T, ...)``
+schedule arrays and sliced per block; metric history is recorded *on
+device* inside the scan (a ``lax.cond`` on a per-round record flag, so
+skipped rounds cost nothing) and fetched once at the end of the run. The
+carried state is donated (``donate_argnums``) so long runs reuse their
+``(K, d)``/``(K, n_k)`` buffers instead of reallocating them every round.
+
+The engine is shared by the CoLA driver (``repro.core.cola.run_cola``),
+the decentralized baselines (``repro.core.baselines``) and the gossip-DP
+optimizer (``repro.optim.gossip``).
+"""
+from __future__ import annotations
+
+import warnings
+from collections import OrderedDict
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# Compiled-driver cache: jit only caches on the *function object*, and every
+# run_cola/run_round_blocks call builds fresh closures, so without this each
+# run re-traces and re-compiles its whole program — which dominates wall
+# clock for short runs. Entries hold the jitted closure (which keeps its
+# captured Problem/etc. alive, so an id()-based key cannot be reused while
+# the entry lives); bounded LRU.
+_DRIVER_CACHE: OrderedDict = OrderedDict()
+_DRIVER_CACHE_SIZE = 64
+
+
+def clear_driver_cache() -> None:
+    """Drop all cached drivers (and the Problems/executables their closures
+    pin). Call between large sweeps that build many distinct problems."""
+    _DRIVER_CACHE.clear()
+
+
+def cached_driver(key, build: Callable[[], Callable]) -> Callable:
+    """Return (building on miss) the jitted driver for ``key``.
+
+    ``key`` must uniquely determine the semantics AND closure constants of
+    the built function (include id() of captured objects). ``key=None``
+    bypasses the cache.
+    """
+    if key is None:
+        return build()
+    fn = _DRIVER_CACHE.get(key)
+    if fn is None:
+        fn = build()
+        _DRIVER_CACHE[key] = fn
+        if len(_DRIVER_CACHE) > _DRIVER_CACHE_SIZE:
+            _DRIVER_CACHE.popitem(last=False)
+    else:
+        _DRIVER_CACHE.move_to_end(key)
+    return fn
+
+
+class BlockRunResult(NamedTuple):
+    state: Any
+    metrics: np.ndarray | None  # (R, m) rows for rounds where record_mask
+    aux: Any                    # per-round step outputs stacked over T, or None
+
+
+def _num_rounds(schedule: Any, record_mask: np.ndarray | None,
+                num_rounds: int | None) -> int:
+    if num_rounds is not None:
+        return int(num_rounds)
+    if record_mask is not None:
+        return int(np.shape(record_mask)[0])
+    leaves = jax.tree.leaves(schedule)
+    if not leaves:
+        raise ValueError("cannot infer the round count: pass num_rounds, a "
+                         "record_mask, or a schedule with (T, ...) leaves")
+    return int(leaves[0].shape[0])
+
+
+def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
+                     state: Any, schedule: Any, *,
+                     context: Any = None,
+                     record_fn: Callable[[Any], jax.Array] | None = None,
+                     record_mask: np.ndarray | None = None,
+                     block_size: int = 64,
+                     num_rounds: int | None = None,
+                     cache_key: Any = None) -> BlockRunResult:
+    """Run ``T`` rounds of ``step_fn`` in ceil(T / block_size) dispatches.
+
+    Args:
+      step_fn: ``(state, context, sched_t) -> (state, aux)`` — the pure round
+        body. ``sched_t`` is the per-round slice of ``schedule``; ``aux`` is
+        an optional per-round output pytree (or None).
+      state: carried state pytree; its buffers are donated to the scan.
+      schedule: pytree of ``(T, ...)`` arrays (host numpy is fine — each
+        block's slice is shipped to the device at dispatch). May be empty
+        (``{}``) when the round body needs no per-round inputs.
+      context: run-constant pytree (e.g. the CoLA env) passed through to
+        ``step_fn`` as a jit argument so large arrays are not baked into the
+        executable as constants.
+      record_fn: ``state -> (m,)`` metric row, evaluated on device only for
+        rounds where ``record_mask`` is set.
+      record_mask: ``(T,)`` bool — which rounds record a metric row.
+      block_size: rounds per device dispatch. At most two program shapes are
+        compiled (full block + remainder).
+      num_rounds: explicit T when neither schedule nor record_mask carries it.
+      cache_key: when set, the jitted block program is reused across calls
+        (see ``cached_driver``) so repeated runs skip trace+compile. The key
+        must pin down ``step_fn``/``record_fn`` semantics and captured
+        constants — include ``id()`` of closed-over objects.
+
+    Returns:
+      BlockRunResult(state, metrics, aux): ``metrics`` holds the recorded
+      rows only (record_mask applied), fetched in a single device sync at the
+      end; ``aux`` stacks the per-round step outputs over all T rounds.
+    """
+    t_total = _num_rounds(schedule, record_mask, num_rounds)
+    if record_fn is not None and record_mask is None:
+        record_mask = np.ones((t_total,), dtype=bool)
+    rec_all = (np.asarray(record_mask, dtype=bool)
+               if record_fn is not None else np.zeros((t_total,), dtype=bool))
+
+    def build():
+        def zero_row(s):
+            # shape-only evaluation, re-derived per trace so a cached driver
+            # stays correct if it is reused at different state shapes
+            sd = jax.eval_shape(record_fn, s)
+            return jnp.zeros(sd.shape, sd.dtype)
+
+        @partial(jax.jit, donate_argnums=(0,))
+        def run_block(st, ctx, sched, rec):
+            def body(s, xs):
+                sched_t, rec_t = xs
+                s, aux = step_fn(s, ctx, sched_t)
+                if record_fn is None:
+                    return s, (aux, None)
+                row = lax.cond(rec_t, record_fn, zero_row, s)
+                return s, (aux, row)
+            return lax.scan(body, st, (sched, rec))
+
+        return run_block
+
+    run_block = cached_driver(cache_key, build)
+
+    rows, auxes = [], []
+    start = 0
+    with warnings.catch_warnings():
+        if jax.default_backend() == "cpu":
+            # donation is a no-op on CPU, so the warning is pure noise there;
+            # on accelerators it signals real aliasing bugs — keep it
+            warnings.filterwarnings("ignore", message=".*donated.*")
+        while start < t_total:
+            stop = min(start + block_size, t_total)
+            sched_b = jax.tree.map(lambda x: jnp.asarray(x[start:stop]),
+                                   schedule)
+            state, (aux_b, rows_b) = run_block(
+                state, context, sched_b, jnp.asarray(rec_all[start:stop]))
+            if rows_b is not None:
+                rows.append(rows_b)
+            if aux_b is not None and jax.tree.leaves(aux_b):
+                auxes.append(aux_b)
+            start = stop
+
+    metrics = None
+    if record_fn is not None:
+        if rows:
+            # the single end-of-run fetch: everything before this stayed async
+            metrics = np.concatenate([np.asarray(r) for r in rows],
+                                     axis=0)[rec_all]
+        else:  # T == 0: empty history, same as the loop drivers
+            row_sd = jax.eval_shape(record_fn, state)
+            metrics = np.zeros((0,) + row_sd.shape, row_sd.dtype)
+    aux = None
+    if auxes:
+        aux = jax.tree.map(lambda *xs: np.concatenate(
+            [np.asarray(x) for x in xs], axis=0), *auxes)
+    return BlockRunResult(state=state, metrics=metrics, aux=aux)
+
+
+def record_flags(rounds: int, record_every: int) -> np.ndarray:
+    """The driver-loop recording pattern: every ``record_every``-th round and
+    always the last one."""
+    t = np.arange(rounds)
+    return (t % record_every == 0) | (t == rounds - 1)

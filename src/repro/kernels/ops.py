@@ -12,10 +12,11 @@ compiled Mosaic kernel on TPU.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.partition import Partition
 from repro.core.problems import Problem
-from repro.core.subproblem import SubproblemSpec
+from repro.core.subproblem import SubproblemSpec, gram_pays
 from repro.kernels import cd_glm, flash_attention as fa
 
 
@@ -23,9 +24,30 @@ def cd_solve_pallas(problem: Problem, spec: SubproblemSpec,
                     a_parts: jax.Array, x_parts: jax.Array,
                     grads: jax.Array, gp_parts: jax.Array,
                     masks: jax.Array, num_steps: int, *,
-                    interpret: bool = True) -> jax.Array:
-    """Same signature/semantics as ``cd_solve_all`` but on the Pallas kernel."""
+                    interpret: bool = True,
+                    gram_parts: jax.Array | None = None,
+                    cd_mode: str = "residual") -> jax.Array:
+    """Same signature/semantics as ``cd_solve_all`` but on the Pallas kernel.
+
+    ``cd_mode``: "residual" (default, the O(d)-per-step kernel), "gram"
+    (force the O(n_k)-per-step Gram-cached kernel) or "auto" (pick by
+    ``subproblem.gram_pays``). ``gram_parts`` may pass precomputed Gram
+    blocks (e.g. ``ColaEnv.gram_parts``); otherwise they are built on the
+    fly when the Gram kernel is selected.
+    """
     l1, l2, box = problem.prox_spec
+    k, d, n_k = a_parts.shape
+    use_gram = (cd_mode == "gram"
+                or (cd_mode == "auto"
+                    and gram_pays(d, n_k, a_parts.dtype.itemsize)))
+    if use_gram:
+        if gram_parts is None:
+            gram_parts = jnp.einsum("kdn,kdm->knm", a_parts, a_parts)
+        atg = jnp.einsum("kdn,kd->kn", a_parts, grads)
+        return cd_glm.cd_solve_blocks_gram(
+            gram_parts, x_parts, atg, gp_parts, masks,
+            num_steps=num_steps, sigma_over_tau=float(spec.sigma_over_tau),
+            l1=float(l1), l2=float(l2), box=float(box), interpret=interpret)
     return cd_glm.cd_solve_blocks(
         a_parts, x_parts, grads, gp_parts, masks,
         num_steps=num_steps, sigma_over_tau=float(spec.sigma_over_tau),

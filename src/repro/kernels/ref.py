@@ -5,7 +5,12 @@
 * Flash attention: ``repro.models.attention.reference_attention`` — the naive
   O(Sq*Skv) softmax attention with explicit position masking.
 """
-from repro.core.subproblem import cd_solve_all as cd_solve_ref  # noqa: F401
+from repro.core.subproblem import (  # noqa: F401
+    block_gram,
+    cd_solve_all as cd_solve_ref,
+    cd_solve_gram as cd_solve_gram_ref,
+    gram_pays,
+)
 from repro.models.attention import (  # noqa: F401
     chunked_attention as chunked_attention_ref,
     reference_attention as attention_ref,

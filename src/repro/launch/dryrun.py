@@ -29,7 +29,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ARCHS, SHAPES, InputShape, ModelConfig, \
     get_config
-from repro.dist import sharding as shd
+try:
+    from repro.dist import sharding as shd
+except ModuleNotFoundError:  # repro.dist is a roadmap item (ROADMAP.md);
+    shd = None               # the dry-run entry points require it, Opts don't
 from repro.launch import mesh as mesh_lib
 from repro.launch import specs as specs_lib
 from repro.models import transformer
@@ -162,6 +165,14 @@ def model_ctx_opt(mesh, axes, opts: Opts) -> ModelCtx:
                     dispatch_groups=groups)
 
 
+def _require_shd():
+    if shd is None:
+        raise ModuleNotFoundError(
+            "the dry-run needs repro.dist.sharding, which is not built yet "
+            "— see ROADMAP.md Open items")
+    return shd
+
+
 def _mesh_sizes(mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
@@ -170,12 +181,13 @@ def _train_artifacts(cfg: ModelConfig, shape: InputShape, mesh, axes,
                      hp: TrainHParams, opts: Opts = BASELINE):
     state_sds = specs_lib.state_specs(cfg, hp)
     batch_sds = specs_lib.input_specs(cfg, shape)
-    pspecs = shd.param_pspecs(state_sds.params, axes, _mesh_sizes(mesh),
-                              moe_output_fsdp=opts.moe_grouped)
+    pspecs = _require_shd().param_pspecs(
+        state_sds.params, axes, _mesh_sizes(mesh),
+        moe_output_fsdp=opts.moe_grouped)
     # opt_state is {"m": params-like, "v": params-like}
     state_specs_tree = state_sds._replace(
         params=pspecs, opt_state={"m": pspecs, "v": pspecs}, step=P())
-    batch_specs_tree = shd.batch_pspecs(cfg, shape, axes)
+    batch_specs_tree = _require_shd().batch_pspecs(cfg, shape, axes)
     step_fn = make_train_step(cfg, hp, model_ctx_opt(mesh, axes, opts))
     in_shardings = (_named(state_sds, mesh, state_specs_tree),
                     _named(batch_sds, mesh, batch_specs_tree))
@@ -191,11 +203,11 @@ def _prefill_artifacts(cfg: ModelConfig, shape: InputShape, mesh, axes,
     params_sds = specs_lib.params_specs(cfg)
     batch_sds = specs_lib.input_specs(cfg, shape)
     cache_sds = specs_lib.cache_specs(cfg, shape.global_batch, shape.seq_len)
-    pspecs = shd.param_pspecs(params_sds, axes, _mesh_sizes(mesh),
-                              fsdp=not opts.serve_resident)
-    bspecs = shd.batch_pspecs(cfg, shape, axes)
-    cspecs = shd.cache_pspecs(cfg, cache_sds, shape.global_batch, axes,
-                              _mesh_sizes(mesh))
+    pspecs = _require_shd().param_pspecs(
+        params_sds, axes, _mesh_sizes(mesh), fsdp=not opts.serve_resident)
+    bspecs = _require_shd().batch_pspecs(cfg, shape, axes)
+    cspecs = _require_shd().cache_pspecs(
+        cfg, cache_sds, shape.global_batch, axes, _mesh_sizes(mesh))
     step_fn = make_prefill_step(cfg, model_ctx_opt(mesh, axes, opts))
     fn = jax.jit(step_fn, in_shardings=(
         _named(params_sds, mesh, pspecs), _named(batch_sds, mesh, bspecs),
@@ -208,9 +220,10 @@ def _decode_artifacts(cfg: ModelConfig, shape: InputShape, mesh, axes,
     b = shape.global_batch
     params_sds = specs_lib.params_specs(cfg)
     cache_sds = specs_lib.cache_specs(cfg, b, shape.seq_len)
-    pspecs = shd.param_pspecs(params_sds, axes, _mesh_sizes(mesh),
-                              fsdp=not opts.serve_resident)
-    cspecs = shd.cache_pspecs(cfg, cache_sds, b, axes, _mesh_sizes(mesh))
+    pspecs = _require_shd().param_pspecs(
+        params_sds, axes, _mesh_sizes(mesh), fsdp=not opts.serve_resident)
+    cspecs = _require_shd().cache_pspecs(
+        cfg, cache_sds, b, axes, _mesh_sizes(mesh))
     tok_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
     t_sds = jax.ShapeDtypeStruct((), jnp.int32)
     batch_ax = axes.batch_axes if b >= 16 else ()
@@ -263,15 +276,16 @@ def _gossip_train_artifacts(cfg: ModelConfig, shape: InputShape, mesh, axes,
         lambda l: jax.ShapeDtypeStruct((n_pods, b_local) + l.shape[1:],
                                        l.dtype), batch_one)
 
-    pod_axes = shd.MeshAxes()  # within-pod layout (data, model)
-    pspecs = shd.param_pspecs(state_sds.params, pod_axes, _mesh_sizes(mesh))
+    pod_axes = _require_shd().MeshAxes()  # within-pod layout (data, model)
+    pspecs = _require_shd().param_pspecs(
+        state_sds.params, pod_axes, _mesh_sizes(mesh))
     prepend = lambda spec: P("pod", *tuple(spec))
     pod_pspecs = jax.tree.map(prepend, pspecs,
                               is_leaf=lambda x: isinstance(x, P))
     state_specs_tree = state_sds._replace(
         params=pod_pspecs, opt_state={"m": pod_pspecs, "v": pod_pspecs},
         step=P())
-    bspec_one = shd.batch_pspecs(cfg, shape, pod_axes)
+    bspec_one = _require_shd().batch_pspecs(cfg, shape, pod_axes)
     bspecs = jax.tree.map(prepend, bspec_one,
                           is_leaf=lambda x: isinstance(x, P))
 

@@ -28,9 +28,10 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import mixing, topology as topo
+from repro.core import executor as exec_engine, mixing, topology as topo
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +114,54 @@ def make_gossip_step(local_step: Callable, gcfg: GossipConfig, *,
         return new_states._replace(params=mixed), metrics
 
     return jax.jit(step, static_argnames=("do_mix",))
+
+
+def mix_schedule(rounds: int, mix_every: int) -> np.ndarray:
+    """(T,) bool: gossip-mix on every ``mix_every``-th round (the last round
+    of each local-step window), i.e. ``(t + 1) % mix_every == 0``."""
+    return (np.arange(rounds) + 1) % mix_every == 0
+
+
+def make_gossip_block_runner(local_step: Callable, gcfg: GossipConfig
+                             ) -> Callable:
+    """Round-block gossip-DP: many local-step+mix rounds per device dispatch.
+
+    The per-round ``make_gossip_step`` path dispatches one jitted program per
+    round from Python; this runner drives the identical round body through
+    the shared scan executor (``repro.core.executor``) instead — batches,
+    mixing matrices, active masks and mix flags are pre-staged as stacked
+    (T, ...) schedule arrays, and per-round train metrics come back stacked
+    in one end-of-run fetch. Dense-mix (vmap) path only; the shard_map/
+    ppermute mesh path keeps the per-round driver.
+
+    Returns ``run(states, batches, w, active, mix, *, block_size=32)`` with
+      batches: (T, K, ...) stacked batch pytree,
+      w:       (T, K, K) per-round mixing matrices,
+      active:  (T, K) participation masks,
+      mix:     (T,) bool gossip-mix flags (see ``mix_schedule``),
+    returning (states, metrics) where metrics leaves are (T, ...) stacks.
+    NOTE: ``states`` buffers are donated — do not reuse the argument.
+    """
+    def step_fn(states, _ctx, sched_t):
+        new_states, metrics = jax.vmap(local_step)(states, sched_t["batch"])
+        active = sched_t["active"]
+        keep = jax.tree.map(
+            lambda a, b: jnp.where(
+                active.reshape((-1,) + (1,) * (a.ndim - 1)) > 0, a, b),
+            new_states, states)
+        mixed = lax.cond(
+            sched_t["mix"],
+            lambda p: mix_pytree(sched_t["w"], p, gcfg.gossip_steps),
+            lambda p: p, keep.params)
+        return keep._replace(params=mixed), metrics
+
+    def run(states, batches, w, active, mix, *, block_size: int = 32):
+        sched = {"batch": batches, "w": w, "active": active, "mix": mix}
+        res = exec_engine.run_round_blocks(step_fn, states, sched,
+                                           block_size=block_size)
+        return res.state, res.aux
+
+    return run
 
 
 def replicate_state(state: Any, k: int) -> Any:

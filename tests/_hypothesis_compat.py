@@ -1,0 +1,59 @@
+"""Deterministic fallback for the optional ``hypothesis`` dependency.
+
+``hypothesis`` is listed in requirements-dev.txt but is not required to run
+the suite: when it is installed, this module re-exports the real
+``given``/``settings``/``strategies``; when it is missing, the property
+tests degrade to a fixed number of seeded pseudo-random draws per strategy
+(same coverage shape, fully deterministic, no shrinking).
+
+Usage in test modules:
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+        @staticmethod
+        def floats(lo, hi):
+            return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(
+                lambda rng: options[int(rng.integers(0, len(options)))])
+
+    def settings(**_kwargs):
+        return lambda fn: fn
+
+    def given(**strategies):
+        def decorate(fn):
+            def run_examples():
+                rng = _np.random.default_rng(0)
+                for _ in range(_FALLBACK_EXAMPLES):
+                    fn(**{name: strat.draw(rng)
+                          for name, strat in sorted(strategies.items())})
+
+            run_examples.__name__ = fn.__name__
+            run_examples.__doc__ = fn.__doc__
+            return run_examples
+
+        return decorate

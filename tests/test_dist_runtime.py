@@ -10,6 +10,10 @@ import textwrap
 
 import pytest
 
+# the multi-host shard_map runtime is a roadmap item (see ROADMAP.md "Open
+# items"); skip until the repro.dist package lands
+pytest.importorskip("repro.dist", reason="repro.dist runtime not built yet")
+
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
