@@ -3,7 +3,9 @@ PY := PYTHONPATH=src:. python
 
 .PHONY: verify test quick bench bench-smoke
 
-# tier-1 gate: the full suite + the round-executor benchmark in smoke mode
+# tier-1 gate: the full suite + the round-executor benchmark in smoke mode,
+# checked against the committed BENCH_cola.json trajectory (>20% slowdown
+# fails; tune with BENCH_TOLERANCE)
 verify: test bench-smoke
 
 test:
@@ -18,4 +20,4 @@ bench:
 	$(PY) benchmarks/round_bench.py
 
 bench-smoke:
-	$(PY) benchmarks/round_bench.py --smoke
+	$(PY) benchmarks/round_bench.py --smoke --check

@@ -1,44 +1,75 @@
-"""Rounds/sec of the CoLA drivers: per-round Python loop vs round-block scan.
+"""Rounds/sec of the CoLA drivers: per-round loop vs round-block scan vs the
+shard_map distributed runtime.
 
 This is the framework-overhead benchmark behind the round-block engine
 (``repro.core.executor``): for the paper's regime — cheap local computation
 between communication rounds — the seed driver's per-round dispatch and its
 blocking metric sync dominate wall-clock. The block executor amortizes one
-dispatch over ``block_size`` rounds and records metrics on device.
+dispatch over ``block_size`` rounds and records metrics on device; the
+``repro.dist`` runtime rides the same engine, so its row documents the
+shard_map wrapper's overhead on a 1-device mesh (the collectives are
+identities there).
 
-Writes ``BENCH_cola.json`` at the repo root (the committed trajectory the
-CI smoke run and future PRs compare against). ``--smoke`` runs a reduced
-config and skips the JSON write.
+Writes ``BENCH_cola.json`` at the repo root — the committed trajectory CI
+compares against. The full run also records a ``smoke_baseline`` section
+with the reduced config CI actually executes; ``--check`` (the CI gate)
+compares the current measurement against the committed numbers and FAILS on
+a >20% rounds/sec regression (override with ``--tolerance`` or
+``BENCH_TOLERANCE``). The loop driver serves as the machine-speed control:
+committed bars scale with the measured loop drift, so a uniformly slower
+runner passes while an engine that lost its dispatch amortization fails.
+
+Usage:
+  PYTHONPATH=src:. python benchmarks/round_bench.py            # full + write
+  PYTHONPATH=src:. python benchmarks/round_bench.py --smoke --check  # CI gate
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import csv_row
 from repro.core import problems, topology as topo
 from repro.core.cola import ColaConfig, run_cola
 from repro.data import synthetic
+from repro.dist.runtime import run_dist_cola
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH_PATH = ROOT / "BENCH_cola.json"
+
+# rounds/sec keys the --check gate enforces. The loop driver is the
+# machine-speed CONTROL (pure per-round dispatch, no engine to regress): its
+# measured/committed ratio estimates how much slower this machine is than
+# the recording one, and the engine keys' committed bars scale down by that
+# drift — so a globally-loaded runner passes while a block engine that
+# degenerated toward per-round dispatch still fails.
+_CONTROL = "loop_rounds_per_sec"
+_GATED = ("block_rounds_per_sec", "dist_block_rounds_per_sec")
 
 
-def _bench_case(prob, graph, cfg, rounds, record_every, **kwargs):
-    """Wall-clock one full run (after a warmup run that owns compilation)."""
-    run_cola(prob, graph, cfg, rounds, record_every=record_every, **kwargs)
-    t0 = time.perf_counter()
-    res = run_cola(prob, graph, cfg, rounds, record_every=record_every,
-                   **kwargs)
-    jax.block_until_ready(res.state.x_parts)
-    return rounds / (time.perf_counter() - t0), res
+def _bench_case(runner, rounds, repeats: int = 3):
+    """Best-of-``repeats`` wall-clock (after a warmup run that owns
+    compilation) — scheduler noise slows individual runs, never speeds them,
+    so max rounds/sec is the stable statistic for the regression gate."""
+    runner()
+    best = 0.0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = runner()
+        jax.block_until_ready(res.state.x_parts)
+        best = max(best, rounds / (time.perf_counter() - t0))
+    return best, res
 
 
-def run(smoke: bool = False) -> dict:
+def bench_config(smoke: bool = False) -> dict:
     rounds = 50 if smoke else 200
     k = 16
     n_samples, n_features = (128, 64) if smoke else (256, 128)
@@ -47,39 +78,113 @@ def run(smoke: bool = False) -> dict:
     prob = problems.ridge_primal(jnp.asarray(x), jnp.asarray(y), 1e-2)
     graph = topo.ring(k)
     cfg = ColaConfig(kappa=1.0)
+    mesh = jax.make_mesh((1,), ("data",))
+    tag = f"K={k},T={rounds}"
 
     csv_row("fig", "executor", "case", "rounds_per_sec")
-    loop_rps, loop_res = _bench_case(prob, graph, cfg, rounds, record_every,
-                                     executor="loop")
-    csv_row("round_bench", "loop", f"K={k},T={rounds}", f"{loop_rps:.1f}")
-    block_rps, block_res = _bench_case(prob, graph, cfg, rounds, record_every,
-                                       executor="block", block_size=64)
-    csv_row("round_bench", "block", f"K={k},T={rounds}", f"{block_rps:.1f}")
+    loop_rps, loop_res = _bench_case(
+        lambda: run_cola(prob, graph, cfg, rounds, record_every=record_every,
+                         executor="loop"), rounds)
+    csv_row("round_bench", "loop", tag, f"{loop_rps:.1f}")
+    block_rps, block_res = _bench_case(
+        lambda: run_cola(prob, graph, cfg, rounds, record_every=record_every,
+                         executor="block", block_size=64), rounds)
+    csv_row("round_bench", "block", tag, f"{block_rps:.1f}")
+    dist_rps, dist_res = _bench_case(
+        lambda: run_dist_cola(prob, graph, cfg, mesh, rounds,
+                              record_every=record_every, comm="dense",
+                              block_size=64), rounds)
+    csv_row("round_bench", "dist_block", tag, f"{dist_rps:.1f}")
     speedup = block_rps / loop_rps
-    csv_row("round_bench", "speedup", f"K={k},T={rounds}", f"{speedup:.2f}x")
+    csv_row("round_bench", "speedup", tag, f"{speedup:.2f}x")
 
-    # the two drivers must agree (bitwise on state; tests assert it too)
-    import numpy as np
+    # the three drivers must agree (bitwise on state; tests assert it too)
     assert np.array_equal(np.asarray(loop_res.state.x_parts),
                           np.asarray(block_res.state.x_parts)), \
         "block executor diverged from the loop driver"
+    assert np.array_equal(np.asarray(block_res.state.x_parts),
+                          np.asarray(dist_res.state.x_parts)), \
+        "dist runtime diverged from the block executor"
 
-    result = {
-        "bench": "cola_round_executor",
+    return {
         "config": {"K": k, "rounds": rounds, "n_samples": n_samples,
                    "n_features": n_features, "record_every": record_every,
                    "kappa": cfg.kappa, "topology": "ring",
                    "backend": jax.default_backend()},
         "loop_rounds_per_sec": round(loop_rps, 2),
         "block_rounds_per_sec": round(block_rps, 2),
+        "dist_block_rounds_per_sec": round(dist_rps, 2),
         "speedup": round(speedup, 2),
         "final_primal": {"loop": loop_res.history["primal"][-1],
-                         "block": block_res.history["primal"][-1]},
+                         "block": block_res.history["primal"][-1],
+                         "dist": dist_res.history["primal"][-1]},
     }
+
+
+def check_regression(result: dict, smoke: bool, tolerance: float) -> list[str]:
+    """Compare measured rounds/sec against the committed BENCH_cola.json.
+
+    Each engine key must stay above ``(1 - tolerance) * committed * drift``
+    where ``drift = min(1, measured_loop / committed_loop)`` is the
+    machine-speed correction from the loop control (a faster machine keeps
+    the full committed bar; a loaded/slower one lowers it proportionally
+    instead of failing spuriously). Missing baseline file/section is a
+    failure too — the gate must never pass vacuously.
+    """
+    if not BENCH_PATH.exists():
+        return [f"no committed baseline at {BENCH_PATH}"]
+    committed = json.loads(BENCH_PATH.read_text())
+    baseline = committed.get("smoke_baseline") if smoke else committed
+    if not baseline:
+        return ["committed BENCH_cola.json has no smoke_baseline section"]
+    if not baseline.get(_CONTROL):
+        return [f"baseline missing the {_CONTROL} control"]
+    drift = min(1.0, result[_CONTROL] / baseline[_CONTROL])
+    csv_row("round_bench", "gate", "machine_drift", f"{drift:.2f}")
+    failures = []
+    for key in _GATED:
+        base = baseline.get(key)
+        if base is None:
+            failures.append(f"baseline missing {key}")
+            continue
+        got, bar = result[key], (1.0 - tolerance) * baseline[key] * drift
+        if got < bar:
+            failures.append(
+                f"{key}: {got:.1f} rounds/s is below the drift-adjusted bar "
+                f"{bar:.1f} (committed {base:.1f}, machine drift "
+                f"{drift:.2f}, tolerance {tolerance:.0%})")
+        csv_row("round_bench", "gate", key,
+                f"{got:.1f} vs bar {bar:.1f} (committed {base:.1f})")
+    return failures
+
+
+def run(smoke: bool = False, check: bool = False,
+        tolerance: float = 0.2) -> dict:
+    result = {"bench": "cola_round_executor"}
+    result.update(bench_config(smoke))
+    if check:
+        # gate against the COMMITTED numbers before any rewrite below —
+        # checking after the write would compare the measurement to itself
+        failures = check_regression(result, smoke, tolerance)
+        if failures:
+            for msg in failures:
+                print(f"REGRESSION: {msg}", file=sys.stderr)
+            sys.exit(1)
+        csv_row("round_bench", "gate", "result", "ok")
     if not smoke:
-        out = ROOT / "BENCH_cola.json"
-        out.write_text(json.dumps(result, indent=2) + "\n")
-        csv_row("round_bench", "json", str(out), "written")
+        # the committed trajectory carries BOTH configs: the full numbers
+        # and the reduced config CI re-measures under --smoke --check. The
+        # smoke floor is the per-key min of two runs (control included) so
+        # run-to-run noise on the recording machine doesn't inflate the
+        # committed bar; speedup is recomputed from the floored values.
+        smoke_a, smoke_b = bench_config(True), bench_config(True)
+        for key in (_CONTROL,) + _GATED:
+            smoke_a[key] = min(smoke_a[key], smoke_b[key])
+        smoke_a["speedup"] = round(
+            smoke_a["block_rounds_per_sec"] / smoke_a[_CONTROL], 2)
+        result["smoke_baseline"] = smoke_a
+        BENCH_PATH.write_text(json.dumps(result, indent=2) + "\n")
+        csv_row("round_bench", "json", str(BENCH_PATH), "written")
     return result
 
 
@@ -87,5 +192,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config, no BENCH_cola.json write")
+    ap.add_argument("--check", action="store_true",
+                    help="fail on >tolerance rounds/sec slowdown vs the "
+                         "committed BENCH_cola.json")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("BENCH_TOLERANCE", "0.2")))
     args = ap.parse_args()
-    run(smoke=args.smoke)
+    run(smoke=args.smoke, check=args.check, tolerance=args.tolerance)

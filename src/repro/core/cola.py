@@ -108,26 +108,39 @@ def init_state(problem: Problem, part: Partition) -> ColaState:
     )
 
 
-def _round_body(problem: Problem, part: Partition, cfg: ColaConfig
-                ) -> Callable:
+def _round_body(problem: Problem, part: Partition, cfg: ColaConfig, *,
+                mix_fn: Callable | None = None,
+                grad_mix_fn: Callable | None = None) -> Callable:
     """The pure one-round function of Algorithm 1, shared verbatim by the
-    per-round loop (``make_round``) and the round-block scan executor —
-    which is what makes the two drivers bitwise identical."""
+    per-round loop (``make_round``), the round-block scan executor, and the
+    shard_map distributed runtime (``repro.dist.runtime``) — which is what
+    makes the drivers bitwise identical.
+
+    ``mix_fn(w, v_stack)`` applies the B gossip steps (default: the dense
+    ``mixing.mix_power`` on the full stacked state); ``grad_mix_fn(w, grads)``
+    applies one mixing step for ``grad_mode='mixed'``. The distributed
+    runtime swaps in collective (ppermute/all-gather) implementations while
+    every node-local op stays this exact code.
+    """
     k = part.num_nodes
     sigma = cfg.resolved_sigma(k)
     spec = SubproblemSpec(sigma_over_tau=sigma / problem.tau, inv_k=1.0 / k)
+    if mix_fn is None:
+        mix_fn = lambda w, v: mixing.mix_power(w, v, cfg.gossip_steps)
+    if grad_mix_fn is None:
+        grad_mix_fn = mixing.dense_mix
 
     def one_round(state: ColaState, env: ColaEnv, w: jax.Array,
                   active: jax.Array,
                   budgets: jax.Array | None = None) -> ColaState:
         # Step 4: gossip mixing of the local estimates (B steps, App. E.2).
-        v_half = mixing.mix_power(w, state.v_stack, cfg.gossip_steps)
+        v_half = mix_fn(w, state.v_stack)
 
         # Gradient each node uses for its subproblem.
         grads = jax.vmap(problem.grad_f)(v_half)
         if cfg.grad_mode == "mixed":
             # App. E.1: use the neighborhood-mixed gradient sum_l W_kl grad f(v_l).
-            grads = mixing.dense_mix(w, grads)
+            grads = grad_mix_fn(w, grads)
 
         # Step 5: Theta-approximate local subproblem solve (kappa * n_k CD
         # steps; per-node budgets model heterogeneous Theta_k, Definition 5).
@@ -230,8 +243,11 @@ def _run_cola_loop(problem, part, env, state, graph, cfg, rounds, record_every,
     every ``record_every`` rounds (the seed behaviour, kept for equivalence
     tests and as the benchmark baseline)."""
     k = part.num_nodes
+    # content-addressed: a rebuilt identical Problem reuses the driver, a
+    # same-address different-content Problem misses (see executor.fingerprint)
+    prob_fp = exec_engine.fingerprint(problem)
     one_round = exec_engine.cached_driver(
-        ("cola-round", id(problem), part, cfg),
+        ("cola-round", prob_fp, part, cfg),
         lambda: make_round(problem, part, cfg))
     rng = np.random.default_rng(seed)
 
@@ -242,7 +258,7 @@ def _run_cola_loop(problem, part, env, state, graph, cfg, rounds, record_every,
     history.update({name: [] for name in _METRICS})
 
     report = exec_engine.cached_driver(
-        ("cola-report", id(problem), part),
+        ("cola-report", prob_fp, part),
         lambda: jax.jit(
             lambda s: gap_report(problem, part, s.x_parts, s.v_stack)))
 
@@ -361,8 +377,8 @@ def _run_cola_block(problem, part, env, state, graph, cfg, rounds,
     res = exec_engine.run_round_blocks(
         step_fn, state, sched, context=env, record_fn=record_fn,
         record_mask=rec, block_size=block_size,
-        cache_key=("cola-block", id(problem), part, cfg, has_budget,
-                   has_reset))
+        cache_key=("cola-block", exec_engine.fingerprint(problem), part, cfg,
+                   has_budget, has_reset))
 
     history: dict = {"round": [int(t) for t in np.nonzero(rec)[0]]}
     for j, name in enumerate(_METRICS):
@@ -371,13 +387,22 @@ def _run_cola_block(problem, part, env, state, graph, cfg, rounds,
 
 
 def _reset_leavers(state: ColaState, env: ColaEnv, part: Partition,
-                   leavers: np.ndarray) -> ColaState:
+                   leavers: np.ndarray,
+                   total_fn: Callable | None = None) -> ColaState:
     """Fig.-6 model: zero x_[k] of leaving nodes; every node subtracts
-    A_[k] x_[k] from its local estimate so (1/K) sum v_k = A x still holds."""
+    A_[k] x_[k] from its local estimate so (1/K) sum v_k = A x still holds.
+
+    ``total_fn(contrib) -> (d,)`` reduces the per-node contributions over
+    ALL K nodes; the default sums the stacked axis, the shard_map runtime
+    passes a psum-augmented reduction so the one invariant implementation
+    serves both drivers.
+    """
     leave = jnp.asarray(leavers)
     contrib = jnp.einsum("kdn,kn->kd", env.a_parts,
                          state.x_parts * leave[:, None])  # (K, d)
-    total = jnp.sum(contrib, axis=0)                      # A_[k] x_[k] summed
+    if total_fn is None:
+        total_fn = lambda c: jnp.sum(c, axis=0)           # A_[k] x_[k] summed
+    total = total_fn(contrib)
     x_new = jnp.where(leave[:, None], 0.0, state.x_parts)
     v_new = state.v_stack - total[None, :]
     return ColaState(x_parts=x_new, v_stack=v_new)

@@ -22,6 +22,10 @@ optimizer (``repro.optim.gossip``).
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
+import hashlib
+import types
 import warnings
 from collections import OrderedDict
 from functools import partial
@@ -35,11 +39,173 @@ from jax import lax
 # Compiled-driver cache: jit only caches on the *function object*, and every
 # run_cola/run_round_blocks call builds fresh closures, so without this each
 # run re-traces and re-compiles its whole program — which dominates wall
-# clock for short runs. Entries hold the jitted closure (which keeps its
-# captured Problem/etc. alive, so an id()-based key cannot be reused while
-# the entry lives); bounded LRU.
+# clock for short runs. Keys must be CONTENT-addressed (see ``fingerprint``):
+# an id()-based key is wrong twice over — a rebuilt object at a recycled
+# address silently reuses a driver whose closure baked in the OLD contents,
+# and while an entry is live its closure pins the whole captured object.
+# Bounded LRU.
 _DRIVER_CACHE: OrderedDict = OrderedDict()
 _DRIVER_CACHE_SIZE = 64
+
+
+def _code_names(code: types.CodeType) -> set:
+    """All global/attribute names a code object can reference, including
+    from nested code (lambdas, comprehensions) — a global read inside a
+    nested lambda bakes into the compiled driver just like a top-level one."""
+    names = set(code.co_names)
+    for c in code.co_consts:
+        if isinstance(c, types.CodeType):
+            names |= _code_names(c)
+    return names
+
+
+def _fp_update(h, obj, seen: set) -> None:
+    """Feed ``obj``'s content (not its address) into the hash ``h``.
+
+    Arrays hash by shape/dtype/bytes; functions hash by bytecode plus the
+    contents of their closure cells and defaults — which is exactly the set
+    of constants a jitted driver bakes into its executable (e.g. the label
+    vector captured by ``Problem.grad_f``). ``seen`` guards cycles.
+    """
+    if isinstance(obj, (types.FunctionType, dict)) or (
+            dataclasses.is_dataclass(obj) and not isinstance(obj, type)):
+        if id(obj) in seen:
+            h.update(b"<cycle>")
+            return
+        seen.add(id(obj))
+    h.update(type(obj).__name__.encode())
+    if obj is None or isinstance(obj, (bool, int, float, complex, str,
+                                       bytes, np.generic)):
+        h.update(repr(obj).encode())
+    elif isinstance(obj, (np.ndarray, jax.Array)):
+        arr = np.asarray(obj)
+        h.update(str(arr.shape).encode())
+        h.update(str(arr.dtype).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    elif isinstance(obj, jax.ShapeDtypeStruct):
+        h.update(str(obj.shape).encode())
+        h.update(str(obj.dtype).encode())
+    elif isinstance(obj, (tuple, list)):
+        for x in obj:
+            _fp_update(h, x, seen)
+    elif isinstance(obj, dict):
+        for k in sorted(obj, key=repr):
+            _fp_update(h, k, seen)
+            _fp_update(h, obj[k], seen)
+    elif isinstance(obj, functools.partial):
+        _fp_update(h, obj.func, seen)
+        _fp_update(h, obj.args, seen)
+        _fp_update(h, dict(obj.keywords), seen)
+    elif isinstance(obj, types.FunctionType):
+        _fp_update(h, obj.__code__, seen)
+        if obj.__closure__:
+            for cell in obj.__closure__:
+                try:
+                    _fp_update(h, cell.cell_contents, seen)
+                except ValueError:  # empty cell
+                    h.update(b"<empty-cell>")
+        _fp_update(h, obj.__defaults__, seen)
+        _fp_update(h, obj.__kwdefaults__, seen)
+        # module-level references: a function body that reads SCALE or calls
+        # other_fn bakes their current values into the compiled driver, so
+        # they are part of the content. Scalars/arrays hash by value; heavier
+        # globals (modules, functions, classes) by qualified name — deep
+        # enough to tell jnp.exp from jnp.log without walking module graphs.
+        for name in sorted(_code_names(obj.__code__)):
+            if name not in obj.__globals__:
+                continue
+            g = obj.__globals__[name]
+            h.update(name.encode())
+            if isinstance(g, types.ModuleType):
+                h.update(g.__name__.encode())
+            elif isinstance(g, (types.FunctionType, types.BuiltinFunctionType,
+                                type)):
+                h.update(f"{getattr(g, '__module__', '')}."
+                         f"{getattr(g, '__qualname__', '')}".encode())
+            elif g is None or isinstance(g, (bool, int, float, complex, str,
+                                             bytes, np.generic, np.ndarray,
+                                             jax.Array, tuple)):
+                _fp_update(h, g, seen)
+            else:
+                h.update(type(g).__qualname__.encode())
+    elif isinstance(obj, types.MethodType):
+        _fp_update(h, obj.__func__, seen)
+        _fp_update(h, obj.__self__, seen)
+    elif isinstance(obj, types.CodeType):
+        h.update(obj.co_code)
+        # co_names disambiguates same-bytecode bodies that differ only in
+        # which attribute/global they reference (exp vs log); consts recurse
+        # fully so nested lambdas/comprehensions hash their own literals too
+        h.update(" ".join(obj.co_names).encode())
+        for c in obj.co_consts:
+            _fp_update(h, c, seen)
+    elif dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        for f in dataclasses.fields(obj):
+            h.update(f.name.encode())
+            _fp_update(h, getattr(obj, f.name), seen)
+    else:
+        r = repr(obj)
+        if " at 0x" in r:
+            # a default repr is just class+address: hashing it would quietly
+            # turn content-addressing back into address-keying (without even
+            # the old scheme's liveness pin). Hash the instance dict when
+            # there is one; otherwise refuse rather than alias.
+            d = getattr(obj, "__dict__", None)
+            if d:
+                if id(obj) in seen:
+                    h.update(b"<cycle>")
+                    return
+                seen.add(id(obj))
+                h.update(type(obj).__qualname__.encode())
+                _fp_update(h, dict(d), seen)
+            else:
+                raise TypeError(
+                    f"fingerprint: cannot content-hash {type(obj)!r} "
+                    "(address-based repr and no __dict__)")
+        else:
+            h.update(r.encode())
+
+
+_FP_MEMO_ATTR = "_fingerprint_memo"
+
+
+def fingerprint(*objs: Any) -> str:
+    """Content-addressed digest of ``objs`` for driver-cache keys.
+
+    Two separately-built objects with identical contents map to the SAME
+    key (so rebuilding an identical Problem per call still hits the cache),
+    and objects that differ anywhere a jitted closure could observe them —
+    array data, closure constants, hyperparameters — map to different keys
+    even if one is constructed at the other's recycled address.
+
+    Hashing is O(bytes of captured arrays) — for a Problem that is a D2H
+    copy + SHA256 of the (d, n) data matrix — so a single frozen-dataclass
+    argument memoizes its digest on the instance: repeated runs over one
+    large Problem hash it once. (Sound because frozen dataclasses over
+    immutable jax arrays cannot change content; a dataclass with mutable
+    np fields mutated in place would need the memo cleared.)
+    """
+    def memoizable(o):
+        # only FROZEN dataclasses: a mutable one could change content after
+        # the memo was written and silently return a stale digest
+        return (dataclasses.is_dataclass(o) and not isinstance(o, type)
+                and type(o).__dataclass_params__.frozen)
+
+    if len(objs) == 1 and memoizable(objs[0]):
+        memo = getattr(objs[0], _FP_MEMO_ATTR, None)
+        if memo is not None:
+            return memo
+    h = hashlib.sha256()
+    seen: set = set()
+    for o in objs:
+        _fp_update(h, o, seen)
+    digest = h.hexdigest()
+    if len(objs) == 1 and memoizable(objs[0]):
+        try:
+            object.__setattr__(objs[0], _FP_MEMO_ATTR, digest)
+        except (AttributeError, TypeError):  # __slots__ etc. — just rehash
+            pass
+    return digest
 
 
 def clear_driver_cache() -> None:
@@ -52,8 +218,9 @@ def cached_driver(key, build: Callable[[], Callable]) -> Callable:
     """Return (building on miss) the jitted driver for ``key``.
 
     ``key`` must uniquely determine the semantics AND closure constants of
-    the built function (include id() of captured objects). ``key=None``
-    bypasses the cache.
+    the built function — use ``fingerprint()`` for captured objects (NEVER
+    ``id()``: a rebuilt object at a recycled address would silently reuse
+    the wrong compiled driver). ``key=None`` bypasses the cache.
     """
     if key is None:
         return build()
@@ -117,7 +284,7 @@ def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
       cache_key: when set, the jitted block program is reused across calls
         (see ``cached_driver``) so repeated runs skip trace+compile. The key
         must pin down ``step_fn``/``record_fn`` semantics and captured
-        constants — include ``id()`` of closed-over objects.
+        constants — use ``fingerprint()`` for closed-over objects.
 
     Returns:
       BlockRunResult(state, metrics, aux): ``metrics`` holds the recorded

@@ -21,6 +21,19 @@ import jax.numpy as jnp
 from jax import lax
 
 
+def shard_map(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` with a fallback to the pre-0.5 experimental API.
+
+    The installed jax (0.4.x) only ships ``jax.experimental.shard_map``;
+    newer releases promote it to ``jax.shard_map``. Every shard_map user in
+    this repo goes through this shim so the mesh paths work on both.
+    """
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
 def dense_mix(w: jax.Array, v_stack: jax.Array) -> jax.Array:
     """v'_k = sum_l W_kl v_l for stacked node state.
 
@@ -55,8 +68,10 @@ def mix_power(w: jax.Array, v_stack: jax.Array, steps: int) -> jax.Array:
 def banded_weights(w: jax.Array, conn: int) -> jax.Array:
     """Extract (2*conn+1,) banded weights [w_-c..w_0..w_+c] from a circulant W.
 
-    Requires W to be circulant-banded (ring or c-connected cycle with uniform
-    Metropolis weights); raises if mass is lost.
+    ASSUMES W is circulant-banded (ring or c-connected cycle with uniform
+    Metropolis weights); ``w`` is usually traced here, so no mass check is
+    possible — callers with a concrete W validate via
+    ``check_circulant_band`` before entering jit.
     """
     k = w.shape[0]
     offs = jnp.arange(-conn, conn + 1)
@@ -64,6 +79,27 @@ def banded_weights(w: jax.Array, conn: int) -> jax.Array:
     cols = (rows[None, :] + offs[:, None]) % k
     band = w[rows[None, :], cols]  # (2c+1, K)
     return band[:, 0]
+
+
+def check_circulant_band(w, conn: int, atol: float = 1e-6) -> None:
+    """Raise ValueError unless the CONCRETE matrix ``w`` is circulant with
+    bandwidth <= ``conn`` — i.e. the banded ppermute mixing reproduces the
+    full W matmul exactly (no weight mass outside the band, no row
+    variation the band extraction would silently drop)."""
+    import numpy as np
+
+    w = np.asarray(w)
+    k = w.shape[0]
+    band = np.asarray(banded_weights(jnp.asarray(w), conn))
+    rows, offs = np.arange(k), np.arange(-conn, conn + 1)
+    rebuilt = np.zeros_like(w)
+    rebuilt[rows[None, :], (rows[None, :] + offs[:, None]) % k] = \
+        band[:, None]
+    if not np.allclose(w, rebuilt, atol=atol):
+        raise ValueError(
+            f"W is not circulant-banded with connectivity {conn}: banded "
+            f"ppermute mixing would drop {np.abs(w - rebuilt).max():.3g} of "
+            "weight mass — use the dense mixing path for this graph")
 
 
 def ring_mix_ppermute(v_local: jax.Array, axis_name: str, weights: jax.Array,
@@ -77,7 +113,9 @@ def ring_mix_ppermute(v_local: jax.Array, axis_name: str, weights: jax.Array,
       weights: (2*conn+1,) band [w_{-conn}, ..., w_0, ..., w_{+conn}].
       conn: connectivity (1 = ring, 2 = 2-connected cycle, ...).
     """
-    k = lax.axis_size(axis_name)
+    # lax.axis_size only exists on newer jax; psum of 1 is the portable spelling
+    k = (lax.axis_size(axis_name) if hasattr(lax, "axis_size")
+         else lax.psum(1, axis_name))
     out = weights[conn] * v_local
     for off in range(1, conn + 1):
         # receive from left neighbor at distance `off`

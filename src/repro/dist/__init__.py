@@ -1,0 +1,39 @@
+"""``repro.dist`` — sharding rules + shard_map runtime for decentralized runs.
+
+This package is the bridge between the paper's setting (K machines, an
+arbitrary communication graph, no coordinator — He et al., NIPS 2018,
+Algorithm 1) and a JAX mesh. The mapping from Algorithm-1 quantities to
+sharding rules:
+
+=====================  ==========================  =========================
+Paper quantity          Buffer (shape)              PartitionSpec
+=====================  ==========================  =========================
+local iterate x_[k]     ``x_parts`` (K, n_k)        ``P(node_axis)``
+local estimate v_k      ``v_stack`` (K, d)          ``P(node_axis)``
+data columns A_[k]      ``a_parts`` (K, d, n_k)     ``P(node_axis)``
+Gram blocks A^T A       ``gram_parts`` (K,n_k,n_k)  ``P(node_axis)``
+mixing matrix W         ``w`` (K, K)                ``P()`` (replicated)
+churn mask / Theta_k    ``active``/``budgets`` (K)  ``P(node_axis)``
+metric rows (Lemma 2)   ``(m,)`` per record round   ``P()`` (replicated)
+=====================  ==========================  =========================
+
+Step 4's gossip exchange v_k <- sum_l W_kl v_l becomes ``lax.ppermute``
+neighbor pushes for circulant graphs (``comm="ring"``: deg(k)·|v| bytes per
+link, the paper's communication-efficiency argument on ICI hardware) or an
+all-gather + W matmul for arbitrary graphs (``comm="dense"``). Everything
+node-local — the Theta-approximate CD solve of Eq. 1-2, steps 6-8's updates,
+churn freezing/reset — runs unchanged from the single-host simulator inside
+the shard_map body, and the parity suites assert the two runtimes agree
+bit-for-bit on a 1-device mesh.
+
+``sharding`` also carries the FSDP+TP rules for the deep-net zoo (the
+gossip-DP workload of ``repro.optim.gossip`` and the dry-run's production
+meshes).
+"""
+from repro.dist.sharding import (MeshAxes, batch_pspecs, cache_pspecs,
+                                 cola_env_pspecs, cola_state_pspecs,
+                                 param_pspecs)
+from repro.dist.runtime import run_dist_cola
+
+__all__ = ["MeshAxes", "batch_pspecs", "cache_pspecs", "cola_env_pspecs",
+           "cola_state_pspecs", "param_pspecs", "run_dist_cola"]

@@ -1,0 +1,207 @@
+"""``run_dist_cola``: the multi-host shard_map CoLA runtime.
+
+The single-host simulator (``repro.core.cola.run_cola``) keeps all K nodes
+stacked in one device's arrays; this driver lays the node axis over a mesh
+axis instead, so K paper-nodes execute as K/M node blocks on M devices with
+no coordinator. Three design rules make it bit-compatible with the simulator
+and as cheap to dispatch:
+
+* **same round body** — the per-round function is ``cola._round_body`` with
+  only the two mixing hooks swapped for collective implementations, so every
+  node-local op (CD solve, local updates, churn masking) is literally the
+  simulator's code;
+* **same executor** — rounds run through the round-block scan engine
+  (``repro.core.executor.run_round_blocks``): ``block_size`` rounds per
+  dispatch, schedules pre-materialized by the simulator's own
+  ``_materialize_schedule`` (identical rng consumption), metrics recorded on
+  device, state donated across blocks;
+* **neighbor exchange, not all-reduce** — ``comm="ring"`` mixes v via the
+  banded ``lax.ppermute`` ring from ``repro.core.mixing`` (deg(k)·|v| bytes
+  per link per gossip step, the paper's communication model); ``comm="dense"``
+  is the arbitrary-graph fallback (all-gather + W matmul) and the mode that
+  is bitwise identical to the simulator on a 1-device mesh.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import executor as exec_engine, mixing, topology as topo
+from repro.core.cola import (ColaConfig, RunResult, _METRICS,
+                             _materialize_schedule, _reset_leavers,
+                             _round_body, build_env, init_state)
+from repro.core.duality import gap_report
+from repro.core.partition import make_partition
+from repro.core.problems import Problem
+from repro.dist.sharding import cola_env_pspecs, cola_state_pspecs
+
+
+def _dist_mixers(axis: str, local_nodes: int, conn: int, comm: str,
+                 gossip_steps: int) -> tuple[Callable, Callable]:
+    """(mix_fn, grad_mix_fn) for the shard_map round body.
+
+    ``dense``: all-gather the (K, d) stack, fold W^B once (redundantly per
+    device, O(B K^3) — cheap next to the solve), mix, slice back this
+    device's node block. On a 1-device mesh every collective degenerates to
+    the identity, which is what makes the dense path bitwise equal to the
+    simulator there.
+
+    ``ring``: banded circulant mixing via ``ppermute`` neighbor pushes —
+    requires one node per device and a circulant W (ring / c-connected
+    cycle with Metropolis weights; churn reweighting breaks this).
+    """
+    if comm == "dense":
+        def steps_mix(w, stack, steps):
+            if steps <= 0:
+                return stack
+            full = lax.all_gather(stack, axis, tiled=True)      # (K, d)
+            mixed = mixing.mix_power(w, full, steps)
+            i = lax.axis_index(axis)
+            return lax.dynamic_slice_in_dim(mixed, i * local_nodes,
+                                            local_nodes)
+    elif comm == "ring":
+        if local_nodes != 1:
+            raise ValueError(
+                f"comm='ring' places one node per device; got {local_nodes} "
+                "nodes per device — use comm='dense' or a bigger mesh axis")
+
+        def steps_mix(w, stack, steps):
+            band = mixing.banded_weights(w, conn)
+            out = stack[0]
+            for _ in range(steps):
+                out = mixing.ring_mix_ppermute(out, axis, band, conn)
+            return out[None]
+    else:
+        raise ValueError(f"unknown comm {comm!r} (want 'dense' or 'ring')")
+
+    mix_fn = lambda w, v: steps_mix(w, v, gossip_steps)
+    grad_mix_fn = lambda w, g: steps_mix(w, g, 1)
+    return mix_fn, grad_mix_fn
+
+
+def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
+                  mesh, rounds: int, *, comm: str = "ring",
+                  axis: str | None = None, conn: int = 1,
+                  record_every: int = 1,
+                  active_schedule=None, budget_schedule=None,
+                  leave_mode: str = "freeze", seed: int = 0,
+                  w_override: np.ndarray | None = None,
+                  block_size: int = 64) -> RunResult:
+    """Run Algorithm 1 with the node axis sharded over ``mesh``.
+
+    Args mirror ``run_cola`` (same schedules, same rng consumption, same
+    history layout) plus:
+
+      mesh: a jax Mesh; the node axis K shards over ``axis`` (default: the
+        mesh's first axis), K % axis_size == 0, K/axis_size nodes per device.
+      comm: "ring" (ppermute neighbor exchange; circulant W, one node per
+        device) or "dense" (all-gather + W matmul; any W, any node count —
+        and bitwise identical to ``run_cola`` on a 1-device mesh).
+      conn: connectivity of the circulant band for ``comm="ring"``.
+
+    Returns ``RunResult(state, history)`` with the fully-stacked (K, ...)
+    state, like the simulator.
+    """
+    axis = axis or mesh.axis_names[0]
+    m = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    k = graph.num_nodes
+    if k % m != 0:
+        raise ValueError(f"K={k} nodes must divide over {m} devices on "
+                         f"mesh axis {axis!r}")
+    local_nodes = k // m
+    if comm == "ring" and active_schedule is not None:
+        raise ValueError("comm='ring' needs a circulant W; churn reweighting "
+                         "breaks that — use comm='dense' under churn")
+
+    base_w = (w_override if w_override is not None
+              else topo.metropolis_weights(graph))
+    if comm == "ring":
+        # W is round-constant on this path (no churn), so validate the
+        # banded ppermute mixing loses no weight mass before tracing
+        mixing.check_circulant_band(base_w, conn)
+
+    part = make_partition(problem.n, k)
+    env = build_env(problem, part,
+                    with_gram=cfg.use_gram(problem.d, part.block,
+                                           problem.a.dtype.itemsize))
+    state = init_state(problem, part)
+    dtype = problem.a.dtype
+    sched = _materialize_schedule(graph, rounds, active_schedule,
+                                  budget_schedule, leave_mode, seed, base_w,
+                                  dtype)
+    has_budget = "budgets" in sched
+    has_reset = "leavers" in sched
+
+    # lay the node axis of state + env over the mesh axis up front so the
+    # donated buffers never migrate between blocks
+    state_spec, env_spec = cola_state_pspecs(axis), cola_env_pspecs(axis)
+    state = jax.tree.map(
+        lambda x: jax.device_put(x, NamedSharding(mesh, state_spec)), state)
+    env = jax.tree.map(
+        lambda x: jax.device_put(x, NamedSharding(mesh, env_spec)), env)
+
+    mix_fn, grad_mix_fn = _dist_mixers(axis, local_nodes, conn, comm,
+                                       cfg.gossip_steps)
+    body = _round_body(problem, part, cfg, mix_fn=mix_fn,
+                       grad_mix_fn=grad_mix_fn)
+
+    def shard_round(st, env_l, w_t, active_l, budgets_l, leavers_l,
+                    reset_any):
+        if has_reset:
+            # the simulator's reset, with the node-sum completed across
+            # devices — shares the Lemma-1 invariant implementation
+            st = lax.cond(
+                reset_any,
+                lambda ss: _reset_leavers(
+                    ss, env_l, part, leavers_l,
+                    total_fn=lambda c: lax.psum(jnp.sum(c, axis=0), axis)),
+                lambda ss: ss, st)
+        return body(st, env_l, w_t, active_l,
+                    budgets_l if has_budget else None)
+
+    # node-axis operands shard over `axis`; W and the per-round scalars are
+    # replicated. ColaEnv.gram_parts may be None — a P(axis) prefix covers
+    # whichever leaves exist.
+    node, repl = P(axis), P()
+    shard_step = mixing.shard_map(
+        shard_round, mesh,
+        in_specs=(state_spec, env_spec, repl, node,
+                  node if has_budget else repl,
+                  node if has_reset else repl, repl),
+        out_specs=state_spec)
+
+    zeros_k = np.zeros((rounds,), dtype)
+
+    def step_fn(st, env_ctx, s_t):
+        st = shard_step(st, env_ctx, s_t["w"], s_t["active"],
+                        s_t["budgets"] if has_budget else s_t["_pad"],
+                        s_t["leavers"] if has_reset else s_t["_pad"],
+                        s_t["reset_any"] if has_reset else s_t["_pad"])
+        return st, None
+
+    sched = dict(sched)
+    sched["_pad"] = zeros_k  # scalar per-round filler for unused operands
+
+    def record_fn(st):
+        # the state arrays are ordinary (sharded) jit values here, outside
+        # the shard_map — this is gap_report exactly as the simulator runs
+        # it, GSPMD inserting the gathers
+        rep = gap_report(problem, part, st.x_parts, st.v_stack)
+        return jnp.stack([getattr(rep, name) for name in _METRICS])
+
+    rec = exec_engine.record_flags(rounds, record_every)
+    res = exec_engine.run_round_blocks(
+        step_fn, state, sched, context=env, record_fn=record_fn,
+        record_mask=rec, block_size=block_size,
+        cache_key=("cola-dist", exec_engine.fingerprint(problem), part, cfg,
+                   mesh, axis, comm, conn, has_budget, has_reset))
+
+    history: dict = {"round": [int(t) for t in np.nonzero(rec)[0]]}
+    for j, name in enumerate(_METRICS):
+        history[name] = [float(v) for v in res.metrics[:, j]]
+    return RunResult(state=res.state, history=history)

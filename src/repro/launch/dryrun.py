@@ -29,10 +29,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ARCHS, SHAPES, InputShape, ModelConfig, \
     get_config
-try:
-    from repro.dist import sharding as shd
-except ModuleNotFoundError:  # repro.dist is a roadmap item (ROADMAP.md);
-    shd = None               # the dry-run entry points require it, Opts don't
+from repro.dist import sharding as shd
 from repro.launch import mesh as mesh_lib
 from repro.launch import specs as specs_lib
 from repro.models import transformer
@@ -165,29 +162,32 @@ def model_ctx_opt(mesh, axes, opts: Opts) -> ModelCtx:
                     dispatch_groups=groups)
 
 
-def _require_shd():
-    if shd is None:
-        raise ModuleNotFoundError(
-            "the dry-run needs repro.dist.sharding, which is not built yet "
-            "— see ROADMAP.md Open items")
-    return shd
-
-
 def _mesh_sizes(mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _param_flags(kind: str, opts: Opts) -> dict:
+    """param_pspecs kwargs per shape kind — the ONE mapping shared by the
+    artifact builders and render_plan so the printed plan always matches
+    the lowered in_shardings: training always runs FSDP (+ expert grouping
+    with --moe-grouped); serving may keep weights resident (model-sharded
+    only, --serve-resident) and never groups experts."""
+    if kind == "train":
+        return dict(fsdp=True, moe_output_fsdp=opts.moe_grouped)
+    return dict(fsdp=not opts.serve_resident, moe_output_fsdp=False)
 
 
 def _train_artifacts(cfg: ModelConfig, shape: InputShape, mesh, axes,
                      hp: TrainHParams, opts: Opts = BASELINE):
     state_sds = specs_lib.state_specs(cfg, hp)
     batch_sds = specs_lib.input_specs(cfg, shape)
-    pspecs = _require_shd().param_pspecs(
+    pspecs = shd.param_pspecs(
         state_sds.params, axes, _mesh_sizes(mesh),
-        moe_output_fsdp=opts.moe_grouped)
+        **_param_flags("train", opts))
     # opt_state is {"m": params-like, "v": params-like}
     state_specs_tree = state_sds._replace(
         params=pspecs, opt_state={"m": pspecs, "v": pspecs}, step=P())
-    batch_specs_tree = _require_shd().batch_pspecs(cfg, shape, axes)
+    batch_specs_tree = shd.batch_pspecs(cfg, shape, axes)
     step_fn = make_train_step(cfg, hp, model_ctx_opt(mesh, axes, opts))
     in_shardings = (_named(state_sds, mesh, state_specs_tree),
                     _named(batch_sds, mesh, batch_specs_tree))
@@ -203,10 +203,10 @@ def _prefill_artifacts(cfg: ModelConfig, shape: InputShape, mesh, axes,
     params_sds = specs_lib.params_specs(cfg)
     batch_sds = specs_lib.input_specs(cfg, shape)
     cache_sds = specs_lib.cache_specs(cfg, shape.global_batch, shape.seq_len)
-    pspecs = _require_shd().param_pspecs(
-        params_sds, axes, _mesh_sizes(mesh), fsdp=not opts.serve_resident)
-    bspecs = _require_shd().batch_pspecs(cfg, shape, axes)
-    cspecs = _require_shd().cache_pspecs(
+    pspecs = shd.param_pspecs(
+        params_sds, axes, _mesh_sizes(mesh), **_param_flags("prefill", opts))
+    bspecs = shd.batch_pspecs(cfg, shape, axes)
+    cspecs = shd.cache_pspecs(
         cfg, cache_sds, shape.global_batch, axes, _mesh_sizes(mesh))
     step_fn = make_prefill_step(cfg, model_ctx_opt(mesh, axes, opts))
     fn = jax.jit(step_fn, in_shardings=(
@@ -220,9 +220,9 @@ def _decode_artifacts(cfg: ModelConfig, shape: InputShape, mesh, axes,
     b = shape.global_batch
     params_sds = specs_lib.params_specs(cfg)
     cache_sds = specs_lib.cache_specs(cfg, b, shape.seq_len)
-    pspecs = _require_shd().param_pspecs(
-        params_sds, axes, _mesh_sizes(mesh), fsdp=not opts.serve_resident)
-    cspecs = _require_shd().cache_pspecs(
+    pspecs = shd.param_pspecs(
+        params_sds, axes, _mesh_sizes(mesh), **_param_flags("decode", opts))
+    cspecs = shd.cache_pspecs(
         cfg, cache_sds, b, axes, _mesh_sizes(mesh))
     tok_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
     t_sds = jax.ShapeDtypeStruct((), jnp.int32)
@@ -276,8 +276,8 @@ def _gossip_train_artifacts(cfg: ModelConfig, shape: InputShape, mesh, axes,
         lambda l: jax.ShapeDtypeStruct((n_pods, b_local) + l.shape[1:],
                                        l.dtype), batch_one)
 
-    pod_axes = _require_shd().MeshAxes()  # within-pod layout (data, model)
-    pspecs = _require_shd().param_pspecs(
+    pod_axes = shd.MeshAxes()  # within-pod layout (data, model)
+    pspecs = shd.param_pspecs(
         state_sds.params, pod_axes, _mesh_sizes(mesh))
     prepend = lambda spec: P("pod", *tuple(spec))
     pod_pspecs = jax.tree.map(prepend, pspecs,
@@ -285,7 +285,7 @@ def _gossip_train_artifacts(cfg: ModelConfig, shape: InputShape, mesh, axes,
     state_specs_tree = state_sds._replace(
         params=pod_pspecs, opt_state={"m": pod_pspecs, "v": pod_pspecs},
         step=P())
-    bspec_one = _require_shd().batch_pspecs(cfg, shape, pod_axes)
+    bspec_one = shd.batch_pspecs(cfg, shape, pod_axes)
     bspecs = jax.tree.map(prepend, bspec_one,
                           is_leaf=lambda x: isinstance(x, P))
 
@@ -300,8 +300,9 @@ def _gossip_train_artifacts(cfg: ModelConfig, shape: InputShape, mesh, axes,
                     + 0.5 * other.astype(jnp.float32)).astype(p_local.dtype)
         return jax.tree.map(mix_leaf, params_stacked)
 
-    shard_mix = jax.shard_map(mix_params, mesh=mesh, in_specs=P("pod"),
-                              out_specs=P("pod"))
+    from repro.core import mixing
+    shard_mix = mixing.shard_map(mix_params, mesh, in_specs=P("pod"),
+                                 out_specs=P("pod"))
 
     def gossip_step(states, batches):
         new_states, metrics = jax.vmap(local_step)(states, batches)
@@ -322,7 +323,7 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
     """Lower + compile one (arch, shape, mesh) combination; return the report."""
     cfg = opts.apply_cfg(get_config(arch))
     shape = SHAPES[shape_name]
-    if shape_name == "long_500k" and not cfg.sub_quadratic:
+    if _shape_infeasible(cfg, shape_name):
         return {"arch": arch, "shape": shape_name,
                 "mesh": "multi_pod" if multi_pod else "single_pod",
                 "status": "skipped",
@@ -380,6 +381,53 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
     return report
 
 
+def _shape_infeasible(cfg: ModelConfig, shape_name: str) -> bool:
+    """long_500k decode needs bounded state (see DESIGN.md) — the one
+    (arch, shape) combination the sweep and the plan both skip."""
+    return shape_name == "long_500k" and not cfg.sub_quadratic
+
+
+def render_plan(arch: str, shape_name: str, *, multi_pod: bool = False,
+                opts: Opts = BASELINE) -> str:
+    """Human-readable sharding plan: every state leaf with its shape and the
+    PartitionSpec the shipped rules assign it (no lowering, no allocation)."""
+    cfg = opts.apply_cfg(get_config(arch))
+    shape = SHAPES[shape_name]
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    axes = mesh_lib.mesh_axes(multi_pod)
+    sizes = _mesh_sizes(mesh)
+
+    lines = [f"# sharding plan: {arch} x {shape_name} on "
+             f"{'x'.join(str(s) for s in mesh.devices.shape)} "
+             f"({', '.join(mesh.axis_names)})"]
+
+    def section(title, shapes_tree, specs_tree):
+        lines.append(f"[{title}]")
+        flat_s = jax.tree_util.tree_leaves_with_path(shapes_tree)
+        flat_p = jax.tree.leaves(specs_tree,
+                                 is_leaf=lambda x: isinstance(x, P))
+        for (path, leaf), spec in zip(flat_s, flat_p):
+            name = jax.tree_util.keystr(path)
+            lines.append(f"  {name:<60} {str(leaf.shape):<24} {spec}")
+
+    params_sds = specs_lib.params_specs(cfg)
+    section("params", params_sds,
+            shd.param_pspecs(params_sds, axes, sizes,
+                             **_param_flags(shape.kind, opts)))
+    section("batch", specs_lib.input_specs(cfg, shape),
+            shd.batch_pspecs(cfg, shape, axes))
+    # prefill steps shard a cache too (_prefill_artifacts) — render it for
+    # every cache-carrying kind, not just decode
+    if shape.kind in ("prefill", "decode") and not _shape_infeasible(
+            cfg, shape_name):
+        cache_sds = specs_lib.cache_specs(cfg, shape.global_batch,
+                                          shape.seq_len)
+        section("cache", cache_sds,
+                shd.cache_pspecs(cfg, cache_sds, shape.global_batch, axes,
+                                 sizes))
+    return "\n".join(lines)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -387,6 +435,9 @@ def main() -> None:
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--plan", action="store_true",
+                    help="print the sharding plan (specs per leaf) instead "
+                         "of lowering")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--force", action="store_true",
                     help="re-run pairs whose report file already exists")
@@ -417,6 +468,12 @@ def main() -> None:
     for a in archs:
         for s in shapes:
             pairs.append((a, s))
+
+    if args.plan:
+        for a, s in pairs:
+            print(render_plan(a, s, multi_pod=args.multi_pod, opts=opts),
+                  flush=True)
+        return
 
     os.makedirs(args.out, exist_ok=True)
     for a, s in pairs:

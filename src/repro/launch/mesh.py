@@ -9,10 +9,7 @@ from __future__ import annotations
 
 import jax
 
-try:
-    from repro.dist.sharding import MeshAxes
-except ModuleNotFoundError:  # repro.dist is a roadmap item (ROADMAP.md)
-    MeshAxes = None
+from repro.dist.sharding import MeshAxes
 
 # TPU v5e hardware constants used by the roofline analysis.
 PEAK_FLOPS_BF16 = 197e12      # per chip
@@ -26,10 +23,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def mesh_axes(multi_pod: bool = False) -> "MeshAxes":
-    if MeshAxes is None:
-        raise ModuleNotFoundError(
-            "repro.dist.sharding is not built yet — see ROADMAP.md Open items")
+def mesh_axes(multi_pod: bool = False) -> MeshAxes:
     return MeshAxes(pod="pod") if multi_pod else MeshAxes()
 
 

@@ -74,6 +74,26 @@ def ring_mix_pytree(stacked_local: Any, axis: str, band: jax.Array,
     return jax.tree.map(mix_leaf, stacked_local)
 
 
+def _param_mixer(gcfg: GossipConfig, mesh, axis: str | None,
+                 conn: int | None) -> Callable:
+    """``mix(w, params) -> params`` applying the B gossip steps — the ONE
+    mixing dispatch both gossip drivers (per-round ``make_gossip_step`` and
+    the block runner) share: dense (K, K) pytree mix without a mesh, banded
+    ``ppermute`` ring under shard_map with one (circulant W of connectivity
+    ``conn``)."""
+    def mix(w, params):
+        if mesh is None:
+            return mix_pytree(w, params, gcfg.gossip_steps)
+        band = mixing.banded_weights(w, conn or 1)
+        shard = mixing.shard_map(
+            lambda p: ring_mix_pytree(p, axis, band, conn or 1,
+                                      gcfg.gossip_steps),
+            mesh, in_specs=P(axis), out_specs=P(axis))
+        return shard(params)
+
+    return mix
+
+
 def make_gossip_step(local_step: Callable, gcfg: GossipConfig, *,
                      mesh=None, axis: str | None = None,
                      conn: int | None = None) -> Callable:
@@ -90,6 +110,8 @@ def make_gossip_step(local_step: Callable, gcfg: GossipConfig, *,
     shard_map over that axis (requires circulant W of connectivity ``conn``);
     otherwise a dense (K,K) mix (vmap/GSPMD path, any W).
     """
+    mix_params = _param_mixer(gcfg, mesh, axis, conn)
+
     def step(states, batches, w, active, do_mix=True):
         new_states, metrics = jax.vmap(local_step)(states, batches)
         keep = lambda new, old: jax.tree.map(
@@ -102,16 +124,8 @@ def make_gossip_step(local_step: Callable, gcfg: GossipConfig, *,
             # communication volume by mix_every at a Theta-quantified
             # convergence cost (App. E.2 in reverse)
             return new_states, metrics
-        if mesh is None:
-            mixed = mix_pytree(w, new_states.params, gcfg.gossip_steps)
-        else:
-            band = mixing.banded_weights(w, conn or 1)
-            shard = jax.shard_map(
-                lambda p: ring_mix_pytree(p, axis, band, conn or 1,
-                                          gcfg.gossip_steps),
-                mesh=mesh, in_specs=P(axis), out_specs=P(axis))
-            mixed = shard(new_states.params)
-        return new_states._replace(params=mixed), metrics
+        return new_states._replace(params=mix_params(w, new_states.params)), \
+            metrics
 
     return jax.jit(step, static_argnames=("do_mix",))
 
@@ -122,8 +136,9 @@ def mix_schedule(rounds: int, mix_every: int) -> np.ndarray:
     return (np.arange(rounds) + 1) % mix_every == 0
 
 
-def make_gossip_block_runner(local_step: Callable, gcfg: GossipConfig
-                             ) -> Callable:
+def make_gossip_block_runner(local_step: Callable, gcfg: GossipConfig, *,
+                             mesh=None, axis: str | None = None,
+                             conn: int | None = None) -> Callable:
     """Round-block gossip-DP: many local-step+mix rounds per device dispatch.
 
     The per-round ``make_gossip_step`` path dispatches one jitted program per
@@ -131,8 +146,12 @@ def make_gossip_block_runner(local_step: Callable, gcfg: GossipConfig
     the shared scan executor (``repro.core.executor``) instead — batches,
     mixing matrices, active masks and mix flags are pre-staged as stacked
     (T, ...) schedule arrays, and per-round train metrics come back stacked
-    in one end-of-run fetch. Dense-mix (vmap) path only; the shard_map/
-    ppermute mesh path keeps the per-round driver.
+    in one end-of-run fetch.
+
+    Both communication paths share the engine: the default dense (K, K) mix
+    on vmap-stacked replicas, and — with ``mesh``/``axis`` — the
+    shard_map/``lax.ppermute`` ring over that mesh axis (circulant W of
+    connectivity ``conn``, exactly as in ``make_gossip_step``).
 
     Returns ``run(states, batches, w, active, mix, *, block_size=32)`` with
       batches: (T, K, ...) stacked batch pytree,
@@ -142,6 +161,8 @@ def make_gossip_block_runner(local_step: Callable, gcfg: GossipConfig
     returning (states, metrics) where metrics leaves are (T, ...) stacks.
     NOTE: ``states`` buffers are donated — do not reuse the argument.
     """
+    mix_params = _param_mixer(gcfg, mesh, axis, conn)
+
     def step_fn(states, _ctx, sched_t):
         new_states, metrics = jax.vmap(local_step)(states, sched_t["batch"])
         active = sched_t["active"]
@@ -151,7 +172,7 @@ def make_gossip_block_runner(local_step: Callable, gcfg: GossipConfig
             new_states, states)
         mixed = lax.cond(
             sched_t["mix"],
-            lambda p: mix_pytree(sched_t["w"], p, gcfg.gossip_steps),
+            lambda p: mix_params(sched_t["w"], p),
             lambda p: p, keep.params)
         return keep._replace(params=mixed), metrics
 

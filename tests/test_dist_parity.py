@@ -1,0 +1,127 @@
+"""shard_map runtime == single-host simulator on a 1-device mesh, bit for bit.
+
+A 1-device mesh runs the real ``repro.dist.runtime`` code — shard_map,
+collectives, schedule plumbing — with every collective degenerating to the
+identity, so the distributed driver must reproduce ``run_cola`` EXACTLY
+(state bitwise; metric rows to fusion rounding, same contract as the
+loop-vs-block executor tests). Covers the full elasticity surface: churn
+(freeze + reset-on-leave) and heterogeneous CD budgets, over 200+ rounds.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import problems, topology as topo
+from repro.core.cola import ColaConfig, run_cola
+from repro.data import synthetic
+from repro.dist.runtime import run_dist_cola
+
+K = 8
+
+
+@pytest.fixture(scope="module")
+def ridge():
+    x, y, _ = synthetic.regression(150, 48, seed=4)
+    return problems.ridge_primal(jnp.asarray(x), jnp.asarray(y), 1e-2)
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+def _drop(t, rng):
+    return rng.random(K) < 0.7
+
+
+def _budgets(t, rng):
+    b = np.full(K, 16)
+    b[rng.random(K) < 0.5] = 4
+    return b
+
+
+# the elasticity surface: same schedule features the executor suite pins
+CASES = {
+    "plain": {},
+    "churn_freeze": dict(active_schedule=_drop),
+    "churn_reset": dict(active_schedule=_drop, leave_mode="reset"),
+    "budgets": dict(budget_schedule=_budgets),
+    "churn_budgets_reset": dict(active_schedule=_drop,
+                                budget_schedule=_budgets, leave_mode="reset"),
+}
+
+
+def _assert_parity(sim, dist, case):
+    np.testing.assert_array_equal(np.asarray(sim.state.x_parts),
+                                  np.asarray(dist.state.x_parts),
+                                  err_msg=case)
+    np.testing.assert_array_equal(np.asarray(sim.state.v_stack),
+                                  np.asarray(dist.state.v_stack),
+                                  err_msg=case)
+    assert sim.history["round"] == dist.history["round"]
+    for name in ("primal", "hamiltonian", "dual", "gap",
+                 "consensus_violation"):
+        np.testing.assert_allclose(sim.history[name], dist.history[name],
+                                   rtol=1e-5, atol=1e-6, err_msg=f"{case}:{name}")
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_dist_bitwise_matches_sim_1host(ridge, mesh1, case):
+    kwargs = CASES[case]
+    cfg = ColaConfig(kappa=1.0)
+    sim = run_cola(ridge, topo.connected_cycle(K, 2), cfg, 41,
+                   record_every=10, seed=3, **kwargs)
+    dist = run_dist_cola(ridge, topo.connected_cycle(K, 2), cfg, mesh1, 41,
+                         comm="dense", record_every=10, seed=3,
+                         block_size=16, **kwargs)
+    _assert_parity(sim, dist, case)
+
+
+def test_dist_bitwise_200_rounds_with_churn(ridge, mesh1):
+    """The acceptance case: >= 200 rounds under churn + reset + budgets."""
+    kwargs = dict(active_schedule=_drop, budget_schedule=_budgets,
+                  leave_mode="reset")
+    cfg = ColaConfig(kappa=1.0)
+    sim = run_cola(ridge, topo.connected_cycle(K, 2), cfg, 200,
+                   record_every=40, seed=7, **kwargs)
+    dist = run_dist_cola(ridge, topo.connected_cycle(K, 2), cfg, mesh1, 200,
+                         comm="dense", record_every=40, seed=7, **kwargs)
+    _assert_parity(sim, dist, "200-round churn")
+
+
+def test_dist_block_boundaries_invisible(ridge, mesh1):
+    cfg = ColaConfig(kappa=1.0)
+    a = run_dist_cola(ridge, topo.ring(K), cfg, mesh1, 24, comm="dense",
+                      block_size=24)
+    b = run_dist_cola(ridge, topo.ring(K), cfg, mesh1, 24, comm="dense",
+                      block_size=5)
+    np.testing.assert_array_equal(np.asarray(a.state.x_parts),
+                                  np.asarray(b.state.x_parts))
+
+
+def test_dist_gossip_steps_and_gram_modes(ridge, mesh1):
+    """B>1 gossip and both CD formulations ride through the dist driver."""
+    for cfg in (ColaConfig(kappa=0.5, gossip_steps=2),
+                ColaConfig(kappa=1.0, cd_mode="residual")):
+        sim = run_cola(ridge, topo.ring(K), cfg, 30, record_every=29)
+        dist = run_dist_cola(ridge, topo.ring(K), cfg, mesh1, 30,
+                             comm="dense", record_every=29)
+        _assert_parity(sim, dist, repr(cfg))
+
+
+def test_ring_comm_rejects_churn_and_bad_layout(ridge, mesh1):
+    cfg = ColaConfig(kappa=1.0)
+    with pytest.raises(ValueError, match="circulant"):
+        run_dist_cola(ridge, topo.ring(K), cfg, mesh1, 4, comm="ring",
+                      active_schedule=_drop)
+    with pytest.raises(ValueError, match="one node per device"):
+        # 8 nodes on 1 device: ring comm needs K == mesh axis size
+        run_dist_cola(ridge, topo.ring(K), cfg, mesh1, 4, comm="ring")
+
+
+def test_dist_zero_rounds(ridge, mesh1):
+    res = run_dist_cola(ridge, topo.ring(K), ColaConfig(), mesh1, 0,
+                        comm="dense")
+    assert res.history["round"] == []
+    assert float(jnp.abs(res.state.x_parts).max()) == 0.0

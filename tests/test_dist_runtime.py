@@ -10,10 +10,6 @@ import textwrap
 
 import pytest
 
-# the multi-host shard_map runtime is a roadmap item (see ROADMAP.md "Open
-# items"); skip until the repro.dist package lands
-pytest.importorskip("repro.dist", reason="repro.dist runtime not built yet")
-
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -42,11 +38,79 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
-@pytest.mark.slow
-def test_shardmap_runtime_matches_simulator():
+def _run_isolated(script: str, token: str) -> None:
     env = dict(os.environ, PYTHONPATH="src")
-    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+    out = subprocess.run([sys.executable, "-c", script], env=env,
                          capture_output=True, text=True, timeout=900,
                          cwd=os.path.dirname(os.path.dirname(
                              os.path.abspath(__file__))))
-    assert "DIST_OK" in out.stdout, out.stdout + "\n" + out.stderr
+    assert token in out.stdout, out.stdout + "\n" + out.stderr
+
+
+@pytest.mark.slow
+def test_shardmap_runtime_matches_simulator():
+    _run_isolated(SCRIPT, "DIST_OK")
+
+
+# the mesh/ppermute gossip-DP path on the shared round-block engine: block
+# runner == per-round shard_map driver (same contract the dense vmap path
+# pins in test_executor.test_gossip_block_runner_matches_step_loop)
+GOSSIP_MESH_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs.base import get_config, smoke_variant
+    from repro.optim import gossip as gsp
+    from repro.train.data import TokenBatches
+    from repro.train.steps import TrainHParams, init_train_state, \\
+        make_train_step
+
+    cfg = smoke_variant(get_config("xlstm_125m"))
+    hp = TrainHParams(lr=1e-3)
+    state0 = init_train_state(cfg, jax.random.PRNGKey(0), hp)
+    local = make_train_step(cfg, hp)
+    pipe = TokenBatches(cfg.vocab_size, 2, 16, corpus_tokens=1 << 12)
+    k, rounds = 4, 6
+    mesh = jax.make_mesh((4,), ("nodes",))
+    gcfg = gsp.GossipConfig(num_nodes=k)
+    w = jnp.asarray(gcfg.weights(), jnp.float32)
+    act = jnp.ones((k,), jnp.float32)
+
+    def stacked(step):
+        return jax.tree.map(jnp.asarray,
+                            jax.tree.map(lambda *xs: np.stack(xs),
+                                         *[pipe(step, shard=j)
+                                           for j in range(k)]))
+    batches = [stacked(t) for t in range(rounds)]
+    sh = NamedSharding(mesh, P("nodes"))
+    put = lambda tree: jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+    states = put(gsp.replicate_state(state0, k))
+    step = gsp.make_gossip_step(local, gcfg, mesh=mesh, axis="nodes", conn=1)
+    losses = []
+    for t in range(rounds):
+        states, m = step(states, batches[t], w, act)
+        losses.append(float(jnp.mean(m["loss"])))
+
+    runner = gsp.make_gossip_block_runner(local, gcfg, mesh=mesh,
+                                          axis="nodes", conn=1)
+    states2 = put(gsp.replicate_state(state0, k))
+    bat_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+    states2, metrics = runner(
+        states2, bat_stack, jnp.broadcast_to(w, (rounds, k, k)),
+        jnp.broadcast_to(act, (rounds, k)), gsp.mix_schedule(rounds, 1),
+        block_size=3)
+    losses2 = np.asarray(metrics["loss"]).mean(axis=1)
+    np.testing.assert_allclose(losses, losses2, rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(states.params),
+                    jax.tree.leaves(states2.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-4)
+    print("GOSSIP_MESH_BLOCK_OK")
+""")
+
+
+@pytest.mark.slow
+def test_gossip_mesh_block_runner_matches_step_loop():
+    _run_isolated(GOSSIP_MESH_SCRIPT, "GOSSIP_MESH_BLOCK_OK")

@@ -1,0 +1,154 @@
+"""Content-addressed driver-cache keys (the id(problem) aliasing bugfix).
+
+The old keys included ``id(problem)``: a rebuilt Problem at a recycled
+address silently reused the wrong compiled driver (whose closure baked in
+the OLD problem's data), and a live entry pinned the whole Problem via the
+closure. The content key must (a) differ whenever anything a jitted closure
+captures differs — array data, hyperparameters — regardless of addresses,
+and (b) coincide for separately-built identical Problems, which is exactly
+the property an id()-based key can never have (two live equal-content
+objects always have distinct ids, so these tests fail on the old scheme).
+"""
+import gc
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import executor as exec_engine, problems, topology as topo
+from repro.core.cola import ColaConfig, run_cola
+from repro.data import synthetic
+
+
+def _ridge(seed=0, lam=1e-2, y_shift=0.0):
+    x, y, _ = synthetic.regression(60, 24, seed=seed)
+    return problems.ridge_primal(jnp.asarray(x), jnp.asarray(y) + y_shift,
+                                 lam)
+
+
+def test_fingerprint_is_content_addressed():
+    p1, p2 = _ridge(), _ridge()
+    assert p1 is not p2
+    # identical content, different addresses -> same key (cache HIT; the
+    # id()-keyed scheme returns distinct keys here and fails)
+    assert exec_engine.fingerprint(p1) == exec_engine.fingerprint(p2)
+    # anything a closure captures must change the key: the label vector is
+    # captured only inside Problem.f/grad_f closures, not a dataclass field
+    assert exec_engine.fingerprint(p1) != exec_engine.fingerprint(
+        _ridge(y_shift=1.0))
+    assert exec_engine.fingerprint(p1) != exec_engine.fingerprint(
+        _ridge(lam=2e-2))
+    assert exec_engine.fingerprint(p1) != exec_engine.fingerprint(
+        _ridge(seed=1))
+
+
+def test_recycled_address_different_content_misses():
+    """The aliasing scenario itself: rebuild a different-content Problem
+    that may land on the recycled address; its run must use ITS data."""
+    exec_engine.clear_driver_cache()
+    graph, cfg = topo.ring(4), ColaConfig(kappa=1.0)
+    p1 = _ridge()
+    res1 = run_cola(p1, graph, cfg, 10, record_every=9)
+    fp1 = exec_engine.fingerprint(p1)
+    del p1
+    gc.collect()  # frees p1's address for possible reuse by p2
+    p2 = _ridge(y_shift=1.0)  # same shapes/dtypes, different labels
+    fp2 = exec_engine.fingerprint(p2)
+    assert fp1 != fp2  # even if id(p2) == addr1, the key differs
+    res2 = run_cola(p2, graph, cfg, 10, record_every=9)
+    # fresh-cache reference run for p2: results must match it exactly
+    exec_engine.clear_driver_cache()
+    ref2 = run_cola(p2, graph, cfg, 10, record_every=9)
+    np.testing.assert_array_equal(np.asarray(res2.state.x_parts),
+                                  np.asarray(ref2.state.x_parts))
+    assert res2.history["primal"][-1] != pytest.approx(
+        res1.history["primal"][-1])
+
+
+def test_identical_rebuild_hits_cache():
+    """Rebuilding an identical Problem per call reuses the compiled driver
+    (the workload pattern the ROADMAP item called out)."""
+    exec_engine.clear_driver_cache()
+    graph, cfg = topo.ring(4), ColaConfig(kappa=1.0)
+    run_cola(_ridge(), graph, cfg, 5)
+    n_entries = len(exec_engine._DRIVER_CACHE)
+    res = run_cola(_ridge(), graph, cfg, 5)  # fresh object, same content
+    assert len(exec_engine._DRIVER_CACHE) == n_entries
+    exec_engine.clear_driver_cache()
+    ref = run_cola(_ridge(), graph, cfg, 5)
+    np.testing.assert_array_equal(np.asarray(res.state.x_parts),
+                                  np.asarray(ref.state.x_parts))
+
+
+def test_fingerprint_hashes_arrays_schedules_and_functions():
+    a = np.arange(6, dtype=np.float32)
+    assert exec_engine.fingerprint(a) == exec_engine.fingerprint(a.copy())
+    assert exec_engine.fingerprint(a) != exec_engine.fingerprint(a + 1)
+    assert exec_engine.fingerprint(a) != exec_engine.fingerprint(
+        a.astype(np.float64))
+    assert exec_engine.fingerprint(a) != exec_engine.fingerprint(
+        a.reshape(2, 3))
+
+    def make(c):
+        def f(x):
+            return x + c
+        return f
+
+    # same bytecode, different captured constant
+    assert exec_engine.fingerprint(make(1.0)) != exec_engine.fingerprint(
+        make(2.0))
+    assert exec_engine.fingerprint(make(1.0)) == exec_engine.fingerprint(
+        make(1.0))
+
+
+def test_fingerprint_sees_names_globals_and_kwdefaults():
+    """Same-bytecode bodies that differ only in the attribute they call, a
+    referenced module-level constant, or a keyword-only default must not
+    collide (they bake different constants into the compiled driver)."""
+    f_exp = lambda v: jnp.exp(v)   # noqa: E731 — identical bytecode,
+    f_log = lambda v: jnp.log(v)   # noqa: E731 — co_names differ
+    assert exec_engine.fingerprint(f_exp) != exec_engine.fingerprint(f_log)
+    assert exec_engine.fingerprint(f_exp) == exec_engine.fingerprint(
+        lambda v: jnp.exp(v))
+
+    # literals inside nested code: same outer bytecode, nested const differs
+    assert exec_engine.fingerprint(
+        lambda x: (lambda y: y * 2.0)(x)) != exec_engine.fingerprint(
+        lambda x: (lambda y: y * 3.0)(x))
+
+    for code in ("def g(v):\n    return v * SCALE\n",
+                 # global read only inside a nested lambda
+                 "def g(v):\n    return (lambda y: y * SCALE)(v)\n"):
+        ns_a = {"SCALE": 2.0}
+        ns_b = {"SCALE": 3.0}
+        exec(compile(code, "<fp>", "exec"), ns_a)
+        exec(compile(code, "<fp>", "exec"), ns_b)
+        assert exec_engine.fingerprint(ns_a["g"]) != exec_engine.fingerprint(
+            ns_b["g"]), code
+
+    def mk(default):
+        def f(x, *, step=default):
+            return x * step
+        return f
+
+    assert exec_engine.fingerprint(mk(1.0)) != exec_engine.fingerprint(
+        mk(2.0))
+
+
+def test_fingerprint_refuses_address_based_reprs():
+    """Objects whose only identity is their address must hash by contents
+    (via __dict__) or raise — never silently fall back to address-keying."""
+    class Plain:
+        def __init__(self, v):
+            self.v = v
+
+    assert exec_engine.fingerprint(Plain(1)) == exec_engine.fingerprint(
+        Plain(1))
+    assert exec_engine.fingerprint(Plain(1)) != exec_engine.fingerprint(
+        Plain(2))
+
+    class Opaque:
+        __slots__ = ()
+
+    with pytest.raises(TypeError, match="content-hash"):
+        exec_engine.fingerprint(Opaque())

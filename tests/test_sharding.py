@@ -6,12 +6,8 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ARCHS, SHAPES, get_config
-
-# the repro.dist sharding rules are a roadmap item (see ROADMAP.md "Open
-# items"); skip until the package lands
-pytest.importorskip("repro.dist", reason="repro.dist sharding not built yet")
-from repro.dist import sharding as shd  # noqa: E402
-from repro.launch.specs import cache_specs, params_specs  # noqa: E402
+from repro.dist import sharding as shd
+from repro.launch.specs import cache_specs, params_specs
 
 SIZES = {"data": 16, "model": 16, "pod": 2}
 AXES = shd.MeshAxes()
