@@ -37,8 +37,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row
-from repro.core import problems, topology as topo
-from repro.core.cola import ColaConfig, run_cola
+from repro.core import metrics as metrics_lib, problems, topology as topo
+from repro.core.cola import ColaConfig, build_env, run_cola
+from repro.core.partition import make_partition
 from repro.data import synthetic
 from repro.dist.runtime import run_dist_cola
 
@@ -52,7 +53,15 @@ BENCH_PATH = ROOT / "BENCH_cola.json"
 # drift — so a globally-loaded runner passes while a block engine that
 # degenerated toward per-round dispatch still fails.
 _CONTROL = "loop_rounds_per_sec"
-_GATED = ("block_rounds_per_sec", "dist_block_rounds_per_sec")
+# recording-overhead rows: rounds/sec of the block engine under each
+# recorder (gather-gap vs local-certificate) at three record cadences, on
+# the simulator and the 1-device dist runtime
+_REC_MODES = ("sim", "dist")
+_REC_KINDS = ("gap", "cert")
+_REC_EVERY = ("1", "10", "inf")
+_REC_KEYS = tuple(f"rec_{m}_{r}_e{e}_rounds_per_sec"
+                  for m in _REC_MODES for r in _REC_KINDS for e in _REC_EVERY)
+_GATED = ("block_rounds_per_sec", "dist_block_rounds_per_sec") + _REC_KEYS
 
 
 def _bench_case(runner, rounds, repeats: int = 3):
@@ -106,7 +115,7 @@ def bench_config(smoke: bool = False) -> dict:
                           np.asarray(dist_res.state.x_parts)), \
         "dist runtime diverged from the block executor"
 
-    return {
+    result = {
         "config": {"K": k, "rounds": rounds, "n_samples": n_samples,
                    "n_features": n_features, "record_every": record_every,
                    "kappa": cfg.kappa, "topology": "ring",
@@ -119,6 +128,56 @@ def bench_config(smoke: bool = False) -> dict:
                          "block": block_res.history["primal"][-1],
                          "dist": dist_res.history["primal"][-1]},
     }
+    result.update(bench_recording(smoke))
+    return result
+
+
+def bench_recording(smoke: bool = False) -> dict:
+    """Recording-overhead rows: block-engine rounds/sec under the
+    gather-``GapRecorder`` vs the local-``CertificateRecorder`` at
+    ``record_every`` in {1, 10, inf}, simulator + dist runtime.
+
+    The certificate recorder is built with stopping disabled so every case
+    executes the full round budget (rounds/sec stays comparable); the
+    L-bounded problem is a lasso (Prop.-1 requirement).
+    """
+    rounds = 50 if smoke else 200
+    k = 16
+    n_samples, n_features = (128, 64) if smoke else (256, 128)
+    x, y, _ = synthetic.regression(n_samples, n_features, seed=1,
+                                   sparsity_solution=0.2)
+    prob = problems.lasso(jnp.asarray(x), jnp.asarray(y), 1e-2)
+    graph = topo.ring(k)
+    cfg = ColaConfig(kappa=1.0)
+    mesh = jax.make_mesh((1,), ("data",))
+    part = make_partition(prob.n, k)
+    env = build_env(prob, part)
+    recorders = {
+        "gap": metrics_lib.GapRecorder(prob, part),
+        "cert": metrics_lib.certificate_recorder(
+            prob, part, env, graph, eps=1e-3, stop_on_certified=False),
+    }
+    out = {}
+    for rec_name, rec in recorders.items():
+        for every_name in _REC_EVERY:
+            every = rounds if every_name == "inf" else int(every_name)
+            sim_rps, _ = _bench_case(
+                lambda: run_cola(prob, graph, cfg, rounds,
+                                 record_every=every, recorder=rec,
+                                 block_size=64), rounds, repeats=2)
+            out[f"rec_sim_{rec_name}_e{every_name}_rounds_per_sec"] = \
+                round(sim_rps, 2)
+            dist_rps, _ = _bench_case(
+                lambda: run_dist_cola(prob, graph, cfg, mesh, rounds,
+                                      record_every=every, recorder=rec,
+                                      comm="dense", block_size=64),
+                rounds, repeats=2)
+            out[f"rec_dist_{rec_name}_e{every_name}_rounds_per_sec"] = \
+                round(dist_rps, 2)
+            csv_row("round_bench", f"rec_{rec_name}_e{every_name}",
+                    f"K={k},T={rounds}",
+                    f"sim {sim_rps:.1f} / dist {dist_rps:.1f}")
+    return out
 
 
 def check_regression(result: dict, smoke: bool, tolerance: float) -> list[str]:

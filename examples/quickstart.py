@@ -2,17 +2,18 @@
 
 16 nodes on a ring, no central coordinator, parameter-free defaults
 (gamma = 1, sigma' = K). Prints the decentralized duality gap + consensus
-violation per round and finishes with the Prop.-1 LOCAL certificate — each
-node certifies the GLOBAL duality gap from its own neighborhood only.
+violation per round, then runs a lasso with CERTIFICATE-DRIVEN stopping:
+``eps=`` arms the Prop.-1 local certificates — each node certifies the
+GLOBAL duality gap from its own neighborhood only, and the run stops at
+the first record round where every node passes, instead of burning a
+fixed round budget.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 
 from repro.core import problems, topology as topo
-from repro.core.cola import ColaConfig, build_env, run_cola
-from repro.core.duality import block_spectral_norms, local_certificates
-from repro.core.partition import make_partition
+from repro.core.cola import ColaConfig, run_cola
 from repro.data import synthetic
 
 
@@ -35,28 +36,32 @@ def main() -> None:
               f"consensus-violation={cv:.3e}")
 
     # Prop. 1 requires L-bounded support of g_i (lasso-type); certify a
-    # lasso run — each node checks the GLOBAL gap from local quantities.
-    # (The certificate's condition 10 is conservative by the worst-case
-    # factor sqrt(K sum n_k^2 sigma_k)/(1-beta), so it fires once the run is
-    # well past the target accuracy — use a smaller instance to get there.)
+    # lasso run — each node checks the GLOBAL gap from local quantities
+    # (one gossip exchange of neighbor gradients), and the driver stops at
+    # certification. The certificate's condition 10 is conservative by the
+    # worst-case factor sqrt(K sum n_k^2 sigma_k)/(1-beta), so it fires
+    # once the run is well past the target accuracy; the f32 gradient-
+    # disagreement noise floor maps to a certifiable eps of ~1e-1 here.
     lx, ly, _ = synthetic.regression(800, 96, seed=3, sparsity_solution=0.2)
     lprob = problems.lasso(jnp.asarray(lx), jnp.asarray(ly), lam=5e-2,
                            box=5.0)
-    lres = run_cola(lprob, graph, ColaConfig(kappa=8.0), rounds=2500,
-                    record_every=2499)
-    part = make_partition(lprob.n, graph.num_nodes)
-    env = build_env(lprob, part)
-    # f32 gradient-disagreement noise floor is ~1e-6; the conservative
-    # condition-10 scaling maps that to a certifiable eps of ~1e-1 here.
-    eps = max(10.0 * lres.history["gap"][-1], 1e-1)
-    cert = local_certificates(
-        lprob, part, lres.state.x_parts, lres.state.v_stack, env.a_parts,
-        env.gp_parts, env.masks, graph.adjacency, topo.beta(w),
-        block_spectral_norms(env.a_parts), eps, lprob.l_bound)
-    print(f"\nlasso true gap {lres.history['gap'][-1]:.4f}; local "
-          f"certificate for eps={eps:.4f}: certified={bool(cert.certified)} "
-          f"(condition 9 on {int(cert.local_gap_ok.sum())}/16 nodes, "
-          f"condition 10 on {int(cert.grad_ok.sum())}/16)")
+    eps = 0.1
+    budget = 4000
+    lres = run_cola(lprob, graph, ColaConfig(kappa=8.0), rounds=budget,
+                    record_every=50, recorder="gap+certificate", eps=eps)
+    h = lres.history
+    stopped = h["stop_round"]
+    if stopped is None:
+        print(f"\nlasso, eps={eps}: budget of {budget} rounds exhausted "
+              f"without certification (gap {h['gap'][-1]:.6f}, condition 9 "
+              f"on {int(h['cond9_nodes'][-1])}/16 nodes, condition 10 on "
+              f"{int(h['cond10_nodes'][-1])}/16)")
+        return
+    print(f"\nlasso, eps={eps}: certified at round {stopped} "
+          f"(budget {budget}; {len(h['round'])} record rounds kept)")
+    print(f"  true gap at certification: {h['gap'][-1]:.6f} <= eps"
+          f"  (condition 9 on {int(h['cond9_nodes'][-1])}/16 nodes, "
+          f"condition 10 on {int(h['cond10_nodes'][-1])}/16)")
 
 
 if __name__ == "__main__":

@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import executor as exec_engine, topology as topo
+from repro.core import executor as exec_engine, metrics as metrics_lib, \
+    topology as topo
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,37 +123,36 @@ def _run(prob: ConsensusProblem, round_fn: Callable, state, rounds: int,
     def cons_fn(ws):
         return jnp.sum((ws - jnp.mean(ws, axis=0)) ** 2)
 
+    recorder = metrics_lib.FnRecorder(
+        labels=("objective", "consensus"),
+        fn=lambda carry: jnp.stack([obj_fn(extract_w(carry)),
+                                    cons_fn(extract_w(carry))]))
+
     if executor == "block":
         def step_fn(carry, _ctx, _sched):
             return round_fn(carry), None
 
-        def record_fn(carry):
-            ws = extract_w(carry)
-            return jnp.stack([obj_fn(ws), cons_fn(ws)])
-
         rec = exec_engine.record_flags(rounds, record_every)
         res = exec_engine.run_round_blocks(
-            step_fn, state, {}, record_fn=record_fn, record_mask=rec,
+            step_fn, state, {}, recorder=recorder, record_mask=rec,
             block_size=block_size, num_rounds=rounds)
-        history = {"round": [int(t) for t in np.nonzero(rec)[0]],
-                   "objective": [float(v) for v in res.metrics[:, 0]],
-                   "consensus": [float(v) for v in res.metrics[:, 1]]}
-        return BaselineResult(w_stack=extract_w(res.state), history=history)
+        return BaselineResult(w_stack=extract_w(res.state),
+                              history=metrics_lib.history_from(recorder, res))
 
     if executor != "loop":
         raise ValueError(f"unknown executor {executor!r} "
                          "(want 'block' or 'loop')")
-    history = {"round": [], "objective": [], "consensus": []}
+    history: dict = {"round": [], "objective": [], "consensus": [],
+                     "stop_round": None}
     step = jax.jit(round_fn)
-    obj = jax.jit(obj_fn)
-    cons = jax.jit(cons_fn)
+    report = jax.jit(recorder.record_fn)
     for t in range(rounds):
         state = step(state)
         if t % record_every == 0 or t == rounds - 1:
-            ws = extract_w(state)
+            row = report(state)
             history["round"].append(t)
-            history["objective"].append(float(obj(ws)))
-            history["consensus"].append(float(cons(ws)))
+            for j, name in enumerate(recorder.labels):
+                history[name].append(float(row[j]))
     return BaselineResult(w_stack=extract_w(state), history=history)
 
 

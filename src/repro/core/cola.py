@@ -18,6 +18,12 @@ bitwise identical):
   ``lax.scan``, metric history is recorded on device and fetched once at
   the end, and the (K, n_k)/(K, d) state buffers are donated across blocks.
 
+Recording and stopping go through the pluggable Recorder layer
+(``repro.core.metrics``): ``recorder="gap"`` keeps the historical Lemma-2
+history, ``recorder="certificate"`` records the Prop.-1 local certificates,
+and ``eps=`` arms certificate-driven early termination (the round budget
+becomes an upper bound).
+
 The local CD solve picks between the residual and Gram-cached formulations
 (``repro.core.subproblem.gram_pays``) via ``ColaConfig.cd_mode``.
 """
@@ -25,14 +31,15 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, NamedTuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core import executor as exec_engine, mixing, topology as topo
+from repro.core import executor as exec_engine, metrics as metrics_lib, \
+    mixing, topology as topo
 from repro.core.duality import GapReport, gap_report
 from repro.core.partition import Partition, make_partition
 from repro.core.problems import Problem
@@ -188,19 +195,31 @@ class RunResult(NamedTuple):
     history: dict  # lists keyed by metric name
 
 
-_METRICS = ("primal", "hamiltonian", "dual", "gap", "consensus_violation")
+_METRICS = metrics_lib.GAP_METRICS
 
 
 def run_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
              rounds: int, *, record_every: int = 1,
+             recorder: str | Any = "gap", eps: float | None = None,
              active_schedule: Callable[[int, np.random.Generator], np.ndarray] | None = None,
              budget_schedule: Callable[[int, np.random.Generator], np.ndarray] | None = None,
              leave_mode: str = "freeze", seed: int = 0,
              w_override: np.ndarray | None = None,
              executor: str = "block", block_size: int = 64) -> RunResult:
-    """Driver: runs Algorithm 1 and records Lemma-1/2 diagnostics.
+    """Driver: runs Algorithm 1 under a pluggable metric Recorder.
 
     Args:
+      recorder: "gap" (Lemma-1/2 diagnostics, the historical history keys),
+        "certificate" (Prop.-1 local certificates), "gap+certificate", or a
+        ``repro.core.metrics`` Recorder instance. History keys follow the
+        recorder's labels.
+      eps: target duality gap; arms certificate-driven early stopping.
+        ``rounds`` becomes a budget: the run terminates at the first record
+        round whose row certifies (certificate recorder) or reaches
+        ``gap <= eps`` (gap recorder), with final state bitwise identical
+        to a non-stopping run truncated at that round. Stopping is only
+        checked on record rounds — ``record_every`` is the certification
+        cadence.
       active_schedule: optional (round, rng) -> (K,) bool mask simulating node
         churn (Fig. 4/6). W is re-normalized over the active subgraph each
         round via Metropolis weights.
@@ -227,8 +246,15 @@ def run_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
                                            problem.a.dtype.itemsize))
     state = init_state(problem, part)
     base_w = w_override if w_override is not None else topo.metropolis_weights(graph)
+    rec = metrics_lib.make_recorder(recorder, problem, part, env, graph,
+                                    base_w, eps)
+    if active_schedule is not None:
+        # churn: certificates must judge each record round against the
+        # REWEIGHTED exchange (mask + beta of the active subnetwork), not
+        # the static graph baked at init
+        rec = metrics_lib.dynamize(rec)
     args = (problem, part, env, state, graph, cfg, rounds, record_every,
-            active_schedule, budget_schedule, leave_mode, seed, base_w)
+            rec, active_schedule, budget_schedule, leave_mode, seed, base_w)
     if executor == "block":
         return _run_cola_block(*args, block_size=block_size)
     if executor == "loop":
@@ -237,11 +263,12 @@ def run_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
 
 
 def _run_cola_loop(problem, part, env, state, graph, cfg, rounds, record_every,
-                   active_schedule, budget_schedule, leave_mode, seed,
-                   base_w) -> RunResult:
+                   recorder, active_schedule, budget_schedule, leave_mode,
+                   seed, base_w) -> RunResult:
     """Reference driver: one jitted dispatch per round, blocking metric sync
     every ``record_every`` rounds (the seed behaviour, kept for equivalence
-    tests and as the benchmark baseline)."""
+    tests and as the benchmark baseline). Consumes the same Recorder as the
+    block engine: one jitted row per record round, host-side stop check."""
     k = part.num_nodes
     # content-addressed: a rebuilt identical Problem reuses the driver, a
     # same-address different-content Problem misses (see executor.fingerprint)
@@ -255,12 +282,15 @@ def _run_cola_loop(problem, part, env, state, graph, cfg, rounds, record_every,
     w = jnp.asarray(base_w, dtype=dtype)
     all_active = np.ones((k,), dtype=bool)
     history: dict = {"round": []}
-    history.update({name: [] for name in _METRICS})
+    history.update({name: [] for name in recorder.labels})
+    history["stop_round"] = None
 
+    uses_sched = bool(getattr(recorder, "uses_schedule", False))
+    cert = metrics_lib.first_certificate(recorder) if uses_sched else None
     report = exec_engine.cached_driver(
-        ("cola-report", prob_fp, part),
-        lambda: jax.jit(
-            lambda s: gap_report(problem, part, s.x_parts, s.v_stack)))
+        ("cola-report", prob_fp, part, recorder.cache_token()),
+        lambda: jax.jit(recorder.record_fn))
+    stop_fn = recorder.stop_fn
 
     prev_active = all_active
     for t in range(rounds):
@@ -282,10 +312,20 @@ def _run_cola_loop(problem, part, env, state, graph, cfg, rounds, record_every,
         state = one_round(state, env, w_t,
                           jnp.asarray(active, dtype=dtype), budgets)
         if t % record_every == 0 or t == rounds - 1:
-            rep = report(state)
+            if uses_sched:
+                mask_t, thr_t = metrics_lib.certificate_round_inputs(
+                    cert, w_t, active)
+                row = report(state, {
+                    "cert_mask": jnp.asarray(mask_t, dtype),
+                    "cert_grad_thresh": jnp.asarray(thr_t, dtype)})
+            else:
+                row = report(state)
             history["round"].append(t)
-            for name in _METRICS:
-                history[name].append(float(getattr(rep, name)))
+            for j, name in enumerate(recorder.labels):
+                history[name].append(float(row[j]))
+            if stop_fn is not None and bool(stop_fn(row)):
+                history["stop_round"] = t
+                break
     return RunResult(state=state, history=history)
 
 
@@ -345,10 +385,11 @@ def _materialize_schedule(graph, rounds, active_schedule, budget_schedule,
 
 
 def _run_cola_block(problem, part, env, state, graph, cfg, rounds,
-                    record_every, active_schedule, budget_schedule,
+                    record_every, recorder, active_schedule, budget_schedule,
                     leave_mode, seed, base_w, *, block_size) -> RunResult:
     """Round-block driver: ``block_size`` rounds per dispatch (see
-    ``repro.core.executor``), metrics recorded on device."""
+    ``repro.core.executor``), the Recorder's row computed on device inside
+    the scan, certificate-driven early exit handled by the engine."""
     dtype = problem.a.dtype
     sched = _materialize_schedule(graph, rounds, active_schedule,
                                   budget_schedule, leave_mode, seed, base_w,
@@ -369,21 +410,19 @@ def _run_cola_block(problem, part, env, state, graph, cfg, rounds,
                   s_t["budgets"] if has_budget else None)
         return st, None
 
-    def record_fn(st):
-        rep = gap_report(problem, part, st.x_parts, st.v_stack)
-        return jnp.stack([getattr(rep, name) for name in _METRICS])
-
     rec = exec_engine.record_flags(rounds, record_every)
+    if getattr(recorder, "uses_schedule", False):
+        # dynamic certificate: the per-round neighbor mask + threshold ride
+        # the schedule like every other per-round input
+        sched.update(metrics_lib.certificate_schedule(
+            recorder, sched["w"], sched["active"], rec))
     res = exec_engine.run_round_blocks(
-        step_fn, state, sched, context=env, record_fn=record_fn,
+        step_fn, state, sched, context=env, recorder=recorder,
         record_mask=rec, block_size=block_size,
         cache_key=("cola-block", exec_engine.fingerprint(problem), part, cfg,
-                   has_budget, has_reset))
-
-    history: dict = {"round": [int(t) for t in np.nonzero(rec)[0]]}
-    for j, name in enumerate(_METRICS):
-        history[name] = [float(v) for v in res.metrics[:, j]]
-    return RunResult(state=res.state, history=history)
+                   has_budget, has_reset, recorder.cache_token()))
+    return RunResult(state=res.state,
+                     history=metrics_lib.history_from(recorder, res))
 
 
 def _reset_leavers(state: ColaState, env: ColaEnv, part: Partition,

@@ -10,15 +10,25 @@ This module amortizes it: the round body runs inside a ``lax.scan`` over a
 *block* of ``block_size`` rounds, so one dispatch executes the whole block.
 Everything the host used to feed in per round (mixing matrices, active
 masks, CD budgets, batches) is pre-materialized as stacked ``(T, ...)``
-schedule arrays and sliced per block; metric history is recorded *on
-device* inside the scan (a ``lax.cond`` on a per-round record flag, so
-skipped rounds cost nothing) and fetched once at the end of the run. The
-carried state is donated (``donate_argnums``) so long runs reuse their
-``(K, d)``/``(K, n_k)`` buffers instead of reallocating them every round.
+schedule arrays and sliced per block. The carried state is donated
+(``donate_argnums``) so long runs reuse their ``(K, d)``/``(K, n_k)``
+buffers instead of reallocating them every round.
 
-The engine is shared by the CoLA driver (``repro.core.cola.run_cola``),
-the decentralized baselines (``repro.core.baselines``) and the gossip-DP
-optimizer (``repro.optim.gossip``).
+Recording and run control are delegated to a pluggable ``Recorder``
+(``repro.core.metrics``): its row is computed *on device* inside the scan
+(a ``lax.cond`` on a per-round record flag, so skipped rounds cost
+nothing) and fetched once at the end of the run. A recorder with a stop
+condition (``stop_fn``, e.g. the Prop.-1 certificate's ``certified`` flag
+or ``gap <= eps``) arms early exit: once a recorded row satisfies it, the
+remaining rounds of the block turn into ``lax.cond`` no-ops (state passes
+through bitwise-untouched) and the host skips all subsequent block
+dispatches, at the price of one scalar stop-flag sync per block.
+
+The engine is shared by all four drivers: the CoLA simulator
+(``repro.core.cola.run_cola``), the decentralized baselines
+(``repro.core.baselines``), the gossip-DP optimizer
+(``repro.optim.gossip``) and the shard_map distributed runtime
+(``repro.dist.runtime.run_dist_cola``).
 """
 from __future__ import annotations
 
@@ -239,6 +249,10 @@ class BlockRunResult(NamedTuple):
     state: Any
     metrics: np.ndarray | None  # (R, m) rows for rounds where record_mask
     aux: Any                    # per-round step outputs stacked over T, or None
+    # (R,) round indices of the metric rows — truncated at the stop round
+    # when the recorder's stop condition fired
+    rounds: np.ndarray | None = None
+    stop_round: int | None = None  # round that certified/stopped, or None
 
 
 def _num_rounds(schedule: Any, record_mask: np.ndarray | None,
@@ -257,7 +271,7 @@ def _num_rounds(schedule: Any, record_mask: np.ndarray | None,
 def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
                      state: Any, schedule: Any, *,
                      context: Any = None,
-                     record_fn: Callable[[Any], jax.Array] | None = None,
+                     recorder: Any = None,
                      record_mask: np.ndarray | None = None,
                      block_size: int = 64,
                      num_rounds: int | None = None,
@@ -275,83 +289,189 @@ def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
       context: run-constant pytree (e.g. the CoLA env) passed through to
         ``step_fn`` as a jit argument so large arrays are not baked into the
         executable as constants.
-      record_fn: ``state -> (m,)`` metric row, evaluated on device only for
-        rounds where ``record_mask`` is set.
+      recorder: a ``repro.core.metrics`` Recorder — its ``record_fn`` is
+        evaluated on device for rounds where ``record_mask`` is set, and its
+        ``stop_fn`` (when not None) arms early exit: the round whose row
+        satisfies the stop condition is the LAST live round — the remaining
+        rounds of its block are ``lax.cond`` no-ops and subsequent block
+        dispatches are skipped host-side. Early exit costs one scalar device
+        sync per block (the stop flag read); without a stop_fn the engine
+        keeps the historical fully-async single-fetch behaviour and the
+        identical compiled program.
       record_mask: ``(T,)`` bool — which rounds record a metric row.
       block_size: rounds per device dispatch. At most two program shapes are
         compiled (full block + remainder).
       num_rounds: explicit T when neither schedule nor record_mask carries it.
       cache_key: when set, the jitted block program is reused across calls
         (see ``cached_driver``) so repeated runs skip trace+compile. The key
-        must pin down ``step_fn``/``record_fn`` semantics and captured
-        constants — use ``fingerprint()`` for closed-over objects.
+        must pin down ``step_fn``/recorder semantics and captured constants —
+        use ``fingerprint()`` for closed-over objects and the recorder's
+        ``cache_token()``.
 
     Returns:
-      BlockRunResult(state, metrics, aux): ``metrics`` holds the recorded
-      rows only (record_mask applied), fetched in a single device sync at the
-      end; ``aux`` stacks the per-round step outputs over all T rounds.
+      BlockRunResult(state, metrics, aux, rounds, stop_round): ``metrics``
+      holds the recorded rows only (record_mask applied, truncated at the
+      stop round), fetched in a single device sync at the end; ``rounds``
+      are the corresponding round indices; ``aux`` stacks the per-round step
+      outputs over all executed rounds (no-op rounds after a stop contribute
+      zeros).
     """
     t_total = _num_rounds(schedule, record_mask, num_rounds)
+    record_fn = recorder.record_fn if recorder is not None else None
+    stop_fn = recorder.stop_fn if recorder is not None else None
+    # schedule-aware recorders (e.g. the dynamic churn certificate) receive
+    # the round's schedule slice alongside the state
+    uses_sched = bool(getattr(recorder, "uses_schedule", False))
     if record_fn is not None and record_mask is None:
         record_mask = np.ones((t_total,), dtype=bool)
     rec_all = (np.asarray(record_mask, dtype=bool)
                if record_fn is not None else np.zeros((t_total,), dtype=bool))
+    has_stop = stop_fn is not None
 
     def build():
-        def zero_row(s):
+        def rec_call(s, sched_t):
+            return record_fn(s, sched_t) if uses_sched else record_fn(s)
+
+        def zero_row(s, sched_t):
             # shape-only evaluation, re-derived per trace so a cached driver
             # stays correct if it is reused at different state shapes
-            sd = jax.eval_shape(record_fn, s)
+            sd = jax.eval_shape(rec_call, s, sched_t)
             return jnp.zeros(sd.shape, sd.dtype)
 
-        @partial(jax.jit, donate_argnums=(0,))
-        def run_block(st, ctx, sched, rec):
-            def body(s, xs):
-                sched_t, rec_t = xs
-                s, aux = step_fn(s, ctx, sched_t)
-                if record_fn is None:
-                    return s, (aux, None)
-                row = lax.cond(rec_t, record_fn, zero_row, s)
-                return s, (aux, row)
-            return lax.scan(body, st, (sched, rec))
+        if not has_stop:
+            # historical engine: no stop carry, no cond around the step —
+            # byte-identical program to the pre-recorder executor, which is
+            # what keeps GapRecorder histories bitwise reproducible
+            @partial(jax.jit, donate_argnums=(0,))
+            def run_block(st, ctx, sched, rec):
+                def body(s, xs):
+                    sched_t, rec_t = xs
+                    s, aux = step_fn(s, ctx, sched_t)
+                    if record_fn is None:
+                        return s, (aux, None)
+                    row = lax.cond(rec_t,
+                                   lambda ss: rec_call(ss, sched_t),
+                                   lambda ss: zero_row(ss, sched_t), s)
+                    return s, (aux, row)
+                return lax.scan(body, st, (sched, rec))
 
-        return run_block
+            return run_block
+
+        @partial(jax.jit, donate_argnums=(0,))
+        def run_block_stop(carry0, ctx, sched, rec):
+            def body(carry, xs):
+                s, stopped = carry
+                sched_t, rec_t = xs
+
+                def live(s):
+                    return step_fn(s, ctx, sched_t)
+
+                def skip(s):
+                    # post-certification rounds are no-ops: state passes
+                    # through untouched, which is what makes the stopped
+                    # run's final state bitwise equal to the full run's
+                    # state at the stop round
+                    aux_sd = jax.eval_shape(
+                        lambda ss: step_fn(ss, ctx, sched_t)[1], s)
+                    return s, jax.tree.map(
+                        lambda sd: jnp.zeros(sd.shape, sd.dtype), aux_sd)
+
+                s, aux = lax.cond(stopped, skip, live, s)
+                do_rec = jnp.logical_and(rec_t, jnp.logical_not(stopped))
+                row = lax.cond(do_rec,
+                               lambda ss: rec_call(ss, sched_t),
+                               lambda ss: zero_row(ss, sched_t), s)
+                stop_now = jnp.logical_and(do_rec, stop_fn(row))
+                return (s, jnp.logical_or(stopped, stop_now)), \
+                    (aux, row, do_rec)
+            return lax.scan(body, carry0, (sched, rec))
+
+        return run_block_stop
 
     run_block = cached_driver(cache_key, build)
 
-    rows, auxes = [], []
+    rows, valids, auxes = [], [], []
     start = 0
+    executed = 0
+    stopped_early = False
     with warnings.catch_warnings():
         if jax.default_backend() == "cpu":
             # donation is a no-op on CPU, so the warning is pure noise there;
             # on accelerators it signals real aliasing bugs — keep it
             warnings.filterwarnings("ignore", message=".*donated.*")
+        stop_flag = jnp.asarray(False)
         while start < t_total:
             stop = min(start + block_size, t_total)
             sched_b = jax.tree.map(lambda x: jnp.asarray(x[start:stop]),
                                    schedule)
-            state, (aux_b, rows_b) = run_block(
-                state, context, sched_b, jnp.asarray(rec_all[start:stop]))
+            rec_b = jnp.asarray(rec_all[start:stop])
+            if has_stop:
+                (state, stop_flag), (aux_b, rows_b, valid_b) = run_block(
+                    (state, stop_flag), context, sched_b, rec_b)
+                valids.append(valid_b)
+            else:
+                state, (aux_b, rows_b) = run_block(state, context, sched_b,
+                                                   rec_b)
             if rows_b is not None:
                 rows.append(rows_b)
             if aux_b is not None and jax.tree.leaves(aux_b):
                 auxes.append(aux_b)
             start = stop
+            executed = stop
+            # the host-side short-circuit: one scalar sync per block, only
+            # when early exit is armed
+            if has_stop and bool(stop_flag):
+                stopped_early = True
+                break
 
-    metrics = None
+    metrics = rounds = None
+    stop_round = None
     if record_fn is not None:
+        if has_stop and valids:
+            valid = np.concatenate([np.asarray(v) for v in valids], axis=0)
+        else:
+            valid = rec_all[:executed]
         if rows:
-            # the single end-of-run fetch: everything before this stayed async
             metrics = np.concatenate([np.asarray(r) for r in rows],
-                                     axis=0)[rec_all]
+                                     axis=0)[valid]
+            rounds = np.nonzero(valid)[0]
         else:  # T == 0: empty history, same as the loop drivers
-            row_sd = jax.eval_shape(record_fn, state)
+            if uses_sched:
+                sched0 = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                    schedule)
+                row_sd = jax.eval_shape(record_fn, state, sched0)
+            else:
+                row_sd = jax.eval_shape(record_fn, state)
             metrics = np.zeros((0,) + row_sd.shape, row_sd.dtype)
+            rounds = np.zeros((0,), dtype=np.int64)
+        if stopped_early and rounds.size:
+            stop_round = int(rounds[-1])
     aux = None
     if auxes:
         aux = jax.tree.map(lambda *xs: np.concatenate(
             [np.asarray(x) for x in xs], axis=0), *auxes)
-    return BlockRunResult(state=state, metrics=metrics, aux=aux)
+    return BlockRunResult(state=state, metrics=metrics, aux=aux,
+                          rounds=rounds, stop_round=stop_round)
+
+
+def make_block_runner(step_fn: Callable, *, recorder: Any = None,
+                      block_size: int = 64,
+                      cache_key: Any = None) -> Callable:
+    """Bind a round body and a Recorder into a reusable block runner.
+
+    Returns ``run(state, schedule, *, context=None, record_mask=None,
+    num_rounds=None) -> BlockRunResult`` — ``run_round_blocks`` with the
+    recorder/engine knobs fixed, the shape all four drivers consume.
+    """
+    def run(state, schedule, *, context=None, record_mask=None,
+            num_rounds=None):
+        return run_round_blocks(
+            step_fn, state, schedule, context=context, recorder=recorder,
+            record_mask=record_mask, block_size=block_size,
+            num_rounds=num_rounds, cache_key=cache_key)
+
+    return run
 
 
 def record_flags(rounds: int, record_every: int) -> np.ndarray:

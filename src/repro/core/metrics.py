@@ -1,0 +1,483 @@
+"""Pluggable recording/control layer for the round-block executor.
+
+A ``Recorder`` bundles the three things a driver previously wired by hand
+(three divergent copies across ``cola.py``, ``baselines.py`` and
+``dist/runtime.py``): what to measure each record round, what the columns are
+called, and when the run may stop early. The round-block executor
+(``repro.core.executor``) consumes a Recorder directly — the row is computed
+on device inside the scan, and when the recorder's stop condition fires the
+remaining rounds of the block become no-ops and subsequent block dispatches
+are skipped host-side.
+
+The protocol (duck-typed, no base class required):
+
+  labels      tuple[str, ...] — column names; drives history dict keys.
+  record_fn   state -> (len(labels),) row, pure jax (runs inside the scan).
+  stop_fn     None (never stop) or row -> scalar bool; evaluated only on
+              record rounds, so ``record_every`` is also the certification
+              cadence.
+  init_spec() pytree of per-run constant arrays the recorder derives at build
+              time (e.g. the sigma_k spectral-norm cache); the distributed
+              runtime shards these over the node mesh axis via
+              ``repro.dist.sharding.cola_recorder_pspecs``.
+  cache_token()  small hashable-by-``executor.fingerprint`` summary of the
+              recorder's semantics for compiled-driver cache keys (the big
+              arrays are determined by (problem, partition), which drivers
+              fingerprint separately).
+  collective_footprint(...)  bytes-per-record-round by collective kind on a
+              K-device mesh — what ``launch.dryrun --plan`` renders.
+
+Three implementations ship:
+
+* ``GapRecorder`` — the Lemma-2 ``gap_report`` (primal/dual/gap/consensus),
+  numerics unchanged from the historical drivers. On a mesh this gathers the
+  full (K, d)/(K, n_k) stacks per record round (GSPMD inserts the
+  collectives); with ``eps`` it stops when ``gap <= eps``.
+* ``CertificateRecorder`` — the Prop.-1 local certificates: condition (9)
+  from node-local quantities, condition (10) from the masked-neighbor
+  gradient mean (one gossip exchange of (d,)-vectors), summarized to scalar
+  reductions. The distributed runtime evaluates it with ``ppermute``/``psum``
+  of the LOCAL gradient — O(d) per device per record round, no stack
+  gathers. Stops at certification.
+* ``ComposedRecorder`` — concatenates several recorders' rows; stops when
+  any constituent's stop fires.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology as topo
+from repro.core.duality import (block_spectral_norms, certificate_thresholds,
+                                gap_report, neighbor_mask, neighborhood_mean,
+                                node_subproblem_gaps)
+from repro.core.partition import Partition
+
+GAP_METRICS = ("primal", "hamiltonian", "dual", "gap", "consensus_violation")
+CERT_METRICS = ("local_gap_max", "grad_disagreement_max", "cond9_nodes",
+                "cond10_nodes", "certified")
+
+
+@dataclasses.dataclass(frozen=True)
+class GapRecorder:
+    """Lemma-2 global diagnostics (the historical ``gap_report`` row).
+
+    ``record_fn`` is byte-for-byte the computation the drivers inlined before
+    the recorder layer existed, so metric histories reproduce exactly.
+    """
+
+    problem: Any
+    part: Partition
+    eps: float | None = None
+
+    labels = GAP_METRICS
+
+    def record_fn(self, state) -> jax.Array:
+        rep = gap_report(self.problem, self.part, state.x_parts,
+                         state.v_stack)
+        return jnp.stack([getattr(rep, name) for name in self.labels])
+
+    @property
+    def stop_fn(self) -> Callable | None:
+        if self.eps is None:
+            return None
+        eps, idx = self.eps, self.labels.index("gap")
+        return lambda row: row[idx] <= eps
+
+    def init_spec(self) -> dict:
+        return {}
+
+    def cache_token(self):
+        return ("GapRecorder", self.eps)
+
+    def collective_footprint(self, k: int, d: int, n_k: int,
+                             itemsize: int = 4, comm: str = "dense",
+                             conn: int = 1) -> dict:
+        # merge_vector + grad stack: every device materializes the full
+        # (K, n_k) and (K, d) stacks, plus scalar reductions for the row
+        return {"all-gather": k * (d + n_k) * itemsize,
+                "all-reduce": 2 * len(self.labels) * itemsize,
+                "collective-permute": 0}
+
+
+@dataclasses.dataclass(frozen=True)
+class CertificateRecorder:
+    """Prop.-1 local certificates as an on-device metric row.
+
+    All round-invariant inputs (sigma_k via ``block_spectral_norms``, the
+    Eq.-9/10 thresholds, the self-inclusive neighbor mask) are resolved at
+    construction — see ``certificate_recorder`` — so a record round costs one
+    gradient evaluation, one neighborhood exchange of (d,)-vectors and scalar
+    reductions. ``stop_fn`` fires at certification (``certified == 1``).
+    """
+
+    problem: Any
+    part: Partition
+    a_parts: jax.Array      # (K, d, n_k) — condition (9) needs A_[k]
+    gp_parts: jax.Array     # (K, n_k)
+    masks: jax.Array        # (K, n_k)
+    neigh_mask: jax.Array   # (K, K) 0/1, self-inclusive
+    sigma_k: jax.Array      # (K,) spectral-norm cache
+    eps: float
+    beta_ub: float
+    l_bound: float
+    gap_thresh: float
+    grad_thresh: float
+    stop_on_certified: bool = True
+    # churn mode: read the Eq.-10 neighborhood mask and threshold from the
+    # per-round schedule (support of the REWEIGHTED W_t, beta of the active
+    # subnetwork) instead of the static init-time constants — the static
+    # graph's denser mixing would otherwise yield a threshold looser than
+    # the churn round's actual exchange justifies. See ``dynamize`` /
+    # ``certificate_schedule``.
+    dynamic: bool = False
+
+    labels = CERT_METRICS
+
+    @property
+    def uses_schedule(self) -> bool:
+        return self.dynamic
+
+    def local_row_inputs(self, x_parts, v_stack, grads, neigh_mean):
+        """(local_gap, disagreement) per node — shared by the stacked
+        simulator path and the shard_map distributed path (which feeds the
+        per-device slices plus a ppermute-built ``neigh_mean``)."""
+        local_gap = node_subproblem_gaps(self.problem, x_parts, v_stack,
+                                         self.a_parts, self.gp_parts,
+                                         self.masks, grads)
+        disagree = jnp.linalg.norm(grads - neigh_mean, axis=1)
+        return local_gap, disagree
+
+    def summarize(self, local_gap, disagree, *, psum=None, pmax=None,
+                  grad_thresh=None, dtype=jnp.float32) -> jax.Array:
+        """Assemble the scalar row from per-node quantities.
+
+        ``psum``/``pmax`` default to identity (single-program stacked state);
+        the distributed runtime passes ``lax.psum``/``lax.pmax`` partials so
+        the cross-device reductions are scalar collectives. ``grad_thresh``
+        overrides the static Eq.-10 threshold (the dynamic churn path feeds
+        the per-round value).
+        """
+        psum = psum if psum is not None else (lambda x: x)
+        pmax = pmax if pmax is not None else (lambda x: x)
+        if grad_thresh is None:
+            grad_thresh = self.grad_thresh
+        k = self.part.num_nodes
+        cond9 = local_gap <= self.gap_thresh
+        cond10 = disagree <= grad_thresh
+        n9 = psum(jnp.sum(cond9.astype(dtype)))
+        n10 = psum(jnp.sum(cond10.astype(dtype)))
+        n_both = psum(jnp.sum((cond9 & cond10).astype(dtype)))
+        certified = (n_both == k).astype(dtype)
+        return jnp.stack([pmax(jnp.max(local_gap)).astype(dtype),
+                          pmax(jnp.max(disagree)).astype(dtype),
+                          n9, n10, certified])
+
+    def record_fn(self, state, sched=None) -> jax.Array:
+        grads = jax.vmap(self.problem.grad_f)(state.v_stack)   # (K, d)
+        if self.dynamic:
+            mask = sched["cert_mask"]
+            grad_thresh = sched["cert_grad_thresh"]
+        else:
+            mask, grad_thresh = self.neigh_mask, self.grad_thresh
+        neigh_mean = neighborhood_mean(grads, mask)
+        local_gap, disagree = self.local_row_inputs(
+            state.x_parts, state.v_stack, grads, neigh_mean)
+        return self.summarize(local_gap, disagree, grad_thresh=grad_thresh)
+
+    @property
+    def stop_fn(self) -> Callable | None:
+        if not self.stop_on_certified:
+            return None
+        idx = self.labels.index("certified")
+        return lambda row: row[idx] > 0
+
+    def init_spec(self) -> dict:
+        return {"sigma_k": self.sigma_k, "neigh_mask": self.neigh_mask}
+
+    def cache_token(self):
+        return ("CertificateRecorder", self.eps, self.beta_ub, self.l_bound,
+                self.gap_thresh, self.grad_thresh, self.stop_on_certified,
+                self.dynamic, np.asarray(self.neigh_mask).tobytes())
+
+    def collective_footprint(self, k: int, d: int, n_k: int,
+                             itemsize: int = 4, comm: str = "dense",
+                             conn: int = 1) -> dict:
+        scalars = (2 * len(self.labels) + 3) * itemsize
+        if comm == "ring":
+            # 2*conn ppermute pushes of one (d,) gradient + scalar psums
+            return {"all-gather": 0, "all-reduce": scalars,
+                    "collective-permute": 2 * conn * d * itemsize}
+        # dense fallback mirrors the round body's own gossip gather
+        return {"all-gather": k * d * itemsize, "all-reduce": scalars,
+                "collective-permute": 0}
+
+
+@dataclasses.dataclass(frozen=True)
+class ComposedRecorder:
+    """Concatenate several recorders into one row; stop when ANY constituent
+    recorder's stop condition fires. Labels must be pairwise disjoint."""
+
+    parts: tuple
+
+    def __post_init__(self):
+        labels = self.labels
+        if len(set(labels)) != len(labels):
+            raise ValueError(f"composed recorder labels collide: {labels}")
+
+    @property
+    def labels(self):
+        return tuple(lbl for p in self.parts for lbl in p.labels)
+
+    @property
+    def uses_schedule(self) -> bool:
+        return any(getattr(p, "uses_schedule", False) for p in self.parts)
+
+    def record_fn(self, state, sched=None) -> jax.Array:
+        return jnp.concatenate([
+            p.record_fn(state, sched)
+            if getattr(p, "uses_schedule", False) else p.record_fn(state)
+            for p in self.parts])
+
+    @property
+    def stop_fn(self) -> Callable | None:
+        stops = []
+        off = 0
+        for p in self.parts:
+            if p.stop_fn is not None:
+                stops.append((off, off + len(p.labels), p.stop_fn))
+            off += len(p.labels)
+        if not stops:
+            return None
+
+        def stop(row):
+            flags = [fn(row[a:b]) for a, b, fn in stops]
+            out = flags[0]
+            for f in flags[1:]:
+                out = jnp.logical_or(out, f)
+            return out
+
+        return stop
+
+    def init_spec(self) -> dict:
+        return {f"part{i}": p.init_spec() for i, p in enumerate(self.parts)}
+
+    def cache_token(self):
+        return ("ComposedRecorder",) + tuple(p.cache_token()
+                                             for p in self.parts)
+
+    def collective_footprint(self, k, d, n_k, itemsize=4, comm="dense",
+                             conn=1) -> dict:
+        out: dict = {}
+        for p in self.parts:
+            for kind, b in p.collective_footprint(
+                    k, d, n_k, itemsize, comm, conn).items():
+                out[kind] = out.get(kind, 0) + b
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class FnRecorder:
+    """Ad-hoc recorder from a bare row function (the baselines' objective /
+    consensus row, test probes). ``stop`` is an optional row -> bool."""
+
+    labels: tuple
+    fn: Callable
+    stop: Callable | None = None
+
+    def record_fn(self, state) -> jax.Array:
+        return self.fn(state)
+
+    @property
+    def stop_fn(self) -> Callable | None:
+        return self.stop
+
+    def init_spec(self) -> dict:
+        return {}
+
+    def cache_token(self):
+        # functions fingerprint by bytecode + closure via executor.fingerprint
+        return ("FnRecorder", self.labels, self.fn, self.stop)
+
+    def collective_footprint(self, k, d, n_k, itemsize=4, comm="dense",
+                             conn=1) -> dict:
+        return {"all-gather": 0, "all-reduce": 0, "collective-permute": 0}
+
+
+def certificate_recorder(problem, part: Partition, env, neighbors,
+                         eps: float, *, w=None,
+                         sigma_k: jax.Array | None = None,
+                         stop_on_certified: bool = True
+                         ) -> CertificateRecorder:
+    """Build a ``CertificateRecorder``, resolving every round-invariant input.
+
+    Args:
+      env: the ``ColaEnv`` (supplies a_parts / gp_parts / masks).
+      neighbors: adjacency (or mixing matrix) whose support defines N_k.
+      w: the mixing matrix used for the contraction bound beta; defaults to
+        Metropolis weights over ``neighbors`` when it is a Topology.
+      sigma_k: optional precomputed ``block_spectral_norms`` cache.
+    """
+    if isinstance(neighbors, topo.Topology):
+        graph = neighbors
+        neighbors = graph.adjacency
+        if w is None:
+            w = topo.metropolis_weights(graph)
+    if w is None:
+        w = np.asarray(neighbors, dtype=np.float64)
+    l_bound = float(problem.l_bound)
+    if not math.isfinite(l_bound):
+        raise ValueError(
+            f"problem {problem.name!r} has unbounded g_i support "
+            "(l_bound=inf): Prop. 1 needs an L-bounded problem "
+            "(lasso / box-constrained) — use the gap recorder instead")
+    k = part.num_nodes
+    sigma_k = block_spectral_norms(env.a_parts, cache=sigma_k)
+    beta_ub = float(topo.beta(np.asarray(w)))
+    mask = neighbor_mask(neighbors, k, dtype=env.a_parts.dtype)
+    gap_thresh, grad_thresh = certificate_thresholds(
+        env.masks, sigma_k, beta_ub, l_bound, eps, k)
+    return CertificateRecorder(
+        problem=problem, part=part, a_parts=env.a_parts,
+        gp_parts=env.gp_parts, masks=env.masks, neigh_mask=mask,
+        sigma_k=sigma_k, eps=float(eps), beta_ub=beta_ub, l_bound=l_bound,
+        gap_thresh=float(gap_thresh), grad_thresh=float(grad_thresh),
+        stop_on_certified=stop_on_certified)
+
+
+def dynamize(recorder):
+    """Churn-aware variant: every certificate part reads its Eq.-10
+    neighborhood mask and threshold from the per-round schedule (see
+    ``certificate_schedule``) instead of the static init-time graph — the
+    static graph's denser mixing would make the threshold unsoundly loose
+    during rounds where nodes have dropped."""
+    if isinstance(recorder, ComposedRecorder):
+        return dataclasses.replace(recorder, parts=tuple(
+            dynamize(p) for p in recorder.parts))
+    if isinstance(recorder, CertificateRecorder):
+        return dataclasses.replace(recorder, dynamic=True)
+    return recorder
+
+
+def first_certificate(recorder) -> CertificateRecorder | None:
+    if isinstance(recorder, CertificateRecorder):
+        return recorder
+    if isinstance(recorder, ComposedRecorder):
+        for p in recorder.parts:
+            found = first_certificate(p)
+            if found is not None:
+                return found
+    inner = getattr(recorder, "_inner", None)
+    return first_certificate(inner) if inner is not None else None
+
+
+def certificate_round_inputs(cert: CertificateRecorder, w_t, active
+                             ) -> tuple[np.ndarray, float]:
+    """(neighbor mask, Eq.-10 threshold) for ONE churn round: the mask is
+    the support of the reweighted W_t (self-inclusive — dropped neighbors
+    have W_kj = 0 and leave the neighborhood, as the real exchange would),
+    and the threshold re-derives with beta of the ACTIVE subnetwork's
+    mixing submatrix (frozen nodes are fixed points of W_t, whose trivial
+    eigenvalue-1 blocks say nothing about the survivors' contraction)."""
+    w_t = np.asarray(w_t, np.float64)
+    k = w_t.shape[0]
+    mask = (w_t != 0) | np.eye(k, dtype=bool)
+    act = np.asarray(active) > 0
+    beta_t = topo.beta(w_t[np.ix_(act, act)]) if act.sum() > 1 else 0.0
+    n_sizes = np.sum(np.asarray(cert.masks), axis=1)
+    scale = float(np.sum(n_sizes ** 2 * np.asarray(cert.sigma_k)))
+    thresh = (scale ** -0.5) * (1.0 - beta_t) / (
+        2.0 * cert.l_bound * np.sqrt(float(k))) * cert.eps
+    return mask, float(thresh)
+
+
+def certificate_schedule(recorder, w_stack, actives,
+                         record_mask: np.ndarray) -> dict:
+    """Materialize the dynamic certificate's per-round schedule entries:
+    ``cert_mask`` (T, K, K) and ``cert_grad_thresh`` (T,), evaluated only
+    for record rounds (other rounds' slices are never read under the
+    ``lax.cond`` record flag)."""
+    cert = first_certificate(recorder)
+    t, k = np.shape(w_stack)[0], np.shape(w_stack)[1]
+    dtype = np.asarray(w_stack[:1]).dtype if t else np.float32
+    masks = np.zeros((t, k, k), dtype=dtype)
+    thresh = np.zeros((t,), dtype=dtype)
+    for t_i in np.nonzero(np.asarray(record_mask, dtype=bool))[0]:
+        m, th = certificate_round_inputs(cert, w_stack[t_i], actives[t_i])
+        masks[t_i] = m
+        thresh[t_i] = th
+    return {"cert_mask": masks, "cert_grad_thresh": thresh}
+
+
+def make_recorder(kind, problem, part: Partition, env, graph,
+                  w, eps: float | None):
+    """Resolve a driver's ``recorder=`` argument ("gap", "certificate",
+    "gap+certificate", or an already-built Recorder instance).
+
+    ``eps`` arms early stopping: the gap recorder stops at ``gap <= eps``,
+    the certificate recorder at Prop.-1 certification of ``eps``. In the
+    composed form only the certificate drives the stop (the gap columns are
+    recorded for reference).
+    """
+    if not isinstance(kind, str):
+        return kind
+    if kind == "gap":
+        return GapRecorder(problem, part, eps=eps)
+    if kind in ("certificate", "gap+certificate"):
+        if eps is None:
+            raise ValueError(
+                f"recorder={kind!r} needs eps=: the Prop.-1 conditions "
+                "certify a specific accuracy")
+        cert = certificate_recorder(problem, part, env, graph.adjacency,
+                                    eps, w=w)
+        if kind == "certificate":
+            return cert
+        return ComposedRecorder((GapRecorder(problem, part, eps=None), cert))
+    raise ValueError(f"unknown recorder {kind!r} (want 'gap', 'certificate', "
+                     "'gap+certificate' or a Recorder instance)")
+
+
+def history_from(recorder, result) -> dict:
+    """Build the driver history dict from a ``BlockRunResult``: one list per
+    recorder label, the recorded round indices (truncated at early stop) and
+    the stop round (None when the run used its full budget)."""
+    history: dict = {"round": [int(t) for t in result.rounds]}
+    for j, name in enumerate(recorder.labels):
+        history[name] = [float(v) for v in result.metrics[:, j]]
+    history["stop_round"] = result.stop_round
+    return history
+
+
+def render_footprints(k: int, d: int, n_k: int, itemsize: int = 4) -> str:
+    """Human-readable per-record-round collective footprint of the stock
+    recorders on a K-device node mesh (the ``dryrun --plan`` section)."""
+    dummy_part = Partition(num_nodes=k, n=k * n_k, block=n_k)
+    gap = GapRecorder(problem=None, part=dummy_part)
+    # footprint needs no arrays — build the certificate entry structurally
+    lines = [f"[cola recorder footprint] K={k} d={d} n_k={n_k} "
+             f"itemsize={itemsize} (bytes per device per record round)"]
+    rows = [("gap (gather)", "dense",
+             gap.collective_footprint(k, d, n_k, itemsize)),
+            ("certificate", "dense",
+             CertificateRecorder.collective_footprint(
+                 _FootprintOnly(), k, d, n_k, itemsize, "dense")),
+            ("certificate", "ring",
+             CertificateRecorder.collective_footprint(
+                 _FootprintOnly(), k, d, n_k, itemsize, "ring"))]
+    for name, comm, fp in rows:
+        body = "  ".join(f"{kind}={fp[kind]:,}" for kind in
+                         ("all-gather", "collective-permute", "all-reduce"))
+        lines.append(f"  {name:<16} comm={comm:<6} {body}")
+    return "\n".join(lines)
+
+
+class _FootprintOnly:
+    """Stand-in self for ``CertificateRecorder.collective_footprint`` so the
+    plan can be rendered without materializing problem arrays."""
+
+    labels = CERT_METRICS

@@ -20,9 +20,21 @@ and as cheap to dispatch:
   per link per gossip step, the paper's communication model); ``comm="dense"``
   is the arbitrary-graph fallback (all-gather + W matmul) and the mode that
   is bitwise identical to the simulator on a 1-device mesh.
+
+Metric recording follows the same split (``repro.core.metrics`` recorders):
+the gap recorder evaluates ``gap_report`` on the globally-sharded state and
+lets GSPMD insert the (K, d)/(K, n_k) stack gathers — fine at paper scale,
+O(K) bytes per device per record round. The Prop.-1 certificate recorder
+instead records UNDER shard_map from local quantities: gradients of the
+local node block, the Eq.-10 neighborhood mean via ``lax.ppermute`` of the
+(d,)-sized local gradient (ring) and scalar ``psum``/``pmax`` reductions
+for the row — O(d) per device per record round, no stack gathers (asserted
+against the lowered HLO in tests via ``launch.hlo_analysis``). Certificate
+stop conditions short-circuit remaining rounds exactly as in the simulator.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable
 
 import jax
@@ -31,14 +43,16 @@ import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import executor as exec_engine, mixing, topology as topo
-from repro.core.cola import (ColaConfig, RunResult, _METRICS,
+from repro.core import executor as exec_engine, metrics as metrics_lib, \
+    mixing, topology as topo
+from repro.core.cola import (ColaConfig, RunResult,
                              _materialize_schedule, _reset_leavers,
                              _round_body, build_env, init_state)
-from repro.core.duality import gap_report
+from repro.core.duality import neighborhood_mean
 from repro.core.partition import make_partition
 from repro.core.problems import Problem
-from repro.dist.sharding import cola_env_pspecs, cola_state_pspecs
+from repro.dist.sharding import (cola_env_pspecs, cola_recorder_pspecs,
+                                 cola_state_pspecs)
 
 
 def _dist_mixers(axis: str, local_nodes: int, conn: int, comm: str,
@@ -84,10 +98,152 @@ def _dist_mixers(axis: str, local_nodes: int, conn: int, comm: str,
     return mix_fn, grad_mix_fn
 
 
+# ---------------------------------------------------------------------------
+# distributed recorders
+# ---------------------------------------------------------------------------
+
+def _place_recorder(recorder, mesh, axis):
+    """Lay the recorder's per-run arrays (its ``init_spec`` state plus the
+    per-node problem blocks it closes over) out over the node mesh axis, so
+    the record program's captured constants start sharded like the state."""
+    if isinstance(recorder, metrics_lib.ComposedRecorder):
+        return dataclasses.replace(recorder, parts=tuple(
+            _place_recorder(p, mesh, axis) for p in recorder.parts))
+    if not isinstance(recorder, metrics_lib.CertificateRecorder):
+        return recorder
+    arrays = {"a_parts": recorder.a_parts, "gp_parts": recorder.gp_parts,
+              "masks": recorder.masks, **recorder.init_spec()}
+    specs = cola_recorder_pspecs(axis, arrays)
+    placed = {name: jax.device_put(arr, NamedSharding(mesh, specs[name]))
+              for name, arr in arrays.items()}
+    return dataclasses.replace(recorder, **placed)
+
+
+def _certificate_dist_record(rec, mesh, axis: str, local_nodes: int,
+                             comm: str, conn: int) -> Callable:
+    """Shard_map record_fn for ``CertificateRecorder``: O(d) collectives.
+
+    Condition (9) is node-local. Condition (10)'s neighborhood mean comes
+    from the gossip exchange pattern itself: on the ring, ``2*conn``
+    ``ppermute`` pushes of this device's (d,) gradient (the certificate's
+    only vector communication); on the dense fallback, the same all-gather
+    the round body already performs. Row entries reduce with scalar
+    ``psum``/``pmax`` — on a 1-device mesh every collective degenerates to
+    the identity and the program is bitwise the simulator's record_fn.
+    """
+    k = rec.part.num_nodes
+    if comm == "ring":
+        # the ppermute neighborhood is the circulant band; the recorder's
+        # mask must agree with it or the mean would silently differ from
+        # the stacked oracle
+        band = np.zeros((k, k))
+        idx = np.arange(k)
+        for off in range(-conn, conn + 1):
+            band[idx, (idx + off) % k] = 1.0
+        if not np.array_equal(np.asarray(rec.neigh_mask) != 0, band != 0):
+            raise ValueError(
+                "certificate recording with comm='ring' needs the graph's "
+                f"neighborhoods to be the circulant band of conn={conn}")
+
+    def body(x_l, v_l, a_l, gp_l, m_l, nm_l, thr):
+        grads = jax.vmap(rec.problem.grad_f)(v_l)            # (ln, d)
+        if comm == "ring":
+            g = grads[0]
+            nsum = g
+            for off in range(1, conn + 1):
+                fwd = lax.ppermute(g, axis,
+                                   [(i, (i + off) % k) for i in range(k)])
+                bwd = lax.ppermute(g, axis,
+                                   [((i + off) % k, i) for i in range(k)])
+                nsum = nsum + fwd + bwd
+            neigh_mean = (nsum / (2 * conn + 1))[None]       # (1, d)
+        else:
+            full = lax.all_gather(grads, axis, tiled=True)   # (K, d)
+            neigh_mean = neighborhood_mean(full, nm_l)       # (ln, d)
+        # condition (9) uses only this device's blocks — swap the local
+        # slices in so the vmapped node math runs on (ln, ...) operands
+        local = dataclasses.replace(rec, a_parts=a_l, gp_parts=gp_l,
+                                    masks=m_l)
+        local_gap, disagree = local.local_row_inputs(x_l, v_l, grads,
+                                                     neigh_mean)
+        return rec.summarize(local_gap, disagree, grad_thresh=thr,
+                             psum=lambda s: lax.psum(s, axis),
+                             pmax=lambda s: lax.pmax(s, axis))
+
+    node, repl = P(axis), P()
+    shard = mixing.shard_map(
+        body, mesh,
+        in_specs=(node, node, node, node, node, node, repl), out_specs=P())
+
+    def record(state, sched=None):
+        if rec.dynamic:
+            # churn: the reweighted round's neighbor mask + threshold come
+            # in through the schedule (see metrics.certificate_schedule)
+            nm, thr = sched["cert_mask"], sched["cert_grad_thresh"]
+        else:
+            nm, thr = rec.neigh_mask, jnp.asarray(rec.grad_thresh)
+        return shard(state.x_parts, state.v_stack, rec.a_parts,
+                     rec.gp_parts, rec.masks, nm, thr)
+
+    return record
+
+
+def _dist_record_fn(recorder, mesh, axis, local_nodes, comm, conn
+                    ) -> Callable:
+    """The distributed record program for any recorder: certificates record
+    under shard_map (O(d) collectives), everything else records on the
+    globally-sharded state as-is (GSPMD inserts the gathers)."""
+    if isinstance(recorder, metrics_lib.ComposedRecorder):
+        pairs = [(p, _dist_record_fn(p, mesh, axis, local_nodes, comm, conn))
+                 for p in recorder.parts]
+        return lambda st, sched=None: jnp.concatenate([
+            f(st, sched) if getattr(p, "uses_schedule", False) else f(st)
+            for p, f in pairs])
+    if isinstance(recorder, metrics_lib.CertificateRecorder):
+        return _certificate_dist_record(recorder, mesh, axis, local_nodes,
+                                        comm, conn)
+    return recorder.record_fn
+
+
+class _DistRecorder:
+    """Duck-typed Recorder view with the record program specialized for the
+    mesh; labels / stop condition / cache identity delegate to the inner
+    recorder (plus the comm layout, which changes the compiled program)."""
+
+    def __init__(self, inner, record_fn, comm: str, conn: int):
+        self._inner = inner
+        self._record_fn = record_fn
+        self._comm, self._conn = comm, conn
+
+    @property
+    def labels(self):
+        return self._inner.labels
+
+    @property
+    def uses_schedule(self):
+        return bool(getattr(self._inner, "uses_schedule", False))
+
+    def record_fn(self, state, sched=None):
+        if self.uses_schedule:
+            return self._record_fn(state, sched)
+        return self._record_fn(state)
+
+    @property
+    def stop_fn(self):
+        return self._inner.stop_fn
+
+    def init_spec(self):
+        return self._inner.init_spec()
+
+    def cache_token(self):
+        return ("dist", self._comm, self._conn, self._inner.cache_token())
+
+
 def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
                   mesh, rounds: int, *, comm: str = "ring",
                   axis: str | None = None, conn: int = 1,
                   record_every: int = 1,
+                  recorder="gap", eps: float | None = None,
                   active_schedule=None, budget_schedule=None,
                   leave_mode: str = "freeze", seed: int = 0,
                   w_override: np.ndarray | None = None,
@@ -95,7 +251,8 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
     """Run Algorithm 1 with the node axis sharded over ``mesh``.
 
     Args mirror ``run_cola`` (same schedules, same rng consumption, same
-    history layout) plus:
+    history layout, same ``recorder``/``eps`` certificate-driven stopping)
+    plus:
 
       mesh: a jax Mesh; the node axis K shards over ``axis`` (default: the
         mesh's first axis), K % axis_size == 0, K/axis_size nodes per device.
@@ -103,6 +260,10 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         device) or "dense" (all-gather + W matmul; any W, any node count —
         and bitwise identical to ``run_cola`` on a 1-device mesh).
       conn: connectivity of the circulant band for ``comm="ring"``.
+
+    The certificate recorder records under shard_map from local gradients
+    (``ppermute``/``psum``, O(d) per device per record round); the gap
+    recorder keeps the gather-everything ``gap_report`` semantics.
 
     Returns ``RunResult(state, history)`` with the fully-stacked (K, ...)
     state, like the simulator.
@@ -137,6 +298,11 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
     has_budget = "budgets" in sched
     has_reset = "leavers" in sched
 
+    rec = metrics_lib.make_recorder(recorder, problem, part, env, graph,
+                                    base_w, eps)
+    if active_schedule is not None:
+        rec = metrics_lib.dynamize(rec)  # churn-aware certificate inputs
+
     # lay the node axis of state + env over the mesh axis up front so the
     # donated buffers never migrate between blocks
     state_spec, env_spec = cola_state_pspecs(axis), cola_env_pspecs(axis)
@@ -144,6 +310,10 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         lambda x: jax.device_put(x, NamedSharding(mesh, state_spec)), state)
     env = jax.tree.map(
         lambda x: jax.device_put(x, NamedSharding(mesh, env_spec)), env)
+    rec = _place_recorder(rec, mesh, axis)
+    dist_rec = _DistRecorder(
+        rec, _dist_record_fn(rec, mesh, axis, local_nodes, comm, conn),
+        comm, conn)
 
     mix_fn, grad_mix_fn = _dist_mixers(axis, local_nodes, conn, comm,
                                        cfg.gossip_steps)
@@ -187,21 +357,15 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
     sched = dict(sched)
     sched["_pad"] = zeros_k  # scalar per-round filler for unused operands
 
-    def record_fn(st):
-        # the state arrays are ordinary (sharded) jit values here, outside
-        # the shard_map — this is gap_report exactly as the simulator runs
-        # it, GSPMD inserting the gathers
-        rep = gap_report(problem, part, st.x_parts, st.v_stack)
-        return jnp.stack([getattr(rep, name) for name in _METRICS])
-
-    rec = exec_engine.record_flags(rounds, record_every)
+    rec_mask = exec_engine.record_flags(rounds, record_every)
+    if dist_rec.uses_schedule:
+        sched.update(metrics_lib.certificate_schedule(
+            rec, sched["w"], sched["active"], rec_mask))
     res = exec_engine.run_round_blocks(
-        step_fn, state, sched, context=env, record_fn=record_fn,
-        record_mask=rec, block_size=block_size,
+        step_fn, state, sched, context=env, recorder=dist_rec,
+        record_mask=rec_mask, block_size=block_size,
         cache_key=("cola-dist", exec_engine.fingerprint(problem), part, cfg,
-                   mesh, axis, comm, conn, has_budget, has_reset))
-
-    history: dict = {"round": [int(t) for t in np.nonzero(rec)[0]]}
-    for j, name in enumerate(_METRICS):
-        history[name] = [float(v) for v in res.metrics[:, j]]
-    return RunResult(state=res.state, history=history)
+                   mesh, axis, comm, conn, has_budget, has_reset,
+                   dist_rec.cache_token()))
+    return RunResult(state=res.state,
+                     history=metrics_lib.history_from(dist_rec, res))

@@ -199,3 +199,17 @@ def cola_env_pspecs(axis: str) -> Any:
     its leading node axis; nothing is replicated but the Problem constants
     baked into the compiled round program."""
     return P(axis)
+
+
+def cola_recorder_pspecs(axis: str, rec_state: Any) -> Any:
+    """Specs for a recorder's per-run state (``Recorder.init_spec``): every
+    array with a leading node dimension — the ``sigma_k`` spectral-norm
+    cache (K,), the self-inclusive neighbor mask (K, K), the per-node
+    problem blocks the certificate's condition (9) consumes — shards its
+    node axis over ``axis``; scalars (thresholds, bounds) replicate. This is
+    what keeps certificate record rounds gather-free: every operand of the
+    shard_map record program is already node-sharded."""
+    import numpy as np
+
+    return jax.tree.map(
+        lambda x: P(axis) if np.ndim(x) >= 1 else P(), rec_state)

@@ -452,6 +452,11 @@ def main() -> None:
     ap.add_argument("--moe-grouped", action="store_true")
     ap.add_argument("--serve-resident", action="store_true")
     ap.add_argument("--swa-window", type=int, default=0)
+    ap.add_argument("--cola-d", type=int, default=1 << 20,
+                    help="--plan: CoLA problem dimension d for the recorder "
+                         "collective-footprint section")
+    ap.add_argument("--cola-n", type=int, default=1 << 24,
+                    help="--plan: CoLA coordinate count n (n_k = n / K)")
     args = ap.parse_args()
     opts = Opts(attn_bf16=args.attn_bf16, remat_policy=args.remat_policy,
                 microbatches=args.microbatches,
@@ -473,6 +478,16 @@ def main() -> None:
         for a, s in pairs:
             print(render_plan(a, s, multi_pod=args.multi_pod, opts=opts),
                   flush=True)
+        # the CoLA control plane rides the same meshes: show what one metric
+        # record round moves per device under each recorder (the gap
+        # recorder gathers the stacks; the Prop.-1 certificate recorder is
+        # O(d) on the ring) so the recording cadence can be budgeted like
+        # any other collective
+        from repro.core import metrics as cola_metrics
+        k_nodes = 2 * 256 if args.multi_pod else 16
+        print(cola_metrics.render_footprints(k=k_nodes, d=args.cola_d,
+                                             n_k=args.cola_n // k_nodes),
+              flush=True)
         return
 
     os.makedirs(args.out, exist_ok=True)

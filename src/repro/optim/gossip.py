@@ -31,7 +31,8 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import executor as exec_engine, mixing, topology as topo
+from repro.core import executor as exec_engine, metrics as metrics_lib, \
+    mixing, topology as topo
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,7 +139,8 @@ def mix_schedule(rounds: int, mix_every: int) -> np.ndarray:
 
 def make_gossip_block_runner(local_step: Callable, gcfg: GossipConfig, *,
                              mesh=None, axis: str | None = None,
-                             conn: int | None = None) -> Callable:
+                             conn: int | None = None,
+                             recorder=None) -> Callable:
     """Round-block gossip-DP: many local-step+mix rounds per device dispatch.
 
     The per-round ``make_gossip_step`` path dispatches one jitted program per
@@ -153,12 +155,19 @@ def make_gossip_block_runner(local_step: Callable, gcfg: GossipConfig, *,
     shard_map/``lax.ppermute`` ring over that mesh axis (circulant W of
     connectivity ``conn``, exactly as in ``make_gossip_step``).
 
-    Returns ``run(states, batches, w, active, mix, *, block_size=32)`` with
+    A ``repro.core.metrics`` Recorder (e.g. ``ConsensusRecorder``) adds
+    on-device eval rows over the replica stack — with a stop condition the
+    engine short-circuits remaining rounds exactly as in the CoLA drivers
+    (consensus-driven early exit).
+
+    Returns ``run(states, batches, w, active, mix, *, block_size=32,
+    record_mask=None)`` with
       batches: (T, K, ...) stacked batch pytree,
       w:       (T, K, K) per-round mixing matrices,
       active:  (T, K) participation masks,
       mix:     (T,) bool gossip-mix flags (see ``mix_schedule``),
-    returning (states, metrics) where metrics leaves are (T, ...) stacks.
+    returning (states, metrics) — metrics leaves are (T, ...) stacks — or,
+    when a recorder is set, (states, metrics, history).
     NOTE: ``states`` buffers are donated — do not reuse the argument.
     """
     mix_params = _param_mixer(gcfg, mesh, axis, conn)
@@ -176,13 +185,50 @@ def make_gossip_block_runner(local_step: Callable, gcfg: GossipConfig, *,
             lambda p: p, keep.params)
         return keep._replace(params=mixed), metrics
 
-    def run(states, batches, w, active, mix, *, block_size: int = 32):
+    def run(states, batches, w, active, mix, *, block_size: int = 32,
+            record_mask=None):
         sched = {"batch": batches, "w": w, "active": active, "mix": mix}
         res = exec_engine.run_round_blocks(step_fn, states, sched,
+                                           recorder=recorder,
+                                           record_mask=record_mask,
                                            block_size=block_size)
-        return res.state, res.aux
+        if recorder is None:
+            return res.state, res.aux
+        return res.state, res.aux, metrics_lib.history_from(recorder, res)
 
     return run
+
+
+@dataclasses.dataclass(frozen=True)
+class ConsensusRecorder:
+    """Recorder over the (K, ...)-stacked replica state: the deep-net
+    consensus distance (Fig. 5 analogue), with optional early stop once the
+    replicas agree to ``eps`` (e.g. after a final full-averaging round)."""
+
+    eps: float | None = None
+
+    labels = ("consensus_distance",)
+
+    def record_fn(self, states) -> jax.Array:
+        return jnp.stack([consensus_distance(states.params)])
+
+    @property
+    def stop_fn(self):
+        if self.eps is None:
+            return None
+        eps = self.eps
+        return lambda row: row[0] <= eps
+
+    def init_spec(self) -> dict:
+        return {}
+
+    def cache_token(self):
+        return ("ConsensusRecorder", self.eps)
+
+    def collective_footprint(self, k, d, n_k, itemsize=4, comm="dense",
+                             conn=1) -> dict:
+        return {"all-gather": 0, "all-reduce": 2 * itemsize,
+                "collective-permute": 0}
 
 
 def replicate_state(state: Any, k: int) -> Any:

@@ -117,6 +117,8 @@ def test_forced_cd_modes_build_matching_env(ridge):
 
 def test_executor_generic_aux_and_metrics():
     """The engine stacks per-round aux outputs and applies the record mask."""
+    from repro.core.metrics import FnRecorder
+
     def step(s, _ctx, sched_t):
         s = s + sched_t["inc"]
         return s, s * 2.0
@@ -125,12 +127,51 @@ def test_executor_generic_aux_and_metrics():
     sched = {"inc": np.arange(1.0, 8.0, dtype=np.float32)}
     rec = np.array([True, False, False, True, False, False, True])
     res = run_round_blocks(step, state, sched,
-                           record_fn=lambda s: jnp.stack([s]),
+                           recorder=FnRecorder(("x",),
+                                               lambda s: jnp.stack([s])),
                            record_mask=rec, block_size=3)
     totals = np.cumsum(np.arange(1.0, 8.0))
     assert float(res.state) == totals[-1]
     np.testing.assert_allclose(res.aux[:, ...], 2.0 * totals)
     np.testing.assert_allclose(res.metrics[:, 0], totals[rec])
+    assert list(res.rounds) == [0, 3, 6]
+    assert res.stop_round is None
+
+
+def test_executor_early_stop_truncates_and_freezes_state():
+    """A recorder stop condition turns the rest of the block into no-ops and
+    skips later blocks: final state == the full run's state at the stop
+    round, metrics truncate at the certifying row."""
+    from repro.core.metrics import FnRecorder
+
+    def step(s, _ctx, sched_t):
+        return s + sched_t["inc"], None
+
+    sched = {"inc": np.ones((20,), dtype=np.float32)}
+    recorder = FnRecorder(("x",), lambda s: jnp.stack([s]),
+                          stop=lambda row: row[0] >= 7.0)
+    res = run_round_blocks(step, jnp.zeros(()), sched, recorder=recorder,
+                           block_size=6)
+    # rounds are 1-indexed in value: after round t state == t+1; 7 at t=6
+    assert res.stop_round == 6
+    assert float(res.state) == 7.0
+    assert list(res.rounds) == list(range(7))
+    np.testing.assert_allclose(res.metrics[:, 0], np.arange(1.0, 8.0))
+
+
+def test_make_block_runner_binds_recorder():
+    """make_block_runner: the bound runner reproduces run_round_blocks."""
+    from repro.core.executor import make_block_runner
+    from repro.core.metrics import FnRecorder
+
+    def step(s, _ctx, sched_t):
+        return s + sched_t["inc"], None
+
+    run = make_block_runner(step, recorder=FnRecorder(
+        ("x",), lambda s: jnp.stack([s]), stop=lambda row: row[0] >= 3.0),
+        block_size=4)
+    res = run(jnp.zeros(()), {"inc": np.ones((10,), np.float32)})
+    assert res.stop_round == 2 and float(res.state) == 3.0
 
 
 # ---------------------------------------------------------------------------

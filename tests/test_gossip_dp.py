@@ -109,3 +109,39 @@ def test_gossip_b_steps_contracts_faster(setup):
     d1 = float(gsp.consensus_distance(gsp.mix_pytree(w, noise, steps=1)))
     d3 = float(gsp.consensus_distance(gsp.mix_pytree(w, noise, steps=3)))
     assert d3 < d1 < d0
+
+
+def test_gossip_block_runner_consensus_recorder(setup):
+    """The block runner threads a Recorder: on-device consensus rows come
+    back as a history, and a consensus stop condition short-circuits the
+    remaining rounds (the CoLA early-exit machinery on the gossip path)."""
+    cfg, hp, state0, local, pipe = setup
+    k, rounds = 4, 6
+    gcfg = gsp.GossipConfig(num_nodes=k, topology="complete")
+    w = jnp.full((k, k), 1.0 / k, jnp.float32)  # full averaging: consensus
+    act = jnp.ones((k,), jnp.float32)
+    batches = [_stack_batches(pipe, t, k) for t in range(rounds)]
+    bat_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+
+    runner = gsp.make_gossip_block_runner(
+        local, gcfg, recorder=gsp.ConsensusRecorder())
+    states, metrics, hist = runner(
+        gsp.replicate_state(state0, k), bat_stack,
+        jnp.broadcast_to(w, (rounds, k, k)),
+        jnp.broadcast_to(act, (rounds, k)), gsp.mix_schedule(rounds, 1),
+        block_size=3)
+    assert hist["round"] == list(range(rounds))
+    assert hist["stop_round"] is None
+    assert all(d < 1e-6 for d in hist["consensus_distance"])  # full mix
+    assert np.asarray(metrics["loss"]).shape[0] == rounds
+
+    # armed stop: full averaging certifies consensus on the first record
+    runner2 = gsp.make_gossip_block_runner(
+        local, gcfg, recorder=gsp.ConsensusRecorder(eps=1e-6))
+    _, _, hist2 = runner2(
+        gsp.replicate_state(state0, k), bat_stack,
+        jnp.broadcast_to(w, (rounds, k, k)),
+        jnp.broadcast_to(act, (rounds, k)), gsp.mix_schedule(rounds, 1),
+        block_size=3)
+    assert hist2["stop_round"] == 0
+    assert hist2["round"] == [0]

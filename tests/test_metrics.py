@@ -1,0 +1,183 @@
+"""The pluggable recorder layer: GapRecorder bitwise-reproduces the
+historical histories, certificate-driven early stopping truncates metrics
+and freezes state bitwise, composition and the driver plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import metrics as metrics_lib, problems, topology as topo
+from repro.core.cola import ColaConfig, build_env, run_cola
+from repro.core.duality import gap_report
+from repro.core.partition import make_partition
+from repro.data import synthetic
+
+K = 8
+
+
+@pytest.fixture(scope="module")
+def lasso_prob():
+    x, y, _ = synthetic.regression(150, 48, seed=2, sparsity_solution=0.2)
+    return problems.lasso(jnp.asarray(x), jnp.asarray(y), 5e-2, box=5.0)
+
+
+@pytest.fixture(scope="module")
+def ridge():
+    x, y, _ = synthetic.regression(150, 48, seed=4)
+    return problems.ridge_primal(jnp.asarray(x), jnp.asarray(y), 1e-2)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return topo.connected_cycle(K, 2)
+
+
+def test_gap_recorder_row_is_gap_report(ridge, graph):
+    """GapRecorder's on-device row == a direct gap_report evaluation — the
+    executor refactor is numerics-neutral for the historical metrics."""
+    res = run_cola(ridge, graph, ColaConfig(kappa=1.0), 30, record_every=10)
+    part = make_partition(ridge.n, K)
+    rep = gap_report(ridge, part, res.state.x_parts, res.state.v_stack)
+    for name in metrics_lib.GAP_METRICS:
+        np.testing.assert_allclose(res.history[name][-1],
+                                   float(getattr(rep, name)),
+                                   rtol=1e-5, atol=1e-7, err_msg=name)
+    assert res.history["stop_round"] is None
+
+
+def test_gap_recorder_histories_bitwise_stable(ridge, graph):
+    """Two identical runs through the recorder layer produce identical
+    histories (and the loop driver reproduces the block driver's rounds)."""
+    a = run_cola(ridge, graph, ColaConfig(kappa=1.0), 25, record_every=7)
+    b = run_cola(ridge, graph, ColaConfig(kappa=1.0), 25, record_every=7)
+    assert a.history == b.history
+    loop = run_cola(ridge, graph, ColaConfig(kappa=1.0), 25, record_every=7,
+                    executor="loop")
+    assert loop.history["round"] == a.history["round"]
+
+
+def _eps_for(prob, graph, rounds=600):
+    probe = run_cola(prob, graph, ColaConfig(kappa=8.0), rounds,
+                     record_every=rounds - 1)
+    return max(10.0 * probe.history["gap"][-1], 1e-1)
+
+
+def test_certificate_stop_state_bitwise_vs_truncated_run(lasso_prob, graph):
+    """The acceptance case: with eps set, the run terminates at first
+    certification with final state bitwise identical to the non-stopping
+    run truncated at that round, and metrics truncate accordingly."""
+    eps = _eps_for(lasso_prob, graph)
+    cfg = ColaConfig(kappa=8.0)
+    res = run_cola(lasso_prob, graph, cfg, 600, record_every=25,
+                   recorder="certificate", eps=eps, block_size=64)
+    t_stop = res.history["stop_round"]
+    assert t_stop is not None and t_stop < 599
+    assert res.history["round"][-1] == t_stop
+    assert res.history["certified"][-1] == 1.0
+    # every recorded round before the stop is pre-certification
+    assert all(c == 0.0 for c in res.history["certified"][:-1])
+
+    trunc = run_cola(lasso_prob, graph, cfg, t_stop + 1, record_every=25)
+    np.testing.assert_array_equal(np.asarray(res.state.x_parts),
+                                  np.asarray(trunc.state.x_parts))
+    np.testing.assert_array_equal(np.asarray(res.state.v_stack),
+                                  np.asarray(trunc.state.v_stack))
+
+
+def test_certificate_stop_loop_matches_block(lasso_prob, graph):
+    eps = _eps_for(lasso_prob, graph)
+    cfg = ColaConfig(kappa=8.0)
+    block = run_cola(lasso_prob, graph, cfg, 600, record_every=25,
+                     recorder="certificate", eps=eps, block_size=10)
+    loop = run_cola(lasso_prob, graph, cfg, 600, record_every=25,
+                    recorder="certificate", eps=eps, executor="loop")
+    assert block.history["stop_round"] == loop.history["stop_round"]
+    assert block.history["round"] == loop.history["round"]
+    np.testing.assert_array_equal(np.asarray(block.state.x_parts),
+                                  np.asarray(loop.state.x_parts))
+
+
+def test_stop_round_invariant_to_block_size(lasso_prob, graph):
+    eps = _eps_for(lasso_prob, graph)
+    cfg = ColaConfig(kappa=8.0)
+    runs = [run_cola(lasso_prob, graph, cfg, 600, record_every=25,
+                     recorder="certificate", eps=eps, block_size=bs)
+            for bs in (7, 64, 600)]
+    stops = {r.history["stop_round"] for r in runs}
+    assert len(stops) == 1
+    for r in runs[1:]:
+        np.testing.assert_array_equal(np.asarray(runs[0].state.x_parts),
+                                      np.asarray(r.state.x_parts))
+
+
+def test_gap_eps_stopping(lasso_prob, graph):
+    """The gap recorder's eps stop: terminates once gap <= eps."""
+    res = run_cola(lasso_prob, graph, ColaConfig(kappa=8.0), 600,
+                   record_every=20, eps=1.0)
+    assert res.history["stop_round"] is not None
+    assert res.history["gap"][-1] <= 1.0
+    assert all(g > 1.0 for g in res.history["gap"][:-1])
+
+
+def test_composed_recorder_rows_and_stop(lasso_prob, graph):
+    eps = _eps_for(lasso_prob, graph)
+    res = run_cola(lasso_prob, graph, ColaConfig(kappa=8.0), 600,
+                   record_every=25, recorder="gap+certificate", eps=eps)
+    labels = metrics_lib.GAP_METRICS + metrics_lib.CERT_METRICS
+    for name in labels:
+        assert len(res.history[name]) == len(res.history["round"]), name
+    # soundness visible in the composed row: gap at certification <= eps
+    assert res.history["certified"][-1] == 1.0
+    assert res.history["gap"][-1] <= eps
+
+
+def test_make_recorder_validation(ridge, lasso_prob, graph):
+    part = make_partition(ridge.n, K)
+    env = build_env(ridge, part)
+    w = topo.metropolis_weights(graph)
+    with pytest.raises(ValueError, match="eps"):
+        metrics_lib.make_recorder("certificate", ridge, part, env, graph, w,
+                                  None)
+    with pytest.raises(ValueError, match="l_bound"):
+        # ridge has unbounded g support: Prop. 1 does not apply
+        metrics_lib.make_recorder("certificate", ridge, part, env, graph, w,
+                                  1.0)
+    with pytest.raises(ValueError, match="unknown recorder"):
+        metrics_lib.make_recorder("nope", ridge, part, env, graph, w, None)
+    with pytest.raises(ValueError, match="collide"):
+        gap = metrics_lib.GapRecorder(ridge, part)
+        metrics_lib.ComposedRecorder((gap, gap))
+
+
+def test_certificate_recorder_reuses_sigma_cache(lasso_prob, graph):
+    from repro.core.duality import block_spectral_norms
+
+    part = make_partition(lasso_prob.n, K)
+    env = build_env(lasso_prob, part)
+    sigma = block_spectral_norms(env.a_parts)
+    rec = metrics_lib.certificate_recorder(lasso_prob, part, env, graph,
+                                           eps=1.0, sigma_k=sigma)
+    assert rec.sigma_k is sigma  # cache short-circuit, no re-iteration
+    state = {"sigma_k": rec.sigma_k, "neigh_mask": rec.neigh_mask}
+    assert set(rec.init_spec()) == set(state)
+
+
+def test_collective_footprints(ridge):
+    part = make_partition(ridge.n, K)
+    gap = metrics_lib.GapRecorder(ridge, part)
+    fp = gap.collective_footprint(k=16, d=1000, n_k=100)
+    assert fp["all-gather"] == 16 * 1100 * 4
+    cert = metrics_lib._FootprintOnly()
+    ring = metrics_lib.CertificateRecorder.collective_footprint(
+        cert, k=16, d=1000, n_k=100, comm="ring", conn=2)
+    assert ring["all-gather"] == 0
+    assert ring["collective-permute"] == 2 * 2 * 1000 * 4
+    text = metrics_lib.render_footprints(k=16, d=1024, n_k=64)
+    assert "certificate" in text and "ring" in text
+
+
+def test_run_result_history_has_stop_round_key(ridge, graph):
+    """Every driver/exec combination exposes stop_round (None w/o eps)."""
+    for ex in ("loop", "block"):
+        res = run_cola(ridge, graph, ColaConfig(kappa=1.0), 5, executor=ex)
+        assert res.history["stop_round"] is None
