@@ -1,33 +1,80 @@
-"""Fig. 3 — CoLA across 5 topologies (ring / 2-cycle / 3-cycle / grid /
-complete), ridge on the epsilon stand-in; reports beta and suboptimality."""
+"""Fig. 3 — CoLA across topologies, executed through the topology-program
+compiler.
+
+The sweep now runs on the ``repro.topo`` registry (ring / cycles / grid /
+torus / expander / complete), static AND under a churn schedule, and for
+each graph reports:
+
+* ``beta`` — the mixing contraction governing Theorems 1/2;
+* the compiled comm plan's cost model: edge-color count (= ppermutes per
+  gossip step) and per-device bytes/round vs the dense all-gather;
+* suboptimality after the round budget (static and churn runs);
+* a plan-vs-dense oracle check: one compiled-plan gossip step must equal
+  ``dense_mix`` on the same W (the property the dist runtime's plan path
+  relies on), asserted here for both the static W and a churn-reweighted
+  round.
+"""
 from __future__ import annotations
 
-from repro.core import topology as topo
+import numpy as np
+
+from repro import topo as topo_programs
+from repro.core import mixing, topology as topo
 from repro.core.cola import ColaConfig, run_cola, solve_reference
 from benchmarks.common import csv_row, make_ridge
+
+SWEEP = ("ring", "cycle2", "cycle3", "grid", "torus2d", "expander",
+         "complete")
+
+
+def _check_plan_oracle(graph: topo.Topology, w: np.ndarray, seed: int = 0,
+                       atol: float = 1e-5) -> None:
+    """Compiled-plan mixing == dense_mix on this graph (static + churn)."""
+    import jax.numpy as jnp
+
+    plan = topo_programs.compile_plan(graph)
+    rng = np.random.default_rng(seed)
+    v = rng.standard_normal((graph.num_nodes, 8)).astype(np.float32)
+    for w_t in (w, topo.reweight_for_active(
+            graph, rng.random(graph.num_nodes) < 0.75)):
+        got = np.asarray(topo_programs.mix_with_plan(plan, w_t, v))
+        want = np.asarray(mixing.dense_mix(jnp.asarray(w_t, jnp.float32),
+                                           jnp.asarray(v)))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=atol)
 
 
 def run(fast: bool = True):
     prob, _ = make_ridge(lam=1e-5, seed=2)
     opt = solve_reference(prob, rounds=800, kappa=10)
     rounds = 50 if fast else 300
-    k = 16
-    graphs = {
-        "ring": topo.ring(k),
-        "2-connected-cycle": topo.connected_cycle(k, 2),
-        "3-connected-cycle": topo.connected_cycle(k, 3),
-        "2d-grid": topo.grid_2d(4, 4),
-        "complete": topo.complete(k),
-    }
-    csv_row("fig", "topology", "beta", "rounds", "suboptimality")
+    k, d, itemsize = 16, prob.d, 4
+
+    def churn(t, rng):
+        return rng.random(k) < 0.8
+
+    csv_row("fig", "topology", "beta", "colors", "bytes_per_dev",
+            "dense_bytes", "rounds", "subopt_static", "subopt_churn")
     results = {}
-    for name, g in graphs.items():
-        beta = topo.beta(topo.metropolis_weights(g))
-        res = run_cola(prob, g, ColaConfig(kappa=1.0), rounds=rounds,
-                       record_every=rounds - 1)
-        sub = res.history["primal"][-1] - opt
-        csv_row("fig3", name, f"{beta:.4f}", rounds, f"{sub:.6f}")
-        results[name] = (beta, sub)
+    for name in SWEEP:
+        g = topo_programs.build(name, k)
+        w = topo.metropolis_weights(g)
+        beta = topo.beta(w)
+        plan = topo_programs.compile_plan(g)
+        _check_plan_oracle(g, w)
+        static = run_cola(prob, g, ColaConfig(kappa=1.0), rounds=rounds,
+                          record_every=rounds - 1)
+        churned = run_cola(prob, g, ColaConfig(kappa=1.0), rounds=rounds,
+                           record_every=rounds - 1, active_schedule=churn,
+                           seed=7)
+        sub_s = static.history["primal"][-1] - opt
+        sub_c = churned.history["primal"][-1] - opt
+        bytes_dev = plan.bytes_per_device_per_step(d, itemsize)
+        dense_dev = k * d * itemsize
+        csv_row("fig3", name, f"{beta:.4f}", plan.num_colors,
+                bytes_dev, dense_dev, rounds, f"{sub_s:.6f}", f"{sub_c:.6f}")
+        results[name] = {"beta": beta, "colors": plan.num_colors,
+                         "bytes_per_device": bytes_dev,
+                         "subopt_static": sub_s, "subopt_churn": sub_c}
     return results
 
 

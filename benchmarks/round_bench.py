@@ -29,7 +29,9 @@ import argparse
 import json
 import os
 import pathlib
+import subprocess
 import sys
+import textwrap
 import time
 
 import jax
@@ -61,7 +63,12 @@ _REC_KINDS = ("gap", "cert")
 _REC_EVERY = ("1", "10", "inf")
 _REC_KEYS = tuple(f"rec_{m}_{r}_e{e}_rounds_per_sec"
                   for m in _REC_MODES for r in _REC_KINDS for e in _REC_EVERY)
-_GATED = ("block_rounds_per_sec", "dist_block_rounds_per_sec") + _REC_KEYS
+# plan-executed gossip vs the dense all-gather on a REAL 8-device node mesh
+# (subprocess: plan execution places one node per device) — the rows that
+# gate the topology-program compiler's dispatch overhead
+_PLAN_KEYS = ("plan_gossip_rounds_per_sec", "dense_gossip_rounds_per_sec")
+_GATED = ("block_rounds_per_sec", "dist_block_rounds_per_sec") \
+    + _REC_KEYS + _PLAN_KEYS
 
 
 def _bench_case(runner, rounds, repeats: int = 3):
@@ -129,7 +136,70 @@ def bench_config(smoke: bool = False) -> dict:
                          "dist": dist_res.history["primal"][-1]},
     }
     result.update(bench_recording(smoke))
+    result.update(bench_plan_gossip(smoke))
     return result
+
+
+_PLAN_BENCH_SCRIPT = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, time
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import problems, topology as topo
+    from repro.core.cola import ColaConfig
+    from repro.data import synthetic
+    from repro.dist.runtime import run_dist_cola
+
+    rounds, n_s, n_f = (int(a) for a in sys.argv[1:4])
+    x, y, _ = synthetic.regression(n_s, n_f, seed=0)
+    prob = problems.ridge_primal(jnp.asarray(x), jnp.asarray(y), 1e-2)
+    graph = topo.torus_2d(2, 4)  # non-circulant: the plan path's home turf
+    cfg = ColaConfig(kappa=1.0)
+    mesh = jax.make_mesh((8,), ("data",))
+
+    def bench(comm):
+        runner = lambda: run_dist_cola(prob, graph, cfg, mesh, rounds,
+                                       comm=comm, record_every=rounds - 1)
+        runner()  # warmup owns compilation
+        best = 0.0
+        for _ in range(3):
+            t0 = time.perf_counter()
+            res = runner()
+            jax.block_until_ready(res.state.x_parts)
+            best = max(best, rounds / (time.perf_counter() - t0))
+        return best, res
+
+    plan_rps, plan_res = bench("plan")
+    dense_rps, dense_res = bench("dense")
+    assert np.allclose(plan_res.history["primal"][-1],
+                       dense_res.history["primal"][-1], rtol=1e-5), \\
+        "plan gossip diverged from the dense oracle"
+    print("PLANBENCH " + json.dumps(
+        {"plan_gossip_rounds_per_sec": round(plan_rps, 2),
+         "dense_gossip_rounds_per_sec": round(dense_rps, 2)}))
+""")
+
+
+def bench_plan_gossip(smoke: bool = False) -> dict:
+    """Plan-executed gossip vs dense all-gather on an 8-virtual-device node
+    mesh (torus 2x4 — non-circulant, so only the plan path keeps
+    neighbor-only comm). Runs in a subprocess so the main process keeps the
+    single real CPU device for the other rows."""
+    rounds = 50 if smoke else 200
+    n_s, n_f = (128, 64) if smoke else (256, 128)
+    env = dict(os.environ, PYTHONPATH="src:.")
+    out = subprocess.run(
+        [sys.executable, "-c", _PLAN_BENCH_SCRIPT, str(rounds), str(n_s),
+         str(n_f)], env=env, capture_output=True, text=True, timeout=900,
+        cwd=str(ROOT))
+    for line in out.stdout.splitlines():
+        if line.startswith("PLANBENCH "):
+            vals = json.loads(line[len("PLANBENCH "):])
+            for key, rps in vals.items():
+                csv_row("round_bench", key, f"K=8,T={rounds}", f"{rps:.1f}")
+            return vals
+    raise RuntimeError("plan gossip bench subprocess failed:\n"
+                       + out.stdout + "\n" + out.stderr)
 
 
 def bench_recording(smoke: bool = False) -> dict:

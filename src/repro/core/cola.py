@@ -220,6 +220,12 @@ def run_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         to a non-stopping run truncated at that round. Stopping is only
         checked on record rounds — ``record_every`` is the certification
         cadence.
+      record_every: fixed integer cadence, or ``"adaptive"`` / a
+        ``metrics.AdaptiveCadence`` to let the recorder drive it on device:
+        geometric back-off while the recorded row is far from the stop
+        threshold, tightening to ``base`` near certification. Both drivers
+        implement the identical controller (the loop driver on host, the
+        block driver inside the scan carry), so histories still match.
       active_schedule: optional (round, rng) -> (K,) bool mask simulating node
         churn (Fig. 4/6). W is re-normalized over the active subgraph each
         round via Metropolis weights.
@@ -292,6 +298,12 @@ def _run_cola_loop(problem, part, env, state, graph, cfg, rounds, record_every,
         lambda: jax.jit(recorder.record_fn))
     stop_fn = recorder.stop_fn
 
+    # host twin of the executor's on-device AdaptiveCadence controller:
+    # identical integer cadence arithmetic and f32 ratio compare, so loop
+    # and block drivers record the same rounds
+    cad = metrics_lib.as_cadence(record_every)
+    next_rec, every = 0, (cad.base if cad else None)
+
     prev_active = all_active
     for t in range(rounds):
         if active_schedule is not None:
@@ -311,7 +323,8 @@ def _run_cola_loop(problem, part, env, state, graph, cfg, rounds, record_every,
             budgets = jnp.asarray(budget_schedule(t, rng), dtype=jnp.int32)
         state = one_round(state, env, w_t,
                           jnp.asarray(active, dtype=dtype), budgets)
-        if t % record_every == 0 or t == rounds - 1:
+        due = (t >= next_rec) if cad else (t % record_every == 0)
+        if due or t == rounds - 1:
             if uses_sched:
                 mask_t, thr_t = metrics_lib.certificate_round_inputs(
                     cert, w_t, active)
@@ -323,6 +336,12 @@ def _run_cola_loop(problem, part, env, state, graph, cfg, rounds, record_every,
             history["round"].append(t)
             for j, name in enumerate(recorder.labels):
                 history[name].append(float(row[j]))
+            if cad:
+                far = (np.float32(recorder.cadence_ratio(row))
+                       > np.float32(cad.near))
+                every = (min(every * cad.grow, cad.max_every) if far
+                         else cad.base)
+                next_rec = t + every
             if stop_fn is not None and bool(stop_fn(row)):
                 history["stop_round"] = t
                 break
@@ -410,15 +429,20 @@ def _run_cola_block(problem, part, env, state, graph, cfg, rounds,
                   s_t["budgets"] if has_budget else None)
         return st, None
 
-    rec = exec_engine.record_flags(rounds, record_every)
+    cad = metrics_lib.as_cadence(record_every)
+    rec = (None if cad
+           else exec_engine.record_flags(rounds, record_every))
     if getattr(recorder, "uses_schedule", False):
         # dynamic certificate: the per-round neighbor mask + threshold ride
-        # the schedule like every other per-round input
+        # the schedule like every other per-round input. Under an adaptive
+        # cadence any round may record, so materialize every round's entry.
         sched.update(metrics_lib.certificate_schedule(
-            recorder, sched["w"], sched["active"], rec))
+            recorder, sched["w"], sched["active"],
+            np.ones((rounds,), dtype=bool) if cad else rec))
     res = exec_engine.run_round_blocks(
         step_fn, state, sched, context=env, recorder=recorder,
-        record_mask=rec, block_size=block_size,
+        record_mask=rec, block_size=block_size, cadence=cad,
+        num_rounds=rounds,
         cache_key=("cola-block", exec_engine.fingerprint(problem), part, cfg,
                    has_budget, has_reset, recorder.cache_token()))
     return RunResult(state=res.state,

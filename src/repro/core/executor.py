@@ -275,7 +275,8 @@ def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
                      record_mask: np.ndarray | None = None,
                      block_size: int = 64,
                      num_rounds: int | None = None,
-                     cache_key: Any = None) -> BlockRunResult:
+                     cache_key: Any = None,
+                     cadence: Any = None) -> BlockRunResult:
     """Run ``T`` rounds of ``step_fn`` in ceil(T / block_size) dispatches.
 
     Args:
@@ -306,7 +307,15 @@ def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
         (see ``cached_driver``) so repeated runs skip trace+compile. The key
         must pin down ``step_fn``/recorder semantics and captured constants —
         use ``fingerprint()`` for closed-over objects and the recorder's
-        ``cache_token()``.
+        ``cache_token()``. A ``cadence`` is appended to the key
+        automatically.
+      cadence: a ``repro.core.metrics.AdaptiveCadence`` — replaces the
+        host-side ``record_mask`` with an ON-DEVICE record controller: the
+        next record round and current cadence ride the scan carry, each
+        recorded row's ``recorder.cadence_ratio`` geometrically backs the
+        cadence off while far from the stop threshold and snaps it to
+        ``base`` inside the near band. Stop short-circuiting (block no-ops
+        + host-side skip) is unchanged; the last round always records.
 
     Returns:
       BlockRunResult(state, metrics, aux, rounds, stop_round): ``metrics``
@@ -322,10 +331,16 @@ def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
     # schedule-aware recorders (e.g. the dynamic churn certificate) receive
     # the round's schedule slice alongside the state
     uses_sched = bool(getattr(recorder, "uses_schedule", False))
-    if record_fn is not None and record_mask is None:
+    has_cadence = cadence is not None and record_fn is not None
+    if has_cadence:
+        ratio_fn = recorder.cadence_ratio  # required by the contract
+        cache_key = (None if cache_key is None
+                     else (cache_key, cadence.cache_token()))
+    if record_fn is not None and record_mask is None and not has_cadence:
         record_mask = np.ones((t_total,), dtype=bool)
     rec_all = (np.asarray(record_mask, dtype=bool)
-               if record_fn is not None else np.zeros((t_total,), dtype=bool))
+               if record_fn is not None and not has_cadence
+               else np.zeros((t_total,), dtype=bool))
     has_stop = stop_fn is not None
 
     def build():
@@ -337,6 +352,50 @@ def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
             # stays correct if it is reused at different state shapes
             sd = jax.eval_shape(rec_call, s, sched_t)
             return jnp.zeros(sd.shape, sd.dtype)
+
+        def skip_step(s, ctx, sched_t):
+            # post-certification rounds are no-ops: state passes through
+            # untouched, which is what makes the stopped run's final state
+            # bitwise equal to the full run's state at the stop round
+            aux_sd = jax.eval_shape(lambda ss: step_fn(ss, ctx, sched_t)[1],
+                                    s)
+            return s, jax.tree.map(
+                lambda sd: jnp.zeros(sd.shape, sd.dtype), aux_sd)
+
+        if has_cadence:
+            base = jnp.int32(cadence.base)
+            grow = jnp.int32(cadence.grow)
+            max_e = jnp.int32(cadence.max_every)
+            near = jnp.float32(cadence.near)
+
+            @partial(jax.jit, donate_argnums=(0,))
+            def run_block_adaptive(carry0, ctx, sched, t_idx, force):
+                def body(carry, xs):
+                    s, stopped, nxt, every = carry
+                    sched_t, t, force_t = xs
+                    s, aux = lax.cond(
+                        stopped, lambda ss: skip_step(ss, ctx, sched_t),
+                        lambda ss: step_fn(ss, ctx, sched_t), s)
+                    due = jnp.logical_or(t >= nxt, force_t)
+                    do_rec = jnp.logical_and(due, jnp.logical_not(stopped))
+                    row = lax.cond(do_rec,
+                                   lambda ss: rec_call(ss, sched_t),
+                                   lambda ss: zero_row(ss, sched_t), s)
+                    # geometric back-off while far from the stop threshold,
+                    # snap to base inside the near band; the zero row of a
+                    # non-record round is discarded by the where() gates
+                    far = ratio_fn(row).astype(jnp.float32) > near
+                    new_every = jnp.where(
+                        far, jnp.minimum(every * grow, max_e), base)
+                    every = jnp.where(do_rec, new_every, every)
+                    nxt = jnp.where(do_rec, t + new_every, nxt)
+                    if stop_fn is not None:
+                        stop_now = jnp.logical_and(do_rec, stop_fn(row))
+                        stopped = jnp.logical_or(stopped, stop_now)
+                    return (s, stopped, nxt, every), (aux, row, do_rec)
+                return lax.scan(body, carry0, (sched, t_idx, force))
+
+            return run_block_adaptive
 
         if not has_stop:
             # historical engine: no stop carry, no cond around the step —
@@ -363,20 +422,9 @@ def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
                 s, stopped = carry
                 sched_t, rec_t = xs
 
-                def live(s):
-                    return step_fn(s, ctx, sched_t)
-
-                def skip(s):
-                    # post-certification rounds are no-ops: state passes
-                    # through untouched, which is what makes the stopped
-                    # run's final state bitwise equal to the full run's
-                    # state at the stop round
-                    aux_sd = jax.eval_shape(
-                        lambda ss: step_fn(ss, ctx, sched_t)[1], s)
-                    return s, jax.tree.map(
-                        lambda sd: jnp.zeros(sd.shape, sd.dtype), aux_sd)
-
-                s, aux = lax.cond(stopped, skip, live, s)
+                s, aux = lax.cond(
+                    stopped, lambda ss: skip_step(ss, ctx, sched_t),
+                    lambda ss: step_fn(ss, ctx, sched_t), s)
                 do_rec = jnp.logical_and(rec_t, jnp.logical_not(stopped))
                 row = lax.cond(do_rec,
                                lambda ss: rec_call(ss, sched_t),
@@ -400,18 +448,31 @@ def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
             # on accelerators it signals real aliasing bugs — keep it
             warnings.filterwarnings("ignore", message=".*donated.*")
         stop_flag = jnp.asarray(False)
+        # adaptive carry: (state, stopped, next-record round, cadence) — the
+        # controller state persists across block dispatches like the state
+        carry = (state, stop_flag, jnp.int32(0),
+                 jnp.int32(cadence.base)) if has_cadence else None
         while start < t_total:
             stop = min(start + block_size, t_total)
             sched_b = jax.tree.map(lambda x: jnp.asarray(x[start:stop]),
                                    schedule)
-            rec_b = jnp.asarray(rec_all[start:stop])
-            if has_stop:
+            if has_cadence:
+                t_b = jnp.arange(start, stop, dtype=jnp.int32)
+                force_b = jnp.asarray(
+                    np.arange(start, stop) == t_total - 1)
+                carry, (aux_b, rows_b, valid_b) = run_block(
+                    carry, context, sched_b, t_b, force_b)
+                state, stop_flag = carry[0], carry[1]
+                valids.append(valid_b)
+            elif has_stop:
                 (state, stop_flag), (aux_b, rows_b, valid_b) = run_block(
-                    (state, stop_flag), context, sched_b, rec_b)
+                    (state, stop_flag), context, sched_b,
+                    jnp.asarray(rec_all[start:stop]))
                 valids.append(valid_b)
             else:
-                state, (aux_b, rows_b) = run_block(state, context, sched_b,
-                                                   rec_b)
+                state, (aux_b, rows_b) = run_block(
+                    state, context, sched_b,
+                    jnp.asarray(rec_all[start:stop]))
             if rows_b is not None:
                 rows.append(rows_b)
             if aux_b is not None and jax.tree.leaves(aux_b):
@@ -427,7 +488,7 @@ def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
     metrics = rounds = None
     stop_round = None
     if record_fn is not None:
-        if has_stop and valids:
+        if (has_stop or has_cadence) and valids:
             valid = np.concatenate([np.asarray(v) for v in valids], axis=0)
         else:
             valid = rec_all[:executed]

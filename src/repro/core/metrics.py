@@ -64,6 +64,53 @@ CERT_METRICS = ("local_gap_max", "grad_disagreement_max", "cond9_nodes",
 
 
 @dataclasses.dataclass(frozen=True)
+class AdaptiveCadence:
+    """On-device ``record_every`` controller: geometric back-off.
+
+    Stopping is only checked on record rounds, so the recording cadence is
+    also the certification latency — but far from ``eps`` every record
+    round is wasted work. This controller doubles the cadence after each
+    record round whose distance ratio (``recorder.cadence_ratio(row)``,
+    ~"how many multiples of the stop threshold away we are") is still above
+    ``near``, and snaps back to ``base`` the moment a row lands inside the
+    ``near`` band — so certification is detected within ``base`` rounds of
+    becoming true while the far-from-converged phase records only
+    O(log T) rows.
+
+    The decision runs on device inside the round-block scan (the next
+    record round and current cadence ride the scan carry), so the
+    executor's block short-circuiting and the single end-of-run metric
+    fetch are unchanged. ``grow`` is an integer so the host loop driver
+    reproduces the device arithmetic exactly.
+    """
+
+    base: int = 1        # cadence inside the near band (certification latency)
+    max_every: int = 64  # back-off cap
+    grow: int = 2        # geometric factor per far record round
+    near: float = 2.0    # "near" band: ratio <= near tightens to base
+
+    def __post_init__(self):
+        if self.base < 1 or self.grow < 2 or self.max_every < self.base:
+            raise ValueError(
+                f"need base >= 1, grow >= 2, max_every >= base; got {self}")
+
+    def cache_token(self):
+        return ("AdaptiveCadence", self.base, self.max_every, self.grow,
+                self.near)
+
+
+def as_cadence(record_every) -> AdaptiveCadence | None:
+    """Resolve a driver's ``record_every`` argument: an int keeps the fixed
+    host-side mask, ``"adaptive"`` / an ``AdaptiveCadence`` instance arms
+    the on-device controller."""
+    if isinstance(record_every, AdaptiveCadence):
+        return record_every
+    if record_every == "adaptive":
+        return AdaptiveCadence()
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
 class GapRecorder:
     """Lemma-2 global diagnostics (the historical ``gap_report`` row).
 
@@ -88,6 +135,13 @@ class GapRecorder:
             return None
         eps, idx = self.eps, self.labels.index("gap")
         return lambda row: row[idx] <= eps
+
+    def cadence_ratio(self, row) -> jax.Array:
+        """Distance-to-stop ratio for ``AdaptiveCadence``: gap / eps."""
+        if self.eps is None:
+            raise ValueError("adaptive record cadence needs eps= on the gap "
+                             "recorder (the ratio is gap / eps)")
+        return row[self.labels.index("gap")] / self.eps
 
     def init_spec(self) -> dict:
         return {}
@@ -197,6 +251,17 @@ class CertificateRecorder:
         idx = self.labels.index("certified")
         return lambda row: row[idx] > 0
 
+    def cadence_ratio(self, row) -> jax.Array:
+        """Distance-to-certification for ``AdaptiveCadence``: the worse of
+        the two condition margins. Uses the static init-time thresholds even
+        in dynamic (churn) mode — cadence is a scheduling heuristic, never a
+        soundness input (certification itself always uses the round's true
+        thresholds)."""
+        gap_r = row[self.labels.index("local_gap_max")] / self.gap_thresh
+        dis_r = (row[self.labels.index("grad_disagreement_max")]
+                 / self.grad_thresh)
+        return jnp.maximum(gap_r, dis_r)
+
     def init_spec(self) -> dict:
         return {"sigma_k": self.sigma_k, "neigh_mask": self.neigh_mask}
 
@@ -263,6 +328,27 @@ class ComposedRecorder:
             return out
 
         return stop
+
+    def cadence_ratio(self, row) -> jax.Array:
+        """Min over constituent ratios: the recorder CLOSEST to stopping
+        drives the cadence (any near part must tighten the whole row's
+        cadence, since a single row serves every part)."""
+        ratios = []
+        off = 0
+        for p in self.parts:
+            if hasattr(p, "cadence_ratio"):
+                try:
+                    ratios.append(p.cadence_ratio(row[off:off + len(p.labels)]))
+                except ValueError:  # e.g. gap part without eps: no opinion
+                    pass
+            off += len(p.labels)
+        if not ratios:
+            raise ValueError("adaptive cadence needs at least one part with "
+                             "a cadence_ratio (gap-with-eps or certificate)")
+        out = ratios[0]
+        for r in ratios[1:]:
+            out = jnp.minimum(out, r)
+        return out
 
     def init_spec(self) -> dict:
         return {f"part{i}": p.init_spec() for i, p in enumerate(self.parts)}

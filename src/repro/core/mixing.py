@@ -1,7 +1,7 @@
 """Gossip mixing operators: v_k <- sum_l W_kl v_l  (Algorithm 1, step 4).
 
-Two executable paths with identical semantics (validated against each other in
-tests):
+Three executable paths with identical semantics (validated against each
+other in tests):
 
 * ``dense_mix`` — a (K, K) x (K, d) matmul on stacked node state. Used by the
   single-host simulator (vmapped over nodes) and as the oracle for arbitrary
@@ -10,7 +10,16 @@ tests):
   exchanges for banded (c-connected-cycle / ring) mixing matrices. This is the
   TPU-native adaptation: each gossip round costs only deg(k) * |v| bytes per
   ICI link instead of a full all-reduce, which is exactly the paper's
-  communication-efficiency argument transcribed to pod hardware.
+  communication-efficiency argument transcribed to pod hardware. Retained as
+  the circulant special case (and for bitwise compatibility of historical
+  ring runs).
+* the **topology-program path** (``repro.topo``) — the general form:
+  ``compile_plan`` edge-colors ANY sparse W's support into matchings, each
+  lowered to one ``ppermute`` (``repro.topo.lowering.plan_mix_step``), with
+  per-round weight coefficients riding the executor schedule. This is what
+  ``repro.dist.runtime`` executes for non-circulant and churn-reweighted
+  (time-varying) graphs; ``check_circulant_band`` below is the ring path's
+  validity gate, ``repro.topo.check_plan_covers`` its generalization.
 
 ``mix_power`` applies B gossip steps (time-varying-graph extension, App. E.2).
 """

@@ -17,9 +17,18 @@ and as cheap to dispatch:
   device, state donated across blocks;
 * **neighbor exchange, not all-reduce** — ``comm="ring"`` mixes v via the
   banded ``lax.ppermute`` ring from ``repro.core.mixing`` (deg(k)·|v| bytes
-  per link per gossip step, the paper's communication model); ``comm="dense"``
-  is the arbitrary-graph fallback (all-gather + W matmul) and the mode that
-  is bitwise identical to the simulator on a 1-device mesh.
+  per link per gossip step, the paper's communication model);
+  ``comm="plan"`` generalizes it to ARBITRARY sparse graphs through the
+  topology-program compiler (``repro.topo``): the support is edge-colored
+  into matchings, each color lowers to one ``lax.ppermute``, and per-round
+  weights — including churn-reweighted ones — ride the schedule as
+  ``PlanSchedule`` coefficient arrays, so a single compiled program
+  executes a time-varying graph at O(deg(k)·|v|) bytes per device;
+  ``comm="dense"`` is the all-gather + W matmul oracle and the mode that
+  is bitwise identical to the simulator on a 1-device mesh. A ``ring``
+  request whose W turns out non-circulant, or that runs under churn,
+  dispatches to the plan path instead of failing (the historical
+  "churn forces comm='dense'" restriction is retired).
 
 Metric recording follows the same split (``repro.core.metrics`` recorders):
 the gap recorder evaluates ``gap_report`` on the globally-sharded state and
@@ -45,6 +54,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import executor as exec_engine, metrics as metrics_lib, \
     mixing, topology as topo
+from repro.topo import lowering as topo_lowering, plan as topo_plan
 from repro.core.cola import (ColaConfig, RunResult,
                              _materialize_schedule, _reset_leavers,
                              _round_body, build_env, init_state)
@@ -52,12 +62,19 @@ from repro.core.duality import neighborhood_mean
 from repro.core.partition import make_partition
 from repro.core.problems import Problem
 from repro.dist.sharding import (cola_env_pspecs, cola_recorder_pspecs,
-                                 cola_state_pspecs)
+                                 cola_state_pspecs, plan_payload_pspecs)
 
 
 def _dist_mixers(axis: str, local_nodes: int, conn: int, comm: str,
-                 gossip_steps: int) -> tuple[Callable, Callable]:
+                 gossip_steps: int,
+                 plan: topo_plan.CommPlan | None = None
+                 ) -> tuple[Callable, Callable]:
     """(mix_fn, grad_mix_fn) for the shard_map round body.
+
+    The first mixer argument is the round's *comm payload* — the schedule
+    slice the driver routes in: the replicated (K, K) W for ``dense`` /
+    ``ring``, or the node-sharded ``(plan_diag, plan_coefs)`` pair for
+    ``plan``.
 
     ``dense``: all-gather the (K, d) stack, fold W^B once (redundantly per
     device, O(B K^3) — cheap next to the solve), mix, slice back this
@@ -66,8 +83,13 @@ def _dist_mixers(axis: str, local_nodes: int, conn: int, comm: str,
     simulator there.
 
     ``ring``: banded circulant mixing via ``ppermute`` neighbor pushes —
-    requires one node per device and a circulant W (ring / c-connected
-    cycle with Metropolis weights; churn reweighting breaks this).
+    one node per device, round-constant circulant W (the historical
+    TPU-native special case, kept for bitwise compatibility).
+
+    ``plan``: the compiled topology program — one ``ppermute`` per edge
+    color, per-node coefficients from the ``PlanSchedule`` slice, so any
+    sparse graph (and any churn reweighting of it) runs at neighbor-only
+    cost with a single compiled program.
     """
     if comm == "dense":
         def steps_mix(w, stack, steps):
@@ -90,8 +112,20 @@ def _dist_mixers(axis: str, local_nodes: int, conn: int, comm: str,
             for _ in range(steps):
                 out = mixing.ring_mix_ppermute(out, axis, band, conn)
             return out[None]
+    elif comm == "plan":
+        if local_nodes != 1:
+            raise ValueError(
+                f"comm='plan' places one node per device; got {local_nodes} "
+                "nodes per device — use comm='dense' or a bigger mesh axis")
+
+        def steps_mix(payload, stack, steps):
+            diag, coefs = payload  # node-sharded slices: (1,), (C, 1)
+            out = topo_lowering.plan_mix_steps(
+                stack[0], axis, plan, diag[0], coefs[:, 0], steps)
+            return out[None]
     else:
-        raise ValueError(f"unknown comm {comm!r} (want 'dense' or 'ring')")
+        raise ValueError(
+            f"unknown comm {comm!r} (want 'dense', 'ring' or 'plan')")
 
     mix_fn = lambda w, v: steps_mix(w, v, gossip_steps)
     grad_mix_fn = lambda w, g: steps_mix(w, g, 1)
@@ -120,34 +154,48 @@ def _place_recorder(recorder, mesh, axis):
 
 
 def _certificate_dist_record(rec, mesh, axis: str, local_nodes: int,
-                             comm: str, conn: int) -> Callable:
+                             comm: str, conn: int,
+                             plan: topo_plan.CommPlan | None = None
+                             ) -> Callable:
     """Shard_map record_fn for ``CertificateRecorder``: O(d) collectives.
 
     Condition (9) is node-local. Condition (10)'s neighborhood mean comes
     from the gossip exchange pattern itself: on the ring, ``2*conn``
     ``ppermute`` pushes of this device's (d,) gradient (the certificate's
-    only vector communication); on the dense fallback, the same all-gather
-    the round body already performs. Row entries reduce with scalar
-    ``psum``/``pmax`` — on a 1-device mesh every collective degenerates to
-    the identity and the program is bitwise the simulator's record_fn.
+    only vector communication); on the plan path, one ``ppermute`` per edge
+    color with the round's neighbor-mask row selecting what arrives (so the
+    neighborhood follows the ACTIVE plan — under churn, the reweighted
+    support from the certificate schedule — instead of a static band); on
+    the dense fallback, the same all-gather the round body already
+    performs. Row entries reduce with scalar ``psum``/``pmax`` — on a
+    1-device mesh every collective degenerates to the identity and the
+    program is bitwise the simulator's record_fn.
     """
     k = rec.part.num_nodes
     if comm == "ring":
-        # the ppermute neighborhood is the circulant band; the recorder's
-        # mask must agree with it or the mean would silently differ from
-        # the stacked oracle
+        # the ppermute neighborhood must match the recorder's mask; a mask
+        # that is NOT the circulant band (historically a ValueError)
+        # dispatches into the plan path — compile the mask's own support
         band = np.zeros((k, k))
         idx = np.arange(k)
         for off in range(-conn, conn + 1):
             band[idx, (idx + off) % k] = 1.0
         if not np.array_equal(np.asarray(rec.neigh_mask) != 0, band != 0):
-            raise ValueError(
-                "certificate recording with comm='ring' needs the graph's "
-                f"neighborhoods to be the circulant band of conn={conn}")
+            comm, plan = "plan", topo_plan.compile_plan(
+                np.asarray(rec.neigh_mask))
+    if comm == "plan" and plan is None:
+        plan = topo_plan.compile_plan(np.asarray(rec.neigh_mask))
 
     def body(x_l, v_l, a_l, gp_l, m_l, nm_l, thr):
         grads = jax.vmap(rec.problem.grad_f)(v_l)            # (ln, d)
-        if comm == "ring":
+        if comm == "plan":
+            # mask-selected plan exchange: nm_l is this node's row of the
+            # self-inclusive neighborhood mask (static graph or the churn
+            # round's reweighted support via the certificate schedule)
+            nsum, count = topo_lowering.plan_neighborhood_stats(
+                grads[0], axis, plan, nm_l[0])
+            neigh_mean = (nsum / count)[None]                # (1, d)
+        elif comm == "ring":
             g = grads[0]
             nsum = g
             for off in range(1, conn + 1):
@@ -188,20 +236,21 @@ def _certificate_dist_record(rec, mesh, axis: str, local_nodes: int,
     return record
 
 
-def _dist_record_fn(recorder, mesh, axis, local_nodes, comm, conn
-                    ) -> Callable:
+def _dist_record_fn(recorder, mesh, axis, local_nodes, comm, conn,
+                    plan: topo_plan.CommPlan | None = None) -> Callable:
     """The distributed record program for any recorder: certificates record
     under shard_map (O(d) collectives), everything else records on the
     globally-sharded state as-is (GSPMD inserts the gathers)."""
     if isinstance(recorder, metrics_lib.ComposedRecorder):
-        pairs = [(p, _dist_record_fn(p, mesh, axis, local_nodes, comm, conn))
+        pairs = [(p, _dist_record_fn(p, mesh, axis, local_nodes, comm, conn,
+                                     plan))
                  for p in recorder.parts]
         return lambda st, sched=None: jnp.concatenate([
             f(st, sched) if getattr(p, "uses_schedule", False) else f(st)
             for p, f in pairs])
     if isinstance(recorder, metrics_lib.CertificateRecorder):
         return _certificate_dist_record(recorder, mesh, axis, local_nodes,
-                                        comm, conn)
+                                        comm, conn, plan)
     return recorder.record_fn
 
 
@@ -210,10 +259,12 @@ class _DistRecorder:
     mesh; labels / stop condition / cache identity delegate to the inner
     recorder (plus the comm layout, which changes the compiled program)."""
 
-    def __init__(self, inner, record_fn, comm: str, conn: int):
+    def __init__(self, inner, record_fn, comm: str, conn: int,
+                 plan: topo_plan.CommPlan | None = None):
         self._inner = inner
         self._record_fn = record_fn
         self._comm, self._conn = comm, conn
+        self._plan = plan
 
     @property
     def labels(self):
@@ -235,8 +286,13 @@ class _DistRecorder:
     def init_spec(self):
         return self._inner.init_spec()
 
+    def cadence_ratio(self, row):
+        return self._inner.cadence_ratio(row)
+
     def cache_token(self):
-        return ("dist", self._comm, self._conn, self._inner.cache_token())
+        plan_tok = self._plan.cache_token() if self._plan else None
+        return ("dist", self._comm, self._conn, plan_tok,
+                self._inner.cache_token())
 
 
 def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
@@ -256,14 +312,24 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
 
       mesh: a jax Mesh; the node axis K shards over ``axis`` (default: the
         mesh's first axis), K % axis_size == 0, K/axis_size nodes per device.
-      comm: "ring" (ppermute neighbor exchange; circulant W, one node per
-        device) or "dense" (all-gather + W matmul; any W, any node count —
-        and bitwise identical to ``run_cola`` on a 1-device mesh).
+      comm: "ring" (banded ppermute; round-constant circulant W, one node
+        per device), "plan" (compiled topology program from ``repro.topo``:
+        ANY sparse graph, including time-varying churn-reweighted ones, as
+        one ``ppermute`` per edge color with per-round schedule
+        coefficients; one node per device), or "dense" (all-gather + W
+        matmul; any W, any node count — and bitwise identical to
+        ``run_cola`` on a 1-device mesh). A "ring" request dispatches to
+        "plan" automatically when churn is scheduled or W is not
+        circulant-banded.
       conn: connectivity of the circulant band for ``comm="ring"``.
 
     The certificate recorder records under shard_map from local gradients
-    (``ppermute``/``psum``, O(d) per device per record round); the gap
-    recorder keeps the gather-everything ``gap_report`` semantics.
+    (``ppermute``/``psum``, O(d) per device per record round) — its
+    neighborhood exchange follows the active comm plan (the churn round's
+    reweighted support) rather than a static band; the gap recorder keeps
+    the gather-everything ``gap_report`` semantics. ``record_every``
+    accepts the same ``"adaptive"`` / ``AdaptiveCadence`` controller as
+    ``run_cola``.
 
     Returns ``RunResult(state, history)`` with the fully-stacked (K, ...)
     state, like the simulator.
@@ -275,16 +341,38 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         raise ValueError(f"K={k} nodes must divide over {m} devices on "
                          f"mesh axis {axis!r}")
     local_nodes = k // m
-    if comm == "ring" and active_schedule is not None:
-        raise ValueError("comm='ring' needs a circulant W; churn reweighting "
-                         "breaks that — use comm='dense' under churn")
 
     base_w = (w_override if w_override is not None
               else topo.metropolis_weights(graph))
+    plan = None
     if comm == "ring":
-        # W is round-constant on this path (no churn), so validate the
-        # banded ppermute mixing loses no weight mass before tracing
-        mixing.check_circulant_band(base_w, conn)
+        # the circulant ppermute band only executes a round-constant
+        # circulant W; churn reweighting or a non-circulant graph now
+        # dispatches into the compiled topology-program path instead of the
+        # historical ValueError ("churn forces comm='dense'")
+        if active_schedule is not None:
+            comm = "plan"
+        else:
+            try:
+                mixing.check_circulant_band(base_w, conn)
+            except ValueError:
+                comm = "plan"
+    if comm == "plan":
+        if local_nodes != 1:
+            raise ValueError(
+                f"comm='plan' places one node per device; got {local_nodes} "
+                "nodes per device — use comm='dense' or a bigger mesh axis")
+        # under churn the per-round W is a reweighting of the graph (its
+        # support only shrinks), so the graph's adjacency is the complete
+        # compile-time support. A static w_override contributes its own
+        # support too; the union also covers the certificate recorder's
+        # adjacency-derived neighborhoods when they are denser than W's.
+        support = graph.adjacency.copy()
+        if active_schedule is None:
+            off = np.asarray(base_w) != 0
+            np.fill_diagonal(off, False)
+            support = support | off
+        plan = topo_plan.compile_plan(support)
 
     part = make_partition(problem.n, k)
     env = build_env(problem, part,
@@ -312,11 +400,11 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         lambda x: jax.device_put(x, NamedSharding(mesh, env_spec)), env)
     rec = _place_recorder(rec, mesh, axis)
     dist_rec = _DistRecorder(
-        rec, _dist_record_fn(rec, mesh, axis, local_nodes, comm, conn),
-        comm, conn)
+        rec, _dist_record_fn(rec, mesh, axis, local_nodes, comm, conn, plan),
+        comm, conn, plan)
 
     mix_fn, grad_mix_fn = _dist_mixers(axis, local_nodes, conn, comm,
-                                       cfg.gossip_steps)
+                                       cfg.gossip_steps, plan)
     body = _round_body(problem, part, cfg, mix_fn=mix_fn,
                        grad_mix_fn=grad_mix_fn)
 
@@ -334,13 +422,16 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         return body(st, env_l, w_t, active_l,
                     budgets_l if has_budget else None)
 
-    # node-axis operands shard over `axis`; W and the per-round scalars are
-    # replicated. ColaEnv.gram_parts may be None — a P(axis) prefix covers
-    # whichever leaves exist.
+    # node-axis operands shard over `axis`; the per-round scalars are
+    # replicated. The comm payload is the replicated (K, K) W for
+    # dense/ring, or the node-sharded PlanSchedule slices (diag (K,),
+    # coefs (C, K)) for the plan path. ColaEnv.gram_parts may be None — a
+    # P(axis) prefix covers whichever leaves exist.
     node, repl = P(axis), P()
+    payload_spec = plan_payload_pspecs(axis) if plan is not None else repl
     shard_step = mixing.shard_map(
         shard_round, mesh,
-        in_specs=(state_spec, env_spec, repl, node,
+        in_specs=(state_spec, env_spec, payload_spec, node,
                   node if has_budget else repl,
                   node if has_reset else repl, repl),
         out_specs=state_spec)
@@ -348,7 +439,9 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
     zeros_k = np.zeros((rounds,), dtype)
 
     def step_fn(st, env_ctx, s_t):
-        st = shard_step(st, env_ctx, s_t["w"], s_t["active"],
+        payload = ((s_t["plan_diag"], s_t["plan_coefs"])
+                   if plan is not None else s_t["w"])
+        st = shard_step(st, env_ctx, payload, s_t["active"],
                         s_t["budgets"] if has_budget else s_t["_pad"],
                         s_t["leavers"] if has_reset else s_t["_pad"],
                         s_t["reset_any"] if has_reset else s_t["_pad"])
@@ -357,13 +450,24 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
     sched = dict(sched)
     sched["_pad"] = zeros_k  # scalar per-round filler for unused operands
 
-    rec_mask = exec_engine.record_flags(rounds, record_every)
+    cad = metrics_lib.as_cadence(record_every)
+    rec_mask = (None if cad
+                else exec_engine.record_flags(rounds, record_every))
     if dist_rec.uses_schedule:
         sched.update(metrics_lib.certificate_schedule(
-            rec, sched["w"], sched["active"], rec_mask))
+            rec, sched["w"], sched["active"],
+            np.ones((rounds,), dtype=bool) if cad else rec_mask))
+    if plan is not None:
+        # materialize the per-round plan coefficients (validating that
+        # every round's W stays inside the compiled support) and drop the
+        # now-unconsumed (T, K, K) W stack from the device schedule
+        sched.update(topo_plan.PlanSchedule.from_w_stack(
+            plan, sched["w"], static=active_schedule is None).entries())
+        del sched["w"]
     res = exec_engine.run_round_blocks(
         step_fn, state, sched, context=env, recorder=dist_rec,
-        record_mask=rec_mask, block_size=block_size,
+        record_mask=rec_mask, block_size=block_size, cadence=cad,
+        num_rounds=rounds,
         cache_key=("cola-dist", exec_engine.fingerprint(problem), part, cfg,
                    mesh, axis, comm, conn, has_budget, has_reset,
                    dist_rec.cache_token()))

@@ -201,6 +201,16 @@ def cola_env_pspecs(axis: str) -> Any:
     return P(axis)
 
 
+def plan_payload_pspecs(axis: str) -> tuple:
+    """Specs for the comm-plan payload (``repro.topo.PlanSchedule`` round
+    slices): ``plan_diag`` (K,) shards its node axis, ``plan_coefs``
+    (C, K) shards the node axis and replicates the color axis — so inside
+    the shard_map round body each device reads exactly its own scalar
+    coefficients (no W matrix, no gathers) and the ppermute perms are the
+    only cross-device traffic of a plan-executed gossip step."""
+    return (P(axis), P(None, axis))
+
+
 def cola_recorder_pspecs(axis: str, rec_state: Any) -> Any:
     """Specs for a recorder's per-run state (``Recorder.init_spec``): every
     array with a leading node dimension — the ``sigma_k`` spectral-norm

@@ -457,6 +457,13 @@ def main() -> None:
                          "collective-footprint section")
     ap.add_argument("--cola-n", type=int, default=1 << 24,
                     help="--plan: CoLA coordinate count n (n_k = n / K)")
+    ap.add_argument("--cola-k", type=int, default=16,
+                    help="--plan: node count for the topology-program "
+                         "section (the gossip graph compiled to ppermutes)")
+    ap.add_argument("--topo", default="ring,torus2d,expander,complete",
+                    help="--plan: comma-separated topology names "
+                         "(repro.topo.GRAPHS) whose compiled comm plans to "
+                         "render; 'none' skips the section")
     args = ap.parse_args()
     opts = Opts(attn_bf16=args.attn_bf16, remat_policy=args.remat_policy,
                 microbatches=args.microbatches,
@@ -488,6 +495,21 @@ def main() -> None:
         print(cola_metrics.render_footprints(k=k_nodes, d=args.cola_d,
                                              n_k=args.cola_n // k_nodes),
               flush=True)
+        # compiled comm plans for arbitrary gossip topologies: color count,
+        # the ppermute matchings, and per-link / per-device bytes per round
+        # — the neighbor-only communication budget the topology-program
+        # compiler (repro.topo) buys over the dense all-gather, rendered
+        # for ANY registered graph, not just the circulant band
+        if args.topo != "none":
+            from repro.core import topology as cola_topo
+            from repro import topo as topo_programs
+            for name in args.topo.split(","):
+                graph = topo_programs.build(name.strip(), args.cola_k)
+                plan = topo_programs.compile_plan(graph)
+                beta = cola_topo.beta(cola_topo.metropolis_weights(graph))
+                print(f"[topology program] {name.strip()} "
+                      f"(graph={graph.name}, beta={beta:.4f})", flush=True)
+                print(plan.render(d=args.cola_d), flush=True)
         return
 
     os.makedirs(args.out, exist_ok=True)

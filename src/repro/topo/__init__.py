@@ -1,0 +1,30 @@
+"""``repro.topo`` — the topology-program compiler.
+
+Treats a communication round on an arbitrary (possibly time-varying,
+churn-reweighted) sparse doubly-stochastic W as a compiled program:
+
+  support graph --edge-color--> matchings --lower--> ppermute perms
+                                                  + per-round coefficients
+
+``compile_plan`` builds the static ``CommPlan`` (permutation structure),
+``PlanSchedule`` materializes per-round weights into executor schedule
+arrays, ``lowering`` provides the shard_map bodies ``repro.dist.runtime``
+executes under ``comm="plan"``, and ``graphs.GRAPHS`` registers the
+topology families (paper sweep + expanders/geometric graphs) by name.
+"""
+from repro.topo.coloring import greedy_edge_coloring, undirected_edges
+from repro.topo.graphs import GRAPHS, build, expander, hypercube, \
+    random_geometric
+from repro.topo.lowering import plan_mix_step, plan_mix_steps, \
+    plan_neighborhood_stats
+from repro.topo.plan import (CommPlan, PlanSchedule, check_plan_covers,
+                             compile_plan, mix_with_plan, plan_coefficients,
+                             plan_mix_dense)
+
+__all__ = [
+    "CommPlan", "PlanSchedule", "GRAPHS", "build", "check_plan_covers",
+    "compile_plan", "expander", "greedy_edge_coloring", "hypercube",
+    "mix_with_plan", "plan_coefficients", "plan_mix_dense", "plan_mix_step",
+    "plan_mix_steps", "plan_neighborhood_stats", "random_geometric",
+    "undirected_edges",
+]

@@ -1,0 +1,126 @@
+"""Graph builders beyond the paper's sweep — expanders, geometric graphs.
+
+``core.topology`` ships the Fig.-3 family (ring / c-connected cycle / grid /
+torus / complete / star); the plan compiler makes *any* sparse graph
+executable at O(deg * d) communication, so this module adds the families
+the decentralized-FL literature actually runs on (DeceFL, Bellet et al.):
+random regular expanders (constant degree, near-optimal spectral gap) and
+random geometric graphs (the classic P2P/sensor model with hubs and long
+tails). ``GRAPHS`` is the unified name -> builder registry the fig-3
+topology sweep and ``dryrun --plan`` resolve against.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import numpy as np
+
+from repro.core import topology as topo
+
+
+def is_connected(adj: np.ndarray) -> bool:
+    """BFS connectivity of a boolean adjacency matrix."""
+    k = adj.shape[0]
+    if k == 0:
+        return True
+    seen = np.zeros(k, dtype=bool)
+    frontier = [0]
+    seen[0] = True
+    while frontier:
+        nxt = adj[frontier].any(axis=0) & ~seen
+        frontier = list(np.nonzero(nxt)[0])
+        seen |= nxt
+    return bool(seen.all())
+
+
+def expander(k: int, degree: int = 4, seed: int = 0,
+             max_tries: int = 200) -> topo.Topology:
+    """Random regular-ish expander: superpose ``degree // 2`` random
+    Hamiltonian cycles (+ a random perfect matching for odd degree, even K).
+
+    Cycle superposition is the standard cheap construction whose spectral
+    gap concentrates near the Ramanujan bound — the "good" end of the
+    paper's beta sweep at constant degree. Deterministic in ``seed``;
+    retries until the graph is connected AND every node reaches the full
+    target degree (superposed cycles sharing an edge would silently
+    collapse below it on small K).
+    """
+    if degree < 2 or degree >= k:
+        raise ValueError(f"need 2 <= degree < k, got degree={degree}, k={k}")
+    rng = np.random.default_rng(seed)
+    for _ in range(max_tries):
+        adj = np.zeros((k, k), dtype=bool)
+        for _ in range(degree // 2):
+            order = rng.permutation(k)
+            for a, b in zip(order, np.roll(order, -1)):
+                adj[a, b] = adj[b, a] = True
+        if degree % 2:
+            if k % 2:
+                raise ValueError("odd degree expander needs even k")
+            order = rng.permutation(k)
+            for a, b in order.reshape(-1, 2):
+                adj[a, b] = adj[b, a] = True
+        np.fill_diagonal(adj, False)
+        if is_connected(adj) and adj.sum(axis=1).min() >= degree:
+            return topo.Topology(f"expander-d{degree}", adj)
+    raise RuntimeError(f"no connected expander found for k={k}, "
+                       f"degree={degree} in {max_tries} tries")
+
+
+def random_geometric(k: int, radius: float | None = None,
+                     seed: int = 0) -> topo.Topology:
+    """Random geometric graph: K points in the unit square, edges within
+    ``radius``. ``radius=None`` starts at the connectivity threshold
+    ``sqrt(2 ln k / k)`` and grows until connected — the irregular,
+    hub-and-leaf end of the topology sweep (degrees vary, so the greedy
+    coloring and the Metropolis weights both get exercised off the regular
+    path). Deterministic in ``seed``."""
+    if k < 2:
+        raise ValueError(f"need k >= 2, got {k}")
+    rng = np.random.default_rng(seed)
+    pts = rng.random((k, 2))
+    d2 = np.sum((pts[:, None, :] - pts[None, :, :]) ** 2, axis=-1)
+    r = radius if radius is not None else float(
+        np.sqrt(2.0 * np.log(max(k, 2)) / k))
+    while True:
+        adj = d2 <= r * r
+        np.fill_diagonal(adj, False)
+        if is_connected(adj):
+            return topo.Topology(f"rgg-r{r:.2f}", adj)
+        if radius is not None:
+            raise ValueError(
+                f"random_geometric(k={k}, radius={radius}, seed={seed}) is "
+                "disconnected — grow the radius or pass radius=None")
+        r *= 1.25
+
+
+def hypercube(k: int) -> topo.Topology:
+    """Boolean hypercube on K = 2^m nodes (degree log2 K, diameter log2 K)."""
+    m = k.bit_length() - 1
+    if k <= 0 or (1 << m) != k:
+        raise ValueError(f"hypercube needs a power-of-two k, got {k}")
+    adj = np.zeros((k, k), dtype=bool)
+    for i in range(k):
+        for b in range(m):
+            j = i ^ (1 << b)
+            adj[i, j] = adj[j, i] = True
+    return topo.Topology(f"hypercube-{m}", adj)
+
+
+# unified registry: the paper's Fig.-3 family plus the new builders, all
+# resolvable by name (fig3_topology sweep, dryrun --plan --topo)
+GRAPHS: Dict[str, Callable[[int], topo.Topology]] = dict(topo.TOPOLOGIES)
+GRAPHS.update({
+    "torus2d": lambda k: topo.torus_2d(*topo._square_factors(k)),
+    "expander": lambda k: expander(k, degree=4, seed=0),
+    "rgg": lambda k: random_geometric(k, seed=0),
+    "hypercube": hypercube,
+})
+
+
+def build(name: str, k: int) -> topo.Topology:
+    """Resolve a topology by registry name."""
+    if name not in GRAPHS:
+        raise ValueError(f"unknown topology {name!r} "
+                         f"(want one of {sorted(GRAPHS)})")
+    return GRAPHS[name](k)

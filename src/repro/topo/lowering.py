@@ -1,0 +1,84 @@
+"""Lower a ``CommPlan`` to shard_map collectives.
+
+These are the bodies ``repro.dist.runtime`` traces inside its shard_map
+round/record programs when ``comm="plan"``: one ``lax.ppermute`` per color,
+per-node coefficients fed from the ``PlanSchedule`` entries (sharded over
+the node axis, so each device sees its own scalars). Nothing here gathers a
+(K, ...) stack — the whole point of the compiler is that the lowered HLO
+contains collective-permutes of |v|-sized payloads only, which the dist
+tests assert via ``launch.hlo_analysis``.
+
+Semantics contract (pinned by the property tests against
+``plan.plan_mix_dense`` and ``mixing.dense_mix``): with ``diag``/``coefs``
+from ``plan.plan_coefficients(plan, w)``,
+
+    plan_mix_step(v_k, ...) == dense_mix(w, v_stack)[k]
+
+up to float summation order (self term first, then colors in order — the
+same order as the dense reference, so shard vs stacked agree bitwise on
+matching backends).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.topo.plan import CommPlan
+
+
+def plan_mix_step(v_local, axis_name: str, plan: CommPlan, diag, coefs):
+    """One compiled gossip step for THIS device's node state.
+
+    Args:
+      v_local: this node's state, any shape (the node index is the position
+        along ``axis_name``; one node per device).
+      diag: scalar W_kk for this node (the node-sharded ``plan_diag`` slice).
+      coefs: (C,) per-color coefficients W[k, partner_c(k)] for this node
+        (the node-sharded ``plan_coefs`` slice; 0 where unmatched or where
+        churn reweighting dropped the edge this round).
+    """
+    out = diag * v_local
+    for c, perm in enumerate(plan.perms):
+        # a matching's swap involution: unmatched devices receive zeros,
+        # and their coefficient is 0 by construction — no conditional needed
+        recv = lax.ppermute(v_local, axis_name, list(perm))
+        out = out + coefs[c] * recv
+    return out
+
+
+def plan_mix_steps(v_local, axis_name: str, plan: CommPlan, diag, coefs,
+                   steps: int):
+    """B consecutive gossip steps (App. E.2): the sequential form W^B v.
+
+    The dense path folds W first (cheap in K); on the wire the fold does
+    not exist — each step exchanges neighbor-only traffic, so B steps cost
+    B * num_colors ppermutes, exactly the paper's B-step communication
+    model. ``steps`` is a static Python int (unrolled at trace time).
+    """
+    out = v_local
+    for _ in range(steps):
+        out = plan_mix_step(out, axis_name, plan, diag, coefs)
+    return out
+
+
+def plan_neighborhood_stats(g_local, axis_name: str, plan: CommPlan,
+                            mask_row):
+    """(masked neighbor sum, neighborhood size) for the Prop.-1 certificate.
+
+    Exchanges THIS device's (d,)-vector ``g_local`` (the local gradient)
+    over the plan's permutations and mask-selects what arrives:
+    ``mask_row`` is this node's row of the self-inclusive 0/1 neighborhood
+    mask — the static graph's row, or the churn round's reweighted-support
+    row from the certificate schedule, in which case dropped neighbors
+    contribute 0 exactly as the stacked ``duality.neighborhood_mean``
+    oracle excludes them. O(num_colors * d) bytes per device; no stack
+    gathers.
+    """
+    mask_row = jnp.asarray(mask_row)
+    i = lax.axis_index(axis_name)
+    partners = jnp.asarray(plan.partner_arrays())          # (C, K) static
+    nsum = mask_row[i] * g_local                            # self (mask=1)
+    for c, perm in enumerate(plan.perms):
+        recv = lax.ppermute(g_local, axis_name, list(perm))
+        nsum = nsum + mask_row[partners[c, i]] * recv
+    return nsum, jnp.sum(mask_row)

@@ -1,0 +1,279 @@
+"""Topology-program IR: compiled communication plans for arbitrary sparse W.
+
+``compile_plan`` turns the support graph of any (possibly time-varying)
+doubly-stochastic mixing matrix into a ``CommPlan``: a greedy edge coloring
+of the support into matchings, each matching lowered to one ``lax.ppermute``
+permutation (both directions of every edge in one collective). One gossip
+step then executes as
+
+    v'_k = W_kk * v_k + sum_c  W[k, partner_c(k)] * recv_c(k)
+
+where ``recv_c`` is the color-c ppermute and the per-node coefficient is
+read off the round's W — so a *static* plan (permutations fixed at compile
+time) executes *any* reweighting of the support, including churn rounds
+where dropped edges simply carry coefficient zero (the ppermute still runs;
+the zero multiply discards the payload, and XLA's collective cost is
+unchanged). That is what lets the round-block executor keep a single
+compiled program across a time-varying graph: the permutations are program
+structure, the weights are data.
+
+``PlanSchedule`` materializes the per-round (diag, coefs) pairs into the
+executor's stacked ``(T, ...)`` schedule arrays, exactly like the churn
+masks; ``plan_mix_dense`` is the mesh-free reference executor used as the
+oracle against ``mixing.dense_mix`` in the property tests; the byte
+accounting below is what ``launch.dryrun --plan`` renders and what the HLO
+assertions in the dist tests budget against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.core import topology as topo
+from repro.topo import coloring
+
+Edge = coloring.Edge
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPlan:
+    """A compiled topology program: matchings lowered to ppermute perms.
+
+    Everything here is static host data baked into the compiled round
+    program — per-round weights live in ``PlanSchedule``, not here.
+
+    Attributes:
+      num_nodes: K.
+      colors: per color class, the tuple of undirected edges (i < j).
+      perms: per color, the ``lax.ppermute`` (src, dst) pairs — both
+        directions of each edge (a matching's swap involution is a valid
+        permutation; unmatched nodes send nothing and receive zeros).
+      partners: per color, a K-tuple p with p[k] = k's exchange partner in
+        that color, or k itself when unmatched (its received payload is
+        the ppermute zero-fill and its coefficient is forced to 0).
+    """
+
+    num_nodes: int
+    colors: Tuple[Tuple[Edge, ...], ...]
+    perms: Tuple[Tuple[Tuple[int, int], ...], ...]
+    partners: Tuple[Tuple[int, ...], ...]
+
+    @property
+    def num_colors(self) -> int:
+        return len(self.colors)
+
+    @property
+    def num_edges(self) -> int:
+        return sum(len(c) for c in self.colors)
+
+    def support(self) -> np.ndarray:
+        """(K, K) bool: the off-diagonal exchange pattern this plan covers."""
+        s = np.zeros((self.num_nodes, self.num_nodes), dtype=bool)
+        for cls in self.colors:
+            for i, j in cls:
+                s[i, j] = s[j, i] = True
+        return s
+
+    def partner_arrays(self) -> np.ndarray:
+        """(C, K) int32 partner table (self-index where unmatched)."""
+        return np.asarray(self.partners, dtype=np.int32).reshape(
+            self.num_colors, self.num_nodes)
+
+    def max_degree(self) -> int:
+        return int(self.support().sum(axis=1).max(initial=0))
+
+    def cache_token(self):
+        """Hashable identity for compiled-driver cache keys: the program
+        structure is exactly the permutations."""
+        return ("CommPlan", self.num_nodes, self.colors)
+
+    # -- byte accounting (dryrun --plan, HLO budget assertions) -------------
+
+    def bytes_per_device_per_step(self, d: int, itemsize: int = 4) -> int:
+        """Worst-case per-device ppermute payload of ONE gossip step: one
+        (d,)-vector sent per color the node is matched in (<= num_colors)."""
+        return self.num_colors * d * itemsize
+
+    def bytes_per_link_per_step(self, d: int, itemsize: int = 4) -> int:
+        """Bytes crossing one graph edge (both directions) per gossip step."""
+        return 2 * d * itemsize
+
+    def total_bytes_per_step(self, d: int, itemsize: int = 4) -> int:
+        """Network-wide bytes of one gossip step: every edge, both ways."""
+        return self.num_edges * self.bytes_per_link_per_step(d, itemsize)
+
+    def render(self, d: int | None = None, itemsize: int = 4,
+               max_edges: int = 8) -> str:
+        """Human-readable plan (the ``dryrun --plan`` section)."""
+        lines = [f"[comm plan] K={self.num_nodes} edges={self.num_edges} "
+                 f"colors={self.num_colors} max_degree={self.max_degree()}"]
+        for c, cls in enumerate(self.colors):
+            shown = ", ".join(f"{i}<->{j}" for i, j in cls[:max_edges])
+            more = f", ... +{len(cls) - max_edges}" if len(cls) > max_edges \
+                else ""
+            lines.append(f"  color {c}: {len(cls)} edge(s)  {shown}{more}")
+        if d is not None:
+            lines.append(
+                f"  bytes/round (1 gossip step, d={d}, itemsize={itemsize}): "
+                f"per-device<={self.bytes_per_device_per_step(d, itemsize):,} "
+                f"per-link={self.bytes_per_link_per_step(d, itemsize):,} "
+                f"total={self.total_bytes_per_step(d, itemsize):,}  "
+                f"(dense all-gather per-device="
+                f"{self.num_nodes * d * itemsize:,})")
+        return "\n".join(lines)
+
+
+def compile_plan(support) -> CommPlan:
+    """Compile a support graph into a ``CommPlan``.
+
+    Args:
+      support: a ``core.topology.Topology``, or any (K, K) matrix whose
+        off-diagonal nonzero pattern is the exchange graph (a mixing matrix
+        works as-is; the diagonal is ignored — self-weights never move
+        bytes).
+    """
+    if isinstance(support, topo.Topology):
+        adj = support.adjacency
+    else:
+        adj = np.asarray(support)
+    k = adj.shape[0]
+    if adj.shape != (k, k):
+        raise ValueError(f"support must be square, got {adj.shape}")
+    edges = coloring.undirected_edges(adj)
+    classes = coloring.greedy_edge_coloring(edges, k)
+    perms, partners = [], []
+    for cls in classes:
+        coloring.check_matching(cls, k)
+        perm = []
+        partner = list(range(k))
+        for i, j in cls:
+            perm.append((i, j))
+            perm.append((j, i))
+            partner[i], partner[j] = j, i
+        perms.append(tuple(sorted(perm)))
+        partners.append(tuple(partner))
+    return CommPlan(num_nodes=k,
+                    colors=tuple(tuple(cls) for cls in classes),
+                    perms=tuple(perms), partners=tuple(partners))
+
+
+def check_plan_covers(plan: CommPlan, w: np.ndarray,
+                      atol: float = 0.0) -> None:
+    """Raise ValueError if ``w`` has off-diagonal mass outside the plan.
+
+    The generalization of ``mixing.check_circulant_band``: plan execution
+    reproduces ``dense_mix(w, .)`` exactly iff every nonzero off-diagonal
+    W_ij rides some color's permutation. Churn-reweighted matrices over the
+    compiled graph always pass (reweighting only *removes* edges); a
+    w_override with extra edges must recompile.
+    """
+    w = np.asarray(w)
+    if w.shape != (plan.num_nodes, plan.num_nodes):
+        raise ValueError(f"W shape {w.shape} does not match the plan's "
+                         f"K={plan.num_nodes}")
+    off = np.abs(w.copy())
+    np.fill_diagonal(off, 0.0)
+    uncovered = off * ~plan.support()
+    if uncovered.max(initial=0.0) > atol:
+        i, j = np.unravel_index(np.argmax(uncovered), uncovered.shape)
+        raise ValueError(
+            f"W[{i},{j}]={w[i, j]:.3g} lies outside the compiled plan's "
+            f"support — plan execution would drop that weight mass; "
+            "recompile the plan from this W's support (or use the dense "
+            "mixing path)")
+
+
+def plan_coefficients(plan: CommPlan, w, *, check: bool = True
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """(diag (K,), coefs (C, K)) for one round's mixing matrix ``w``.
+
+    ``diag[k] = W_kk``; ``coefs[c, k] = W[k, partner_c(k)]`` (0 where
+    unmatched). Together with the plan's permutations these reproduce
+    ``dense_mix(w, v)``: every off-diagonal entry appears in exactly one
+    color, the diagonal in the local term.
+    """
+    w = np.asarray(w)
+    if check:
+        check_plan_covers(plan, w)
+    k = plan.num_nodes
+    diag = np.ascontiguousarray(np.diag(w))
+    coefs = np.zeros((plan.num_colors, k), dtype=w.dtype)
+    rows = np.arange(k)
+    for c, partner in enumerate(plan.partner_arrays()):
+        matched = partner != rows
+        coefs[c, matched] = w[rows[matched], partner[matched]]
+    return diag, coefs
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSchedule:
+    """Per-round plan coefficients, materialized like the churn masks.
+
+    ``diag`` (T, K) and ``coefs`` (T, C, K) are stacked schedule arrays the
+    round-block executor slices per block; a static (round-invariant) W
+    yields broadcast views, O(C*K) host memory regardless of T.
+    """
+
+    diag: np.ndarray   # (T, K)
+    coefs: np.ndarray  # (T, C, K)
+
+    @classmethod
+    def from_w_stack(cls, plan: CommPlan, w_stack, *,
+                     static: bool = False) -> "PlanSchedule":
+        """Compile every round's coefficients (validating coverage per
+        round). ``static=True`` asserts the stack is round-invariant and
+        stores broadcast views instead of T copies."""
+        w_stack = np.asarray(w_stack)
+        t = w_stack.shape[0]
+        if static or t == 0:
+            w0 = w_stack[0] if t else np.eye(plan.num_nodes)
+            if t and not (w_stack == w0).all():
+                raise ValueError(
+                    "PlanSchedule.from_w_stack(static=True) requires a "
+                    "round-invariant W stack — this one varies; drop "
+                    "static= to materialize per-round coefficients")
+            diag0, coefs0 = plan_coefficients(plan, w0)
+            return cls(
+                diag=np.broadcast_to(diag0.astype(w_stack.dtype),
+                                     (t,) + diag0.shape),
+                coefs=np.broadcast_to(coefs0.astype(w_stack.dtype),
+                                      (t,) + coefs0.shape))
+        diag = np.empty((t, plan.num_nodes), dtype=w_stack.dtype)
+        coefs = np.empty((t, plan.num_colors, plan.num_nodes),
+                         dtype=w_stack.dtype)
+        for t_i in range(t):
+            diag[t_i], coefs[t_i] = plan_coefficients(plan, w_stack[t_i])
+        return cls(diag=diag, coefs=coefs)
+
+    def entries(self) -> dict:
+        """The executor schedule entries the dist runtime splices in."""
+        return {"plan_diag": self.diag, "plan_coefs": self.coefs}
+
+
+def plan_mix_dense(plan: CommPlan, diag, coefs, v_stack):
+    """Mesh-free reference executor: apply one plan-compiled gossip step to
+    stacked (K, ...) state with jnp gathers standing in for the ppermutes.
+
+    This is the oracle the property tests pin against ``mixing.dense_mix``
+    (equal to float tolerance — the color-by-color summation order differs
+    from the matmul's) and the program the shard_map lowering
+    (``repro.topo.lowering.plan_mix_step``) must match shard-for-shard.
+    """
+    import jax.numpy as jnp
+
+    v_stack = jnp.asarray(v_stack)
+    flat = v_stack.reshape(v_stack.shape[0], -1)
+    diag = jnp.asarray(diag, dtype=flat.dtype)
+    coefs = jnp.asarray(coefs, dtype=flat.dtype)
+    out = diag[:, None] * flat
+    for c, partner in enumerate(plan.partner_arrays()):
+        out = out + coefs[c][:, None] * flat[partner]
+    return out.reshape(v_stack.shape)
+
+
+def mix_with_plan(plan: CommPlan, w, v_stack):
+    """Convenience: one gossip step of ``w`` through the compiled plan."""
+    diag, coefs = plan_coefficients(plan, w)
+    return plan_mix_dense(plan, diag, coefs, v_stack)

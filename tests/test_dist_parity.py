@@ -110,14 +110,21 @@ def test_dist_gossip_steps_and_gram_modes(ridge, mesh1):
         _assert_parity(sim, dist, repr(cfg))
 
 
-def test_ring_comm_rejects_churn_and_bad_layout(ridge, mesh1):
+def test_ring_comm_layout_and_churn_dispatch(ridge, mesh1):
+    """comm='ring' under churn no longer raises 'needs a circulant W' — it
+    dispatches into the compiled topology-program path (repro.topo), which
+    still requires one node per device; a too-small mesh is the only
+    remaining error."""
     cfg = ColaConfig(kappa=1.0)
-    with pytest.raises(ValueError, match="circulant"):
+    with pytest.raises(ValueError, match="one node per device"):
+        # churn -> plan path; 8 nodes on 1 device cannot ppermute
         run_dist_cola(ridge, topo.ring(K), cfg, mesh1, 4, comm="ring",
                       active_schedule=_drop)
     with pytest.raises(ValueError, match="one node per device"):
         # 8 nodes on 1 device: ring comm needs K == mesh axis size
         run_dist_cola(ridge, topo.ring(K), cfg, mesh1, 4, comm="ring")
+    with pytest.raises(ValueError, match="one node per device"):
+        run_dist_cola(ridge, topo.ring(K), cfg, mesh1, 4, comm="plan")
 
 
 def test_dist_zero_rounds(ridge, mesh1):

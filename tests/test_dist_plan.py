@@ -1,0 +1,301 @@
+"""Plan-executed gossip in the dist runtime: the non-circulant acceptance
+suite.
+
+``run_dist_cola(comm="plan")`` (and the ``comm="ring"`` requests that now
+dispatch into it) must, on a real node mesh:
+
+* match the ``comm="dense"`` all-gather oracle (and the simulator) on a
+  non-circulant topology, static AND on a churn schedule;
+* lower to neighbor-only HLO — zero all-gathers, collective-permute
+  bounded by ``num_colors * d * itemsize`` per device per gossip step
+  (asserted via ``launch.hlo_analysis``);
+* keep certificate-driven ``eps=`` stopping bitwise-consistent with the
+  truncated run.
+
+The in-process tests skip on a single-device suite (one node per device is
+the plan-path contract) and run in the CI 4-virtual-device job; the
+subprocess test pins the same coverage from the default 1-device suite.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import problems, topology as topo
+from repro.core.cola import ColaConfig, run_cola
+from repro.data import synthetic
+from repro.dist.runtime import run_dist_cola
+
+CERT_KEYS = ("local_gap_max", "grad_disagreement_max", "cond9_nodes",
+             "cond10_nodes", "certified")
+
+
+def _torus(k: int) -> topo.Topology:
+    """A genuinely non-circulant graph on K nodes (row-major torus indexing
+    mixes +-1 and +-cols offsets, so check_circulant_band rejects it)."""
+    return topo.torus_2d(2, k // 2)
+
+
+@pytest.fixture(scope="module")
+def ridge_prob():
+    x, y, _ = synthetic.regression(120, 48, seed=0)
+    return problems.ridge_primal(jnp.asarray(x), jnp.asarray(y), 1e-2)
+
+
+@pytest.fixture(scope="module")
+def lasso_prob():
+    x, y, _ = synthetic.regression(150, 48, seed=2, sparsity_solution=0.2)
+    return problems.lasso(jnp.asarray(x), jnp.asarray(y), 5e-2, box=5.0)
+
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="plan execution places one node per device")
+
+
+@needs_mesh
+def test_plan_matches_dense_oracle_static(ridge_prob):
+    k = jax.device_count()
+    mesh = jax.make_mesh((k,), ("data",))
+    graph = _torus(k)
+    cfg = ColaConfig(kappa=1.0)
+    dense = run_dist_cola(ridge_prob, graph, cfg, mesh, 10, comm="dense")
+    plan = run_dist_cola(ridge_prob, graph, cfg, mesh, 10, comm="plan")
+    np.testing.assert_allclose(plan.history["primal"], dense.history["primal"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(plan.state.x_parts),
+                               np.asarray(dense.state.x_parts),
+                               rtol=1e-5, atol=1e-6)
+    sim = run_cola(ridge_prob, graph, cfg, 10)
+    np.testing.assert_allclose(plan.history["gap"], sim.history["gap"],
+                               rtol=1e-4, atol=1e-5)
+
+
+@needs_mesh
+def test_ring_request_dispatches_to_plan_on_non_circulant(ridge_prob):
+    """The stale 'comm=ring needs a circulant W' failure modes are now
+    dispatches: a non-circulant graph and a churn schedule both run with
+    neighbor-only communication."""
+    k = jax.device_count()
+    mesh = jax.make_mesh((k,), ("data",))
+    graph = _torus(k)
+    cfg = ColaConfig(kappa=1.0)
+    ring = run_dist_cola(ridge_prob, graph, cfg, mesh, 8, comm="ring")
+    dense = run_dist_cola(ridge_prob, graph, cfg, mesh, 8, comm="dense")
+    np.testing.assert_allclose(ring.history["primal"], dense.history["primal"],
+                               rtol=1e-5)
+
+
+@needs_mesh
+def test_plan_matches_dense_oracle_under_churn(ridge_prob):
+    """The acceptance scenario: churn schedule + non-circulant topology,
+    neighbor-only comm, same results as the dense all-gather oracle on the
+    SAME schedule (identical rng consumption)."""
+    k = jax.device_count()
+    mesh = jax.make_mesh((k,), ("data",))
+    graph = _torus(k)
+    cfg = ColaConfig(kappa=1.0)
+
+    def churn(t, rng):
+        return rng.random(k) < 0.75
+
+    kw = dict(active_schedule=churn, seed=5, record_every=3)
+    dense = run_dist_cola(ridge_prob, graph, cfg, mesh, 15, comm="dense", **kw)
+    plan = run_dist_cola(ridge_prob, graph, cfg, mesh, 15, comm="plan", **kw)
+    ring = run_dist_cola(ridge_prob, graph, cfg, mesh, 15, comm="ring", **kw)
+    np.testing.assert_allclose(plan.history["primal"], dense.history["primal"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(plan.state.v_stack),
+                               np.asarray(dense.state.v_stack),
+                               rtol=1e-5, atol=1e-6)
+    # ring request under churn IS the plan path
+    np.testing.assert_array_equal(np.asarray(ring.state.v_stack),
+                                  np.asarray(plan.state.v_stack))
+
+
+@needs_mesh
+def test_plan_certificate_stop_bitwise_truncation(lasso_prob):
+    """eps= stopping through the plan path: the stopped state equals the
+    truncated non-stopping run bitwise, and the certificate history matches
+    the simulator."""
+    k = jax.device_count()
+    mesh = jax.make_mesh((k,), ("data",))
+    graph = _torus(k)
+    cfg = ColaConfig(kappa=8.0)
+    dist = run_dist_cola(lasso_prob, graph, cfg, mesh, 400, comm="plan",
+                         record_every=20, recorder="certificate", eps=0.1)
+    sim = run_cola(lasso_prob, graph, cfg, 400, record_every=20,
+                   recorder="certificate", eps=0.1)
+    assert dist.history["stop_round"] == sim.history["stop_round"]
+    assert dist.history["stop_round"] is not None
+    for name in CERT_KEYS:
+        np.testing.assert_allclose(sim.history[name], dist.history[name],
+                                   rtol=1e-4, atol=1e-5, err_msg=name)
+    t_stop = dist.history["stop_round"]
+    trunc = run_dist_cola(lasso_prob, graph, cfg, mesh, t_stop + 1,
+                          comm="plan", record_every=20)
+    np.testing.assert_array_equal(np.asarray(dist.state.x_parts),
+                                  np.asarray(trunc.state.x_parts))
+    np.testing.assert_array_equal(np.asarray(dist.state.v_stack),
+                                  np.asarray(trunc.state.v_stack))
+
+
+@needs_mesh
+def test_plan_certificate_under_churn_matches_sim(lasso_prob):
+    """Dynamic certificate mode through the plan path: the ppermute
+    neighborhood follows the churn round's reweighted support."""
+    k = jax.device_count()
+    mesh = jax.make_mesh((k,), ("data",))
+    graph = _torus(k)
+    cfg = ColaConfig(kappa=8.0)
+
+    def churn(t, rng):
+        return rng.random(k) < 0.75
+
+    kw = dict(record_every=20, recorder="certificate", eps=10.0,
+              active_schedule=churn, seed=11)
+    sim = run_cola(lasso_prob, graph, cfg, 300, **kw)
+    dist = run_dist_cola(lasso_prob, graph, cfg, mesh, 300, comm="plan", **kw)
+    assert sim.history["stop_round"] == dist.history["stop_round"]
+    for name in CERT_KEYS:
+        np.testing.assert_allclose(sim.history[name], dist.history[name],
+                                   rtol=1e-4, atol=1e-5, err_msg=name)
+
+
+@needs_mesh
+def test_plan_round_hlo_is_neighbor_only():
+    _assert_plan_round_neighbor_only()
+
+
+def _assert_plan_round_neighbor_only():
+    """Lower the plan-executed round program for the device mesh and assert
+    (via launch.hlo_analysis) it moves NO all-gathered stacks: zero
+    all-gather/all-reduce bytes, collective-permute <= num_colors * d *
+    itemsize per gossip step — the paper's O(deg * d) communication model
+    in the actual HLO."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import mixing
+    from repro.core.cola import _round_body, build_env, init_state
+    from repro.core.partition import make_partition
+    from repro.dist import runtime as rt
+    from repro.dist.sharding import (cola_env_pspecs, cola_state_pspecs,
+                                     plan_payload_pspecs)
+    from repro.launch import hlo_analysis
+    from repro import topo as rtopo
+
+    x, y, _ = synthetic.regression(150, 48, seed=2, sparsity_solution=0.2)
+    prob = problems.lasso(jnp.asarray(x), jnp.asarray(y), 5e-2, box=5.0)
+    k, itemsize = jax.device_count(), 4
+    graph = _torus(k)
+    part = make_partition(prob.n, k)
+    env = build_env(prob, part)
+    mesh = jax.make_mesh((k,), ("data",))
+    plan = rtopo.compile_plan(graph)
+    cfg = ColaConfig(kappa=1.0)
+    mix_fn, grad_mix_fn = rt._dist_mixers("data", 1, 1, "plan",
+                                          cfg.gossip_steps, plan)
+    body = _round_body(prob, part, cfg, mix_fn=mix_fn,
+                       grad_mix_fn=grad_mix_fn)
+    state_spec, env_spec = cola_state_pspecs("data"), cola_env_pspecs("data")
+    shard_step = mixing.shard_map(
+        lambda st, e, pay, act: body(st, e, pay, act), mesh,
+        in_specs=(state_spec, env_spec, plan_payload_pspecs("data"),
+                  P("data")),
+        out_specs=state_spec)
+
+    w = topo.metropolis_weights(graph)
+    diag, coefs = rtopo.plan_coefficients(plan, w)
+    sds = lambda a: jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype)
+    args = (jax.tree.map(sds, init_state(prob, part)),
+            jax.tree.map(sds, env),
+            (sds(diag.astype(np.float32)), sds(coefs.astype(np.float32))),
+            sds(np.ones(k, np.float32)))
+    sh = lambda spec: NamedSharding(mesh, spec)
+    in_sh = (jax.tree.map(lambda _: sh(state_spec), args[0]),
+             jax.tree.map(lambda _: sh(env_spec), args[1]),
+             (sh(P("data")), sh(P(None, "data"))), sh(P("data")))
+    hlo = jax.jit(shard_step, in_shardings=in_sh) \
+        .lower(*args).compile().as_text()
+    coll = hlo_analysis.analyze(hlo)["collectives"]
+    assert coll["all-gather"] == 0, coll
+    assert coll["all-reduce"] == 0, coll
+    assert coll["reduce-scatter"] == 0 and coll["all-to-all"] == 0, coll
+    assert 0 < coll["collective-permute"] <= \
+        plan.num_colors * prob.d * itemsize, coll
+    # the dense oracle on the same graph DOES gather the (K, d) stack
+    mix_d, grad_d = rt._dist_mixers("data", 1, 1, "dense", cfg.gossip_steps)
+    body_d = _round_body(prob, part, cfg, mix_fn=mix_d, grad_mix_fn=grad_d)
+    shard_d = mixing.shard_map(
+        lambda st, e, w_, act: body_d(st, e, w_, act), mesh,
+        in_specs=(state_spec, env_spec, P(), P("data")),
+        out_specs=state_spec)
+    w_sds = sds(w.astype(np.float32))
+    hlo_d = jax.jit(shard_d, in_shardings=(
+        in_sh[0], in_sh[1], sh(P()), sh(P("data")))) \
+        .lower(args[0], args[1], w_sds, args[3]).compile().as_text()
+    coll_d = hlo_analysis.analyze(hlo_d)["collectives"]
+    assert coll_d["all-gather"] >= k * prob.d * itemsize / k, coll_d
+
+
+# --- subprocess pin: the full acceptance scenario from the 1-device suite --
+
+PLAN_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import tests.test_dist_plan as tdp
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.data import synthetic
+    from repro.core import problems, topology as topo
+    from repro.core.cola import ColaConfig, run_cola
+    from repro.dist.runtime import run_dist_cola
+
+    assert jax.device_count() == 4
+    mesh = jax.make_mesh((4,), ("data",))
+    graph = topo.torus_2d(2, 2)
+    x, y, _ = synthetic.regression(120, 48, seed=0)
+    prob = problems.ridge_primal(jnp.asarray(x), jnp.asarray(y), 1e-2)
+    cfg = ColaConfig(kappa=1.0)
+
+    def churn(t, rng):
+        return rng.random(4) < 0.75
+
+    kw = dict(active_schedule=churn, seed=5, record_every=3)
+    dense = run_dist_cola(prob, graph, cfg, mesh, 15, comm="dense", **kw)
+    plan = run_dist_cola(prob, graph, cfg, mesh, 15, comm="plan", **kw)
+    np.testing.assert_allclose(plan.history["primal"],
+                               dense.history["primal"], rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(plan.state.v_stack),
+                               np.asarray(dense.state.v_stack),
+                               rtol=1e-5, atol=1e-6)
+    tdp._assert_plan_round_neighbor_only()
+
+    xl, yl, _ = synthetic.regression(150, 48, seed=2, sparsity_solution=0.2)
+    lasso = problems.lasso(jnp.asarray(xl), jnp.asarray(yl), 5e-2, box=5.0)
+    cfg8 = ColaConfig(kappa=8.0)
+    stop = run_dist_cola(lasso, graph, cfg8, mesh, 400, comm="plan",
+                         record_every=20, recorder="certificate", eps=0.1)
+    t_stop = stop.history["stop_round"]
+    assert t_stop is not None
+    trunc = run_dist_cola(lasso, graph, cfg8, mesh, t_stop + 1, comm="plan",
+                          record_every=20)
+    np.testing.assert_array_equal(np.asarray(stop.state.x_parts),
+                                  np.asarray(trunc.state.x_parts))
+    np.testing.assert_array_equal(np.asarray(stop.state.v_stack),
+                                  np.asarray(trunc.state.v_stack))
+    print("DIST_PLAN_OK")
+""")
+
+
+@pytest.mark.slow
+def test_plan_4dev_subprocess():
+    env = dict(os.environ, PYTHONPATH="src:.")
+    out = subprocess.run([sys.executable, "-c", PLAN_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert "DIST_PLAN_OK" in out.stdout, out.stdout + "\n" + out.stderr

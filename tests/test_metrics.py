@@ -181,3 +181,101 @@ def test_run_result_history_has_stop_round_key(ridge, graph):
     for ex in ("loop", "block"):
         res = run_cola(ridge, graph, ColaConfig(kappa=1.0), 5, executor=ex)
         assert res.history["stop_round"] is None
+
+
+# ---------------------------------------------------------------------------
+# adaptive record cadence (on-device geometric back-off)
+# ---------------------------------------------------------------------------
+
+def test_adaptive_cadence_backs_off_geometrically(lasso_prob, graph):
+    """Far from eps the record rounds space out geometrically (0, 2, 6, 14,
+    ... for base=1/grow=2), capped at max_every; the run still records the
+    final round."""
+    cad = metrics_lib.AdaptiveCadence(base=1, max_every=16, grow=2, near=0.0)
+    # near=0: every ratio is "far", so the cadence is the pure back-off
+    res = run_cola(lasso_prob, graph, ColaConfig(kappa=1.0), 80,
+                   record_every=cad, recorder="certificate", eps=1e-6)
+    rounds = res.history["round"]
+    assert rounds[:6] == [0, 2, 6, 14, 30, 46]  # doubling, then capped at 16
+    gaps = np.diff(rounds)
+    assert gaps.max() <= 16
+    assert rounds[-1] == 79  # last round always records
+    # far-phase recording is O(log T) + T/max_every, nowhere near T rows
+    assert len(rounds) < 80 // 8
+
+
+def test_adaptive_cadence_tightens_near_certification(lasso_prob, graph):
+    """Near the threshold the cadence snaps back to base, so certification
+    is detected within base rounds of becoming true."""
+    eps = _eps_for(lasso_prob, graph)
+    cfg = ColaConfig(kappa=8.0)
+    cad = metrics_lib.AdaptiveCadence(base=1, max_every=64, grow=2, near=8.0)
+    ada = run_cola(lasso_prob, graph, cfg, 600, record_every=cad,
+                   recorder="certificate", eps=eps)
+    fix = run_cola(lasso_prob, graph, cfg, 600, record_every=1,
+                   recorder="certificate", eps=eps)
+    assert ada.history["stop_round"] is not None
+    # tightened-to-base tail: certification is at most base + one back-off
+    # step late relative to the every-round reference
+    assert ada.history["stop_round"] >= fix.history["stop_round"]
+    assert ada.history["stop_round"] <= fix.history["stop_round"] + \
+        cad.max_every
+    # far fewer rows than the fixed-cadence reference
+    assert len(ada.history["round"]) < len(fix.history["round"])
+    # stopped state is still bitwise the truncated run at ITS stop round
+    trunc = run_cola(lasso_prob, graph, cfg, ada.history["stop_round"] + 1,
+                     record_every=25)
+    np.testing.assert_array_equal(np.asarray(ada.state.x_parts),
+                                  np.asarray(trunc.state.x_parts))
+
+
+def test_adaptive_cadence_loop_matches_block(lasso_prob, graph):
+    """The loop driver's host-side controller reproduces the block engine's
+    on-device decisions: identical record rounds and stop round."""
+    cfg = ColaConfig(kappa=8.0)
+    cad = metrics_lib.AdaptiveCadence(base=1, max_every=32, grow=2, near=8.0)
+    kw = dict(record_every=cad, recorder="certificate", eps=0.1)
+    block = run_cola(lasso_prob, graph, cfg, 600, block_size=64, **kw)
+    small = run_cola(lasso_prob, graph, cfg, 600, block_size=10, **kw)
+    loop = run_cola(lasso_prob, graph, cfg, 600, executor="loop", **kw)
+    assert block.history["round"] == loop.history["round"]
+    assert block.history["round"] == small.history["round"]
+    assert block.history["stop_round"] == loop.history["stop_round"]
+    np.testing.assert_array_equal(np.asarray(block.state.x_parts),
+                                  np.asarray(loop.state.x_parts))
+    for name in metrics_lib.CERT_METRICS:
+        np.testing.assert_allclose(block.history[name], loop.history[name],
+                                   rtol=1e-5, atol=1e-6, err_msg=name)
+
+
+def test_adaptive_cadence_gap_recorder_and_validation(ridge, lasso_prob,
+                                                      graph):
+    res = run_cola(lasso_prob, graph, ColaConfig(kappa=8.0), 300,
+                   record_every="adaptive", recorder="gap", eps=1e-3)
+    assert res.history["round"][0] == 0
+    assert np.diff(res.history["round"]).max() > 1  # backed off somewhere
+    # gap recorder without eps has no ratio: adaptive must refuse
+    with pytest.raises(ValueError, match="adaptive record cadence needs"):
+        run_cola(lasso_prob, graph, ColaConfig(kappa=8.0), 20,
+                 record_every="adaptive", recorder="gap")
+    with pytest.raises(ValueError, match="base >= 1"):
+        metrics_lib.AdaptiveCadence(base=0)
+    assert metrics_lib.as_cadence(5) is None
+    assert metrics_lib.as_cadence("adaptive") == metrics_lib.AdaptiveCadence()
+
+
+def test_adaptive_cadence_under_churn(lasso_prob, graph):
+    """Adaptive cadence composes with the dynamic (churn) certificate: any
+    round may record, so the certificate schedule materializes every
+    round's mask/threshold."""
+    def churn(t, rng):
+        return rng.random(K) < 0.75
+
+    cfg = ColaConfig(kappa=8.0)
+    cad = metrics_lib.AdaptiveCadence(base=1, max_every=16, grow=2, near=8.0)
+    kw = dict(record_every=cad, recorder="certificate", eps=10.0,
+              active_schedule=churn, seed=11)
+    block = run_cola(lasso_prob, graph, cfg, 300, **kw)
+    loop = run_cola(lasso_prob, graph, cfg, 300, executor="loop", **kw)
+    assert block.history["round"] == loop.history["round"]
+    assert block.history["stop_round"] == loop.history["stop_round"]

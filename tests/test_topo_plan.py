@@ -1,0 +1,200 @@
+"""The topology-program compiler: edge coloring, plan IR, mixing semantics.
+
+Mesh-free: ``plan_mix_dense`` is the reference executor, pinned against
+``mixing.dense_mix`` (the bitwise oracle for arbitrary graphs) for random
+sparse doubly-stochastic W — including churn-reweighted supports — via the
+hypothesis property test. The shard_map lowering itself is covered by
+``tests/test_dist_plan.py`` (4-virtual-device subprocess + CI mesh job).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import mixing, topology as topo
+from repro import topo as rtopo
+from repro.topo import coloring
+
+
+def _random_support(k: int, p: float, seed: int) -> np.ndarray:
+    """Random symmetric off-diagonal support with at least one edge."""
+    rng = np.random.default_rng(seed)
+    up = np.triu(rng.random((k, k)) < p, 1)
+    adj = up | up.T
+    if not adj.any():
+        adj[0, 1] = adj[1, 0] = True
+    return adj
+
+
+# ---------------------------------------------------------------------------
+# coloring
+# ---------------------------------------------------------------------------
+
+@given(k=st.integers(3, 24), p=st.floats(0.05, 0.9), seed=st.integers(0, 99))
+@settings(max_examples=40, deadline=None)
+def test_greedy_coloring_is_proper_and_bounded(k, p, seed):
+    adj = _random_support(k, p, seed)
+    edges = coloring.undirected_edges(adj)
+    classes = coloring.greedy_edge_coloring(edges, k)
+    # partition: every edge exactly once
+    flat = [e for cls in classes for e in cls]
+    assert sorted(flat) == sorted(edges)
+    # proper: every class is a matching
+    for cls in classes:
+        coloring.check_matching(cls, k)
+    # greedy bound
+    delta = int(adj.sum(axis=1).max())
+    assert len(classes) <= max(2 * delta - 1, 1)
+
+
+def test_coloring_deterministic():
+    adj = _random_support(12, 0.4, 3)
+    a = coloring.greedy_edge_coloring(coloring.undirected_edges(adj), 12)
+    b = coloring.greedy_edge_coloring(coloring.undirected_edges(adj), 12)
+    assert a == b
+    assert rtopo.compile_plan(adj).cache_token() == \
+        rtopo.compile_plan(adj).cache_token()
+
+
+def test_ring_colors_to_two_matchings_even_k():
+    plan = rtopo.compile_plan(topo.ring(8))
+    assert plan.num_colors == 2
+    assert rtopo.compile_plan(topo.ring(7)).num_colors == 3  # odd cycle
+
+
+# ---------------------------------------------------------------------------
+# plan semantics: compiled-plan mixing == dense_mix (the satellite property
+# test — random sparse doubly-stochastic W, incl. churn-reweighted supports)
+# ---------------------------------------------------------------------------
+
+@given(k=st.integers(2, 16), p=st.floats(0.1, 0.9), seed=st.integers(0, 999),
+       drop=st.floats(0.0, 0.5))
+@settings(max_examples=50, deadline=None)
+def test_plan_mix_equals_dense_mix(k, p, seed, drop):
+    """For any random sparse doubly-stochastic W (Metropolis over a random
+    support) and any churn reweighting of it, executing the compiled plan
+    reproduces the dense (K, K) matmul to float tolerance."""
+    rng = np.random.default_rng(seed)
+    graph = topo.Topology("rand", _random_support(k, p, seed))
+    plan = rtopo.compile_plan(graph)
+    v = rng.standard_normal((k, 7)).astype(np.float32)
+
+    w = topo.metropolis_weights(graph)  # doubly stochastic, symmetric
+    np.testing.assert_allclose(np.asarray(w.sum(0)), 1.0, atol=1e-12)
+    got = np.asarray(rtopo.mix_with_plan(plan, w, v))
+    want = np.asarray(mixing.dense_mix(jnp.asarray(w, jnp.float32),
+                                       jnp.asarray(v)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    # churn-reweighted: support shrinks, same compiled plan executes W_t
+    active = rng.random(k) >= drop
+    if not active.any():
+        active[:] = True
+    w_t = topo.reweight_for_active(graph, active)
+    got = np.asarray(rtopo.mix_with_plan(plan, w_t, v))
+    want = np.asarray(mixing.dense_mix(jnp.asarray(w_t, jnp.float32),
+                                       jnp.asarray(v)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_plan_schedule_materializes_like_the_churn_masks():
+    graph = topo.torus_2d(2, 3)
+    plan = rtopo.compile_plan(graph)
+    rng = np.random.default_rng(0)
+    t, k = 5, graph.num_nodes
+    w_stack = np.stack([
+        topo.reweight_for_active(graph, rng.random(k) < 0.8)
+        for _ in range(t)]).astype(np.float32)
+    ps = rtopo.PlanSchedule.from_w_stack(plan, w_stack)
+    assert ps.diag.shape == (t, k)
+    assert ps.coefs.shape == (t, plan.num_colors, k)
+    v = rng.standard_normal((k, 4)).astype(np.float32)
+    for t_i in range(t):
+        got = rtopo.plan_mix_dense(plan, ps.diag[t_i], ps.coefs[t_i], v)
+        want = mixing.dense_mix(jnp.asarray(w_stack[t_i]), jnp.asarray(v))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+    # static form: broadcast views, O(C*K) memory
+    static = rtopo.PlanSchedule.from_w_stack(
+        plan, np.broadcast_to(w_stack[0], (t, k, k)), static=True)
+    assert static.coefs.base is not None  # a view, not t copies
+    np.testing.assert_array_equal(static.coefs[0], static.coefs[-1])
+
+
+def test_plan_coverage_validation():
+    """W mass outside the compiled support must raise, not silently drop —
+    the generalization of mixing.check_circulant_band."""
+    plan = rtopo.compile_plan(topo.ring(6))
+    w_bad = topo.metropolis_weights(topo.connected_cycle(6, 2))
+    with pytest.raises(ValueError, match="outside the compiled plan"):
+        rtopo.check_plan_covers(plan, w_bad)
+    with pytest.raises(ValueError, match="outside the compiled plan"):
+        rtopo.plan_coefficients(plan, w_bad)
+    # subsets are fine (churn only removes edges)
+    act = np.array([1, 1, 0, 1, 1, 1], dtype=bool)
+    rtopo.plan_coefficients(plan, topo.reweight_for_active(topo.ring(6), act))
+    with pytest.raises(ValueError, match="does not match"):
+        rtopo.check_plan_covers(plan, np.eye(4))
+
+
+def test_plan_byte_accounting_and_render():
+    plan = rtopo.compile_plan(topo.torus_2d(4, 4))
+    d, item = 64, 4
+    assert plan.bytes_per_link_per_step(d, item) == 2 * d * item
+    assert plan.bytes_per_device_per_step(d, item) == \
+        plan.num_colors * d * item
+    assert plan.total_bytes_per_step(d, item) == \
+        plan.num_edges * 2 * d * item
+    text = plan.render(d=d, itemsize=item)
+    assert "colors=" in text and "bytes/round" in text
+    assert f"K={plan.num_nodes}" in text
+
+
+def test_plan_support_roundtrip():
+    graph = rtopo.hypercube(8)
+    plan = rtopo.compile_plan(graph)
+    np.testing.assert_array_equal(plan.support(), graph.adjacency)
+    assert plan.max_degree() == 3
+    assert plan.num_edges == graph.adjacency.sum() // 2
+
+
+# ---------------------------------------------------------------------------
+# graph builders
+# ---------------------------------------------------------------------------
+
+def test_expander_builder():
+    g = rtopo.expander(16, degree=4, seed=1)
+    assert rtopo.graphs.is_connected(g.adjacency)
+    assert g.adjacency.sum(axis=1).max() <= 4 + 1
+    w = topo.metropolis_weights(g)
+    assert topo.spectral_gap(w) > topo.spectral_gap(
+        topo.metropolis_weights(topo.ring(16)))  # expanders mix faster
+    # deterministic in seed
+    np.testing.assert_array_equal(
+        g.adjacency, rtopo.expander(16, degree=4, seed=1).adjacency)
+
+
+def test_random_geometric_builder():
+    g = rtopo.random_geometric(20, seed=3)
+    assert rtopo.graphs.is_connected(g.adjacency)
+    assert (g.adjacency == g.adjacency.T).all()
+    with pytest.raises(ValueError, match="disconnected"):
+        rtopo.random_geometric(20, radius=1e-3, seed=3)
+
+
+def test_hypercube_builder():
+    g = rtopo.hypercube(16)
+    assert (g.adjacency.sum(axis=1) == 4).all()
+    with pytest.raises(ValueError):
+        rtopo.hypercube(12)
+
+
+def test_registry_builds_all():
+    for name in sorted(rtopo.GRAPHS):
+        g = rtopo.build(name, 16)
+        assert g.num_nodes == 16
+        plan = rtopo.compile_plan(g)
+        if name != "disconnected":
+            assert plan.num_edges > 0
+    with pytest.raises(ValueError, match="unknown topology"):
+        rtopo.build("moebius", 16)
