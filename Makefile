@@ -8,8 +8,10 @@ PY := PYTHONPATH=src:. python
 # fails; tune with BENCH_TOLERANCE)
 verify: test bench-smoke
 
+# --durations surfaces the slowest tests in CI logs so wall-time
+# regressions (e.g. an unmarked multi-device subprocess test) are visible
 test:
-	$(PY) -m pytest -x -q
+	$(PY) -m pytest -x -q --durations=15
 
 # quick path: skip the slow subprocess equivalence tests
 quick:

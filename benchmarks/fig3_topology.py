@@ -8,11 +8,15 @@ each graph reports:
 * ``beta`` — the mixing contraction governing Theorems 1/2;
 * the compiled comm plan's cost model: edge-color count (= ppermutes per
   gossip step) and per-device bytes/round vs the dense all-gather;
+* the BLOCK-mode cost model for the same K=16 graph quotiented onto 4
+  devices (the CI mesh run_dist_cola actually executes on): block-level
+  color count and per-device block-payload bytes — the column showing how
+  the quotient collapses dense node-level colorings (complete: 15 -> 3);
 * suboptimality after the round budget (static and churn runs);
 * a plan-vs-dense oracle check: one compiled-plan gossip step must equal
   ``dense_mix`` on the same W (the property the dist runtime's plan path
-  relies on), asserted here for both the static W and a churn-reweighted
-  round.
+  relies on) and one block-plan step must equal it BITWISE, asserted here
+  for both the static W and a churn-reweighted round.
 """
 from __future__ import annotations
 
@@ -28,11 +32,13 @@ SWEEP = ("ring", "cycle2", "cycle3", "grid", "torus2d", "expander",
 
 
 def _check_plan_oracle(graph: topo.Topology, w: np.ndarray, seed: int = 0,
-                       atol: float = 1e-5) -> None:
-    """Compiled-plan mixing == dense_mix on this graph (static + churn)."""
+                       atol: float = 1e-5, devices: int = 4) -> None:
+    """Compiled-plan mixing == dense_mix on this graph (static + churn);
+    the block-quotiented plan must match BITWISE."""
     import jax.numpy as jnp
 
     plan = topo_programs.compile_plan(graph)
+    bplan = topo_programs.compile_block_plan(graph, devices)
     rng = np.random.default_rng(seed)
     v = rng.standard_normal((graph.num_nodes, 8)).astype(np.float32)
     for w_t in (w, topo.reweight_for_active(
@@ -41,26 +47,30 @@ def _check_plan_oracle(graph: topo.Topology, w: np.ndarray, seed: int = 0,
         want = np.asarray(mixing.dense_mix(jnp.asarray(w_t, jnp.float32),
                                            jnp.asarray(v)))
         np.testing.assert_allclose(got, want, rtol=1e-5, atol=atol)
+        got_b = np.asarray(topo_programs.mix_with_block_plan(bplan, w_t, v))
+        np.testing.assert_array_equal(got_b, want)
 
 
 def run(fast: bool = True):
     prob, _ = make_ridge(lam=1e-5, seed=2)
     opt = solve_reference(prob, rounds=800, kappa=10)
     rounds = 50 if fast else 300
-    k, d, itemsize = 16, prob.d, 4
+    k, m_dev, d, itemsize = 16, 4, prob.d, 4
 
     def churn(t, rng):
         return rng.random(k) < 0.8
 
     csv_row("fig", "topology", "beta", "colors", "bytes_per_dev",
-            "dense_bytes", "rounds", "subopt_static", "subopt_churn")
+            "blk4_colors", "blk4_bytes_per_dev", "dense_bytes", "rounds",
+            "subopt_static", "subopt_churn")
     results = {}
     for name in SWEEP:
         g = topo_programs.build(name, k)
         w = topo.metropolis_weights(g)
         beta = topo.beta(w)
         plan = topo_programs.compile_plan(g)
-        _check_plan_oracle(g, w)
+        bplan = topo_programs.compile_block_plan(g, m_dev)
+        _check_plan_oracle(g, w, devices=m_dev)
         static = run_cola(prob, g, ColaConfig(kappa=1.0), rounds=rounds,
                           record_every=rounds - 1)
         churned = run_cola(prob, g, ColaConfig(kappa=1.0), rounds=rounds,
@@ -69,11 +79,15 @@ def run(fast: bool = True):
         sub_s = static.history["primal"][-1] - opt
         sub_c = churned.history["primal"][-1] - opt
         bytes_dev = plan.bytes_per_device_per_step(d, itemsize)
+        blk_bytes_dev = bplan.bytes_per_device_per_step(d, itemsize)
         dense_dev = k * d * itemsize
-        csv_row("fig3", name, f"{beta:.4f}", plan.num_colors,
-                bytes_dev, dense_dev, rounds, f"{sub_s:.6f}", f"{sub_c:.6f}")
+        csv_row("fig3", name, f"{beta:.4f}", plan.num_colors, bytes_dev,
+                bplan.num_colors, blk_bytes_dev, dense_dev, rounds,
+                f"{sub_s:.6f}", f"{sub_c:.6f}")
         results[name] = {"beta": beta, "colors": plan.num_colors,
                          "bytes_per_device": bytes_dev,
+                         "block4_colors": bplan.num_colors,
+                         "block4_bytes_per_device": blk_bytes_dev,
                          "subopt_static": sub_s, "subopt_churn": sub_c}
     return results
 

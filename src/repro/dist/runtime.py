@@ -18,17 +18,24 @@ and as cheap to dispatch:
 * **neighbor exchange, not all-reduce** — ``comm="ring"`` mixes v via the
   banded ``lax.ppermute`` ring from ``repro.core.mixing`` (deg(k)·|v| bytes
   per link per gossip step, the paper's communication model);
-  ``comm="plan"`` generalizes it to ARBITRARY sparse graphs through the
-  topology-program compiler (``repro.topo``): the support is edge-colored
-  into matchings, each color lowers to one ``lax.ppermute``, and per-round
-  weights — including churn-reweighted ones — ride the schedule as
-  ``PlanSchedule`` coefficient arrays, so a single compiled program
-  executes a time-varying graph at O(deg(k)·|v|) bytes per device;
-  ``comm="dense"`` is the all-gather + W matmul oracle and the mode that
-  is bitwise identical to the simulator on a 1-device mesh. A ``ring``
-  request whose W turns out non-circulant, or that runs under churn,
-  dispatches to the plan path instead of failing (the historical
-  "churn forces comm='dense'" restriction is retired).
+  ``comm="plan"`` generalizes it to ARBITRARY sparse graphs AND to meshes
+  smaller than the graph through the topology-program compiler
+  (``repro.topo``): with one node per device the support is edge-colored
+  into matchings, each color one ``lax.ppermute``, per-round weights —
+  including churn-reweighted ones — riding the schedule as ``PlanSchedule``
+  coefficient arrays; with K/M > 1 nodes per device the node graph
+  quotients onto the mesh (``BlockPlan``): intra-block edges become local
+  mixing terms (zero communication), inter-block edges collapse onto a
+  device-level graph whose Delta+1 colors each move one (K/M, d) block
+  payload per ppermute, and each device contracts its assembled
+  neighborhood buffer against its (K/M, K) W rows in one dot — bitwise the
+  simulator's dense mix, at O(colors·(K/M)·|v|) bytes per device. So one
+  compiled program executes any paper topology (K=8/16/32) on any mesh
+  whose size divides K; ``comm="dense"`` is the all-gather + W matmul
+  oracle. A ``ring`` request whose W turns out non-circulant, that runs
+  under churn, or that lands on a mesh smaller than K, dispatches to the
+  plan path instead of failing (the historical "churn forces comm='dense'"
+  and "plan places one node per device" restrictions are both retired).
 
 Metric recording follows the same split (``repro.core.metrics`` recorders):
 the gap recorder evaluates ``gap_report`` on the globally-sharded state and
@@ -36,10 +43,12 @@ lets GSPMD insert the (K, d)/(K, n_k) stack gathers — fine at paper scale,
 O(K) bytes per device per record round. The Prop.-1 certificate recorder
 instead records UNDER shard_map from local quantities: gradients of the
 local node block, the Eq.-10 neighborhood mean via ``lax.ppermute`` of the
-(d,)-sized local gradient (ring) and scalar ``psum``/``pmax`` reductions
-for the row — O(d) per device per record round, no stack gathers (asserted
-against the lowered HLO in tests via ``launch.hlo_analysis``). Certificate
-stop conditions short-circuit remaining rounds exactly as in the simulator.
+(d,)-sized local gradient (ring / per-node plan) or of the (K/M, d) local
+gradient block over the block-level colors (block plan), plus scalar
+``psum``/``pmax`` reductions for the row — O(colors·(K/M)·d) per device per
+record round, no stack gathers (asserted against the lowered HLO in tests
+via ``launch.hlo_analysis``). Certificate stop conditions short-circuit
+remaining rounds exactly as in the simulator.
 """
 from __future__ import annotations
 
@@ -61,13 +70,14 @@ from repro.core.cola import (ColaConfig, RunResult,
 from repro.core.duality import neighborhood_mean
 from repro.core.partition import make_partition
 from repro.core.problems import Problem
-from repro.dist.sharding import (cola_env_pspecs, cola_recorder_pspecs,
-                                 cola_state_pspecs, plan_payload_pspecs)
+from repro.dist.sharding import (block_payload_pspec, cola_env_pspecs,
+                                 cola_recorder_pspecs, cola_state_pspecs,
+                                 plan_payload_pspecs)
 
 
 def _dist_mixers(axis: str, local_nodes: int, conn: int, comm: str,
                  gossip_steps: int,
-                 plan: topo_plan.CommPlan | None = None
+                 plan: topo_plan.CommPlan | topo_plan.BlockPlan | None = None
                  ) -> tuple[Callable, Callable]:
     """(mix_fn, grad_mix_fn) for the shard_map round body.
 
@@ -86,10 +96,15 @@ def _dist_mixers(axis: str, local_nodes: int, conn: int, comm: str,
     one node per device, round-constant circulant W (the historical
     TPU-native special case, kept for bitwise compatibility).
 
-    ``plan``: the compiled topology program — one ``ppermute`` per edge
-    color, per-node coefficients from the ``PlanSchedule`` slice, so any
-    sparse graph (and any churn reweighting of it) runs at neighbor-only
-    cost with a single compiled program.
+    ``plan``: the compiled topology program. One node per device
+    (``CommPlan``): one ``ppermute`` per node-level edge color, per-node
+    coefficients from the ``PlanSchedule`` slice. K/M nodes per device
+    (``BlockPlan``): one ``ppermute`` of the (K/M, d) block payload per
+    BLOCK-level color, this device's (K/M, K) W rows (the
+    ``BlockPlanSchedule`` slice) contracted against the assembled
+    neighborhood buffer in one dot — bitwise the simulator's dense mix.
+    Either way any sparse graph (and any churn reweighting of it) runs at
+    neighbor-only cost with a single compiled program.
     """
     if comm == "dense":
         def steps_mix(w, stack, steps):
@@ -113,16 +128,28 @@ def _dist_mixers(axis: str, local_nodes: int, conn: int, comm: str,
                 out = mixing.ring_mix_ppermute(out, axis, band, conn)
             return out[None]
     elif comm == "plan":
-        if local_nodes != 1:
-            raise ValueError(
-                f"comm='plan' places one node per device; got {local_nodes} "
-                "nodes per device — use comm='dense' or a bigger mesh axis")
+        if isinstance(plan, topo_plan.BlockPlan):
+            if local_nodes != plan.local_nodes:
+                raise ValueError(
+                    f"block plan carries {plan.local_nodes} nodes/device but "
+                    f"the mesh layout implies {local_nodes}")
 
-        def steps_mix(payload, stack, steps):
-            diag, coefs = payload  # node-sharded slices: (1,), (C, 1)
-            out = topo_lowering.plan_mix_steps(
-                stack[0], axis, plan, diag[0], coefs[:, 0], steps)
-            return out[None]
+            def steps_mix(payload, stack, steps):
+                # payload: this device's (K/M, K) rows of the round's W
+                return topo_lowering.block_mix_steps(stack, axis, plan,
+                                                     payload, steps)
+        else:
+            if local_nodes != 1:
+                raise ValueError(
+                    f"a per-node CommPlan places one node per device; got "
+                    f"{local_nodes} nodes per device — compile a BlockPlan "
+                    "(run_dist_cola does this automatically)")
+
+            def steps_mix(payload, stack, steps):
+                diag, coefs = payload  # node-sharded slices: (1,), (C, 1)
+                out = topo_lowering.plan_mix_steps(
+                    stack[0], axis, plan, diag[0], coefs[:, 0], steps)
+                return out[None]
     else:
         raise ValueError(
             f"unknown comm {comm!r} (want 'dense', 'ring' or 'plan')")
@@ -155,23 +182,30 @@ def _place_recorder(recorder, mesh, axis):
 
 def _certificate_dist_record(rec, mesh, axis: str, local_nodes: int,
                              comm: str, conn: int,
-                             plan: topo_plan.CommPlan | None = None
-                             ) -> Callable:
+                             plan=None) -> Callable:
     """Shard_map record_fn for ``CertificateRecorder``: O(d) collectives.
 
     Condition (9) is node-local. Condition (10)'s neighborhood mean comes
     from the gossip exchange pattern itself: on the ring, ``2*conn``
     ``ppermute`` pushes of this device's (d,) gradient (the certificate's
-    only vector communication); on the plan path, one ``ppermute`` per edge
-    color with the round's neighbor-mask row selecting what arrives (so the
-    neighborhood follows the ACTIVE plan — under churn, the reweighted
-    support from the certificate schedule — instead of a static band); on
+    only vector communication); on the per-node plan path, one ``ppermute``
+    per edge color with the round's neighbor-mask row selecting what
+    arrives (so the neighborhood follows the ACTIVE plan — under churn, the
+    reweighted support from the certificate schedule — instead of a static
+    band); on the block plan path, one ``ppermute`` of the (K/M, d) local
+    gradient block per BLOCK-level color, mask-rows selecting per node; on
     the dense fallback, the same all-gather the round body already
     performs. Row entries reduce with scalar ``psum``/``pmax`` — on a
     1-device mesh every collective degenerates to the identity and the
     program is bitwise the simulator's record_fn.
     """
     k = rec.part.num_nodes
+
+    def compile_support(support):
+        return (topo_plan.compile_plan(support) if local_nodes == 1
+                else topo_plan.compile_block_plan(support,
+                                                  k // local_nodes))
+
     if comm == "ring":
         # the ppermute neighborhood must match the recorder's mask; a mask
         # that is NOT the circulant band (historically a ValueError)
@@ -181,14 +215,20 @@ def _certificate_dist_record(rec, mesh, axis: str, local_nodes: int,
         for off in range(-conn, conn + 1):
             band[idx, (idx + off) % k] = 1.0
         if not np.array_equal(np.asarray(rec.neigh_mask) != 0, band != 0):
-            comm, plan = "plan", topo_plan.compile_plan(
-                np.asarray(rec.neigh_mask))
+            comm, plan = "plan", compile_support(np.asarray(rec.neigh_mask))
     if comm == "plan" and plan is None:
-        plan = topo_plan.compile_plan(np.asarray(rec.neigh_mask))
+        plan = compile_support(np.asarray(rec.neigh_mask))
 
     def body(x_l, v_l, a_l, gp_l, m_l, nm_l, thr):
         grads = jax.vmap(rec.problem.grad_f)(v_l)            # (ln, d)
-        if comm == "plan":
+        if comm == "plan" and isinstance(plan, topo_plan.BlockPlan):
+            # block exchange of the whole (ln, d) gradient block; the
+            # mask rows zero exactly what the stacked oracle excludes, so
+            # the mean matches duality.neighborhood_mean bitwise
+            nsum, count = topo_lowering.block_neighborhood_stats(
+                grads, axis, plan, nm_l)
+            neigh_mean = nsum / count[:, None]               # (ln, d)
+        elif comm == "plan":
             # mask-selected plan exchange: nm_l is this node's row of the
             # self-inclusive neighborhood mask (static graph or the churn
             # round's reweighted support via the certificate schedule)
@@ -237,7 +277,7 @@ def _certificate_dist_record(rec, mesh, axis: str, local_nodes: int,
 
 
 def _dist_record_fn(recorder, mesh, axis, local_nodes, comm, conn,
-                    plan: topo_plan.CommPlan | None = None) -> Callable:
+                    plan=None) -> Callable:
     """The distributed record program for any recorder: certificates record
     under shard_map (O(d) collectives), everything else records on the
     globally-sharded state as-is (GSPMD inserts the gathers)."""
@@ -259,8 +299,7 @@ class _DistRecorder:
     mesh; labels / stop condition / cache identity delegate to the inner
     recorder (plus the comm layout, which changes the compiled program)."""
 
-    def __init__(self, inner, record_fn, comm: str, conn: int,
-                 plan: topo_plan.CommPlan | None = None):
+    def __init__(self, inner, record_fn, comm: str, conn: int, plan=None):
         self._inner = inner
         self._record_fn = record_fn
         self._comm, self._conn = comm, conn
@@ -314,20 +353,22 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         mesh's first axis), K % axis_size == 0, K/axis_size nodes per device.
       comm: "ring" (banded ppermute; round-constant circulant W, one node
         per device), "plan" (compiled topology program from ``repro.topo``:
-        ANY sparse graph, including time-varying churn-reweighted ones, as
-        one ``ppermute`` per edge color with per-round schedule
-        coefficients; one node per device), or "dense" (all-gather + W
+        ANY sparse graph, including time-varying churn-reweighted ones; one
+        ``ppermute`` per edge color with per-round schedule coefficients
+        when K equals the mesh axis, or — on a smaller mesh — one
+        ``ppermute`` of the (K/M, d) node-block payload per BLOCK-level
+        color, bitwise-equal to the simulator), or "dense" (all-gather + W
         matmul; any W, any node count — and bitwise identical to
         ``run_cola`` on a 1-device mesh). A "ring" request dispatches to
-        "plan" automatically when churn is scheduled or W is not
-        circulant-banded.
+        "plan" automatically when churn is scheduled, W is not
+        circulant-banded, or the mesh is smaller than K.
       conn: connectivity of the circulant band for ``comm="ring"``.
 
     The certificate recorder records under shard_map from local gradients
-    (``ppermute``/``psum``, O(d) per device per record round) — its
-    neighborhood exchange follows the active comm plan (the churn round's
-    reweighted support) rather than a static band; the gap recorder keeps
-    the gather-everything ``gap_report`` semantics. ``record_every``
+    (``ppermute``/``psum``, O(colors·(K/M)·d) per device per record round)
+    — its neighborhood exchange follows the active comm plan (the churn
+    round's reweighted support) rather than a static band; the gap recorder
+    keeps the gather-everything ``gap_report`` semantics. ``record_every``
     accepts the same ``"adaptive"`` / ``AdaptiveCadence`` controller as
     ``run_cola``.
 
@@ -347,10 +388,11 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
     plan = None
     if comm == "ring":
         # the circulant ppermute band only executes a round-constant
-        # circulant W; churn reweighting or a non-circulant graph now
-        # dispatches into the compiled topology-program path instead of the
-        # historical ValueError ("churn forces comm='dense'")
-        if active_schedule is not None:
+        # circulant W with one node per device; churn reweighting, a
+        # non-circulant graph, or a mesh smaller than K now dispatches into
+        # the compiled topology-program path instead of the historical
+        # ValueErrors ("churn forces comm='dense'" / "one node per device")
+        if active_schedule is not None or local_nodes != 1:
             comm = "plan"
         else:
             try:
@@ -358,10 +400,6 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
             except ValueError:
                 comm = "plan"
     if comm == "plan":
-        if local_nodes != 1:
-            raise ValueError(
-                f"comm='plan' places one node per device; got {local_nodes} "
-                "nodes per device — use comm='dense' or a bigger mesh axis")
         # under churn the per-round W is a reweighting of the graph (its
         # support only shrinks), so the graph's adjacency is the complete
         # compile-time support. A static w_override contributes its own
@@ -372,7 +410,10 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
             off = np.asarray(base_w) != 0
             np.fill_diagonal(off, False)
             support = support | off
-        plan = topo_plan.compile_plan(support)
+        # one node per device lowers per-node colors; K/M > 1 nodes per
+        # device quotients the graph onto the mesh (block-level colors)
+        plan = (topo_plan.compile_plan(support) if local_nodes == 1
+                else topo_plan.compile_block_plan(support, m))
 
     part = make_partition(problem.n, k)
     env = build_env(problem, part,
@@ -424,11 +465,18 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
 
     # node-axis operands shard over `axis`; the per-round scalars are
     # replicated. The comm payload is the replicated (K, K) W for
-    # dense/ring, or the node-sharded PlanSchedule slices (diag (K,),
-    # coefs (C, K)) for the plan path. ColaEnv.gram_parts may be None — a
+    # dense/ring, the node-sharded PlanSchedule slices (diag (K,),
+    # coefs (C, K)) for the per-node plan path, or the row-sharded (K, K)
+    # round W for the block plan path. ColaEnv.gram_parts may be None — a
     # P(axis) prefix covers whichever leaves exist.
     node, repl = P(axis), P()
-    payload_spec = plan_payload_pspecs(axis) if plan is not None else repl
+    block_mode = isinstance(plan, topo_plan.BlockPlan)
+    if plan is None:
+        payload_spec = repl
+    elif block_mode:
+        payload_spec = block_payload_pspec(axis)
+    else:
+        payload_spec = plan_payload_pspecs(axis)
     shard_step = mixing.shard_map(
         shard_round, mesh,
         in_specs=(state_spec, env_spec, payload_spec, node,
@@ -439,8 +487,12 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
     zeros_k = np.zeros((rounds,), dtype)
 
     def step_fn(st, env_ctx, s_t):
-        payload = ((s_t["plan_diag"], s_t["plan_coefs"])
-                   if plan is not None else s_t["w"])
+        if plan is None:
+            payload = s_t["w"]
+        elif block_mode:
+            payload = s_t["plan_w"]
+        else:
+            payload = (s_t["plan_diag"], s_t["plan_coefs"])
         st = shard_step(st, env_ctx, payload, s_t["active"],
                         s_t["budgets"] if has_budget else s_t["_pad"],
                         s_t["leavers"] if has_reset else s_t["_pad"],
@@ -459,9 +511,12 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
             np.ones((rounds,), dtype=bool) if cad else rec_mask))
     if plan is not None:
         # materialize the per-round plan coefficients (validating that
-        # every round's W stays inside the compiled support) and drop the
-        # now-unconsumed (T, K, K) W stack from the device schedule
-        sched.update(topo_plan.PlanSchedule.from_w_stack(
+        # every round's W stays inside the compiled support); the per-node
+        # path drops the now-unconsumed (T, K, K) W stack from the device
+        # schedule, the block path re-enters it row-sharded as ``plan_w``
+        sched_cls = (topo_plan.BlockPlanSchedule if block_mode
+                     else topo_plan.PlanSchedule)
+        sched.update(sched_cls.from_w_stack(
             plan, sched["w"], static=active_schedule is None).entries())
         del sched["w"]
     res = exec_engine.run_round_blocks(

@@ -211,6 +211,16 @@ def plan_payload_pspecs(axis: str) -> tuple:
     return (P(axis), P(None, axis))
 
 
+def block_payload_pspec(axis: str) -> P:
+    """Spec for the block-mode comm-plan payload
+    (``repro.topo.BlockPlanSchedule`` round slices): the (K, K) round W
+    shards its ROW axis over the node mesh axis, so each device reads its
+    own (K/M, K) coefficient rows — the per-node weights it applies to the
+    ppermute-assembled (K/M, ...) block payloads — and no device ever
+    materializes another block's rows."""
+    return P(axis)
+
+
 def cola_recorder_pspecs(axis: str, rec_state: Any) -> Any:
     """Specs for a recorder's per-run state (``Recorder.init_spec``): every
     array with a leading node dimension — the ``sigma_k`` spectral-norm

@@ -460,11 +460,20 @@ def main() -> None:
     ap.add_argument("--cola-k", type=int, default=16,
                     help="--plan: node count for the topology-program "
                          "section (the gossip graph compiled to ppermutes)")
+    ap.add_argument("--cola-m", type=int, default=None,
+                    help="--plan: ALSO render each topology's block plan "
+                         "for K nodes quotiented onto M < K devices "
+                         "(block-level colors, per-link block bytes, "
+                         "intra- vs inter-block edge split)")
     ap.add_argument("--topo", default="ring,torus2d,expander,complete",
                     help="--plan: comma-separated topology names "
                          "(repro.topo.GRAPHS) whose compiled comm plans to "
                          "render; 'none' skips the section")
     args = ap.parse_args()
+    if args.cola_m is not None and (
+            args.cola_m < 1 or args.cola_k % args.cola_m != 0):
+        ap.error(f"--cola-m {args.cola_m} must divide --cola-k "
+                 f"{args.cola_k} (contiguous node blocks per device)")
     opts = Opts(attn_bf16=args.attn_bf16, remat_policy=args.remat_policy,
                 microbatches=args.microbatches,
                 act_constraint=args.act_constraint,
@@ -499,7 +508,11 @@ def main() -> None:
         # the ppermute matchings, and per-link / per-device bytes per round
         # — the neighbor-only communication budget the topology-program
         # compiler (repro.topo) buys over the dense all-gather, rendered
-        # for ANY registered graph, not just the circulant band
+        # for ANY registered graph, not just the circulant band. With
+        # --cola-m the K-node graph is additionally quotiented onto M
+        # devices (the block plan run_dist_cola executes on a mesh smaller
+        # than the graph): block-level colors, per-link BLOCK bytes and the
+        # intra- vs inter-block edge split.
         if args.topo != "none":
             from repro.core import topology as cola_topo
             from repro import topo as topo_programs
@@ -510,6 +523,10 @@ def main() -> None:
                 print(f"[topology program] {name.strip()} "
                       f"(graph={graph.name}, beta={beta:.4f})", flush=True)
                 print(plan.render(d=args.cola_d), flush=True)
+                if args.cola_m and args.cola_m < args.cola_k:
+                    bplan = topo_programs.compile_block_plan(graph,
+                                                             args.cola_m)
+                    print(bplan.render(d=args.cola_d), flush=True)
         return
 
     os.makedirs(args.out, exist_ok=True)

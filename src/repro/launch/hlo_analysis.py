@@ -299,11 +299,18 @@ def _spans_pods(rest: str, pod_size: int) -> bool:
 
 
 def analyze(text: str, pod_size: int | None = None) -> dict:
+    """Returns {"flops", "bytes", "collectives", "collective_counts"} —
+    ``collectives`` is per-kind bytes, ``collective_counts`` per-kind
+    executed-op counts (both trip-count-aware; an async start/done pair
+    counts once). Counts are what the topology-plan tests budget: a plan-
+    executed gossip step must issue at most ``num_colors``
+    collective-permutes and zero all-gathers."""
     comps, entry = parse_module(text)
     flops = 0.0
     bytes_ = 0.0
     coll = {k: 0.0 for k in _COLLECTIVES}
     coll["cross_pod"] = 0.0
+    counts = {k: 0.0 for k in _COLLECTIVES}
     visited_stack = []
 
     def walk(name: str, mult: float):
@@ -335,10 +342,13 @@ def analyze(text: str, pod_size: int | None = None) -> dict:
                 flops += mult * _elems_of(op.result_type)  # ~1 flop/elem
             elif base == "convolution":
                 flops += mult * 2 * _elems_of(op.result_type)
-            if base in _COLLECTIVES:
+            if base in _COLLECTIVES and not op.opcode.endswith("-done"):
+                # an async start/done pair is ONE collective: bytes and
+                # counts both attribute to the -start (or the sync op)
                 factor = 2 if base == "all-reduce" else 1
                 nbytes = mult * factor * _bytes_of(op.result_type)
                 coll[base] += nbytes
+                counts[base] += mult
                 if pod_size and _spans_pods(op.rest, pod_size):
                     coll["cross_pod"] += nbytes
             bytes_ += mult * _op_traffic(op, comp, comps)
@@ -347,4 +357,6 @@ def analyze(text: str, pod_size: int | None = None) -> dict:
     if entry:
         walk(entry, 1.0)
     coll["total"] = sum(coll[k] for k in _COLLECTIVES)
-    return {"flops": flops, "bytes": bytes_, "collectives": coll}
+    counts["total"] = sum(counts[k] for k in _COLLECTIVES)
+    return {"flops": flops, "bytes": bytes_, "collectives": coll,
+            "collective_counts": counts}

@@ -6,25 +6,39 @@ churn-reweighted) sparse doubly-stochastic W as a compiled program:
   support graph --edge-color--> matchings --lower--> ppermute perms
                                                   + per-round coefficients
 
-``compile_plan`` builds the static ``CommPlan`` (permutation structure),
-``PlanSchedule`` materializes per-round weights into executor schedule
-arrays, ``lowering`` provides the shard_map bodies ``repro.dist.runtime``
-executes under ``comm="plan"``, and ``graphs.GRAPHS`` registers the
-topology families (paper sweep + expanders/geometric graphs) by name.
+``compile_plan`` builds the static ``CommPlan`` (permutation structure, one
+node per device; Vizing-bounded Misra–Gries/greedy coloring via
+``coloring.edge_coloring``), ``compile_block_plan`` lowers a K-node graph
+onto M < K devices (``BlockPlan``: intra-block edges become local mixing,
+inter-block edges quotient to a device-level graph colored into block-
+payload matchings), ``PlanSchedule`` / ``BlockPlanSchedule`` materialize
+per-round weights into executor schedule arrays, ``lowering`` provides the
+shard_map bodies ``repro.dist.runtime`` executes under ``comm="plan"``, and
+``graphs.GRAPHS`` registers the topology families (paper sweep +
+expanders/geometric graphs) by name.
 """
-from repro.topo.coloring import greedy_edge_coloring, undirected_edges
+from repro.topo.coloring import (check_coloring, edge_coloring,
+                                 greedy_edge_coloring,
+                                 misra_gries_edge_coloring, undirected_edges)
 from repro.topo.graphs import GRAPHS, build, expander, hypercube, \
     random_geometric
-from repro.topo.lowering import plan_mix_step, plan_mix_steps, \
-    plan_neighborhood_stats
-from repro.topo.plan import (CommPlan, PlanSchedule, check_plan_covers,
-                             compile_plan, mix_with_plan, plan_coefficients,
-                             plan_mix_dense)
+from repro.topo.lowering import (block_gather_neighbors, block_mix_step,
+                                 block_mix_steps, block_neighborhood_stats,
+                                 plan_mix_step, plan_mix_steps,
+                                 plan_neighborhood_stats)
+from repro.topo.plan import (BlockPlan, BlockPlanSchedule, CommPlan,
+                             PlanSchedule, block_mix_dense, check_plan_covers,
+                             compile_block_plan, compile_plan,
+                             mix_with_block_plan, mix_with_plan,
+                             plan_coefficients, plan_mix_dense)
 
 __all__ = [
-    "CommPlan", "PlanSchedule", "GRAPHS", "build", "check_plan_covers",
-    "compile_plan", "expander", "greedy_edge_coloring", "hypercube",
-    "mix_with_plan", "plan_coefficients", "plan_mix_dense", "plan_mix_step",
-    "plan_mix_steps", "plan_neighborhood_stats", "random_geometric",
-    "undirected_edges",
+    "BlockPlan", "BlockPlanSchedule", "CommPlan", "PlanSchedule", "GRAPHS",
+    "block_gather_neighbors", "block_mix_dense", "block_mix_step",
+    "block_mix_steps", "block_neighborhood_stats", "build", "check_coloring",
+    "check_plan_covers", "compile_block_plan", "compile_plan",
+    "edge_coloring", "expander", "greedy_edge_coloring", "hypercube",
+    "misra_gries_edge_coloring", "mix_with_block_plan", "mix_with_plan",
+    "plan_coefficients", "plan_mix_dense", "plan_mix_step", "plan_mix_steps",
+    "plan_neighborhood_stats", "random_geometric", "undirected_edges",
 ]

@@ -1,29 +1,41 @@
-"""Lower a ``CommPlan`` to shard_map collectives.
+"""Lower a ``CommPlan`` / ``BlockPlan`` to shard_map collectives.
 
 These are the bodies ``repro.dist.runtime`` traces inside its shard_map
-round/record programs when ``comm="plan"``: one ``lax.ppermute`` per color,
-per-node coefficients fed from the ``PlanSchedule`` entries (sharded over
-the node axis, so each device sees its own scalars). Nothing here gathers a
-(K, ...) stack — the whole point of the compiler is that the lowered HLO
-contains collective-permutes of |v|-sized payloads only, which the dist
-tests assert via ``launch.hlo_analysis``.
+round/record programs when ``comm="plan"``. Two layouts:
 
-Semantics contract (pinned by the property tests against
-``plan.plan_mix_dense`` and ``mixing.dense_mix``): with ``diag``/``coefs``
-from ``plan.plan_coefficients(plan, w)``,
+* **one node per device** (``CommPlan``, K == mesh axis size): one
+  ``lax.ppermute`` per node-level color, per-node coefficients fed from the
+  ``PlanSchedule`` entries (sharded over the node axis, so each device sees
+  its own scalars);
+* **node blocks** (``BlockPlan``, K/M contiguous nodes per device, M < K):
+  one ``lax.ppermute`` of the whole (K/M, d) block payload per BLOCK-level
+  color, assembled into a zero-filled (K, d) neighborhood buffer and
+  contracted against this device's (K/M, K) W-row slice in one dot
+  (``block_mix_step``). Intra-block edges ride the dot as local terms —
+  zero communication.
 
-    plan_mix_step(v_k, ...) == dense_mix(w, v_stack)[k]
+Nothing here gathers a (K, ...) stack collectively — the whole point of
+the compiler is that the lowered HLO contains collective-permutes of block-
+sized payloads only, which the dist tests assert via ``launch.hlo_analysis``.
 
-up to float summation order (self term first, then colors in order — the
-same order as the dense reference, so shard vs stacked agree bitwise on
-matching backends).
+Semantics contracts (pinned by the property/parity tests):
+
+* ``plan_mix_step(v_k, ...) == dense_mix(w, v_stack)[k]`` up to float
+  summation order (self term first, then colors in order, matching
+  ``plan.plan_mix_dense``);
+* ``block_mix_step(v_block, ...) == dense_mix(w, v_stack)[block]``
+  BITWISE — the buffer dot runs the same length-K contraction as the
+  simulator's (K, K) @ (K, d) matmul, with exact zeros where no exchange
+  happened (and where W is zero anyway). This is what makes
+  ``run_dist_cola(comm="plan")`` on 1/2/4 devices bit-identical to
+  ``run_cola``.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 from jax import lax
 
-from repro.topo.plan import CommPlan
+from repro.topo.plan import BlockPlan, CommPlan
 
 
 def plan_mix_step(v_local, axis_name: str, plan: CommPlan, diag, coefs):
@@ -59,6 +71,75 @@ def plan_mix_steps(v_local, axis_name: str, plan: CommPlan, diag, coefs,
     for _ in range(steps):
         out = plan_mix_step(out, axis_name, plan, diag, coefs)
     return out
+
+
+def block_gather_neighbors(x_block, axis_name: str, plan: BlockPlan):
+    """Assemble the (K, width) node stack this device can SEE: its own
+    (K/M, ...) block plus one ppermuted block per block-level color, written
+    at the partner block's node rows; blocks of never-exchanged devices stay
+    zero. One ppermute per color — the only collectives of the block path
+    (no all-gather anywhere), shared by the mixing step and the
+    certificate's Eq.-10 neighborhood exchange.
+    """
+    ln = plan.local_nodes
+    flat = x_block.reshape(ln, -1)
+    i = lax.axis_index(axis_name)
+    partners = jnp.asarray(plan.block.partner_arrays())     # (C, M) static
+    buf = jnp.zeros((plan.num_nodes, flat.shape[1]), flat.dtype)
+    buf = lax.dynamic_update_slice_in_dim(buf, flat, i * ln, 0)
+    for c, perm in enumerate(plan.block.perms):
+        recv = lax.ppermute(flat, axis_name, list(perm))
+        src = partners[c, i]
+        # unmatched devices receive ppermute zero-fill and src == i: write
+        # the own block back instead of clobbering it with zeros
+        buf = lax.dynamic_update_slice_in_dim(
+            buf, jnp.where(src != i, recv, flat), src * ln, 0)
+    return buf
+
+
+def block_mix_step(v_block, axis_name: str, plan: BlockPlan, w_rows):
+    """One gossip step for THIS device's (K/M, ...) node block.
+
+    Args:
+      v_block: the device's node block, leading dim K/M.
+      w_rows: (K/M, K) — this device's rows of the round's W (the
+        node-sharded ``plan_w`` slice from ``BlockPlanSchedule``). Entries
+        addressing nodes outside the assembled neighborhood are zero by the
+        coverage contract, so the dot equals the dense (K, K) mix bitwise.
+    """
+    flat = v_block.reshape(v_block.shape[0], -1)
+    buf = block_gather_neighbors(flat, axis_name, plan)
+    out = w_rows.astype(flat.dtype) @ buf
+    return out.reshape(v_block.shape)
+
+
+def block_mix_steps(v_block, axis_name: str, plan: BlockPlan, w_rows,
+                    steps: int):
+    """B consecutive block-mode gossip steps (App. E.2), sequential on the
+    wire like ``plan_mix_steps``: B * num_colors block ppermutes."""
+    out = v_block
+    for _ in range(steps):
+        out = block_mix_step(out, axis_name, plan, w_rows)
+    return out
+
+
+def block_neighborhood_stats(g_block, axis_name: str, plan: BlockPlan,
+                             mask_rows):
+    """(masked neighbor sums, neighborhood sizes) for the Prop.-1
+    certificate in block mode: exchange this device's (K/M, d) local
+    gradients over the block-level colors and mask-select per node.
+
+    ``mask_rows`` is the device's (K/M, K) slice of the self-inclusive 0/1
+    neighborhood mask (static graph, or the churn round's reweighted-support
+    rows from the certificate schedule). Masked-out buffer rows are exact
+    zeros, so the result equals the stacked ``duality.neighborhood_mean``
+    numerator/denominator bitwise. O(num_colors * (K/M) * d) bytes per
+    device; no stack gathers.
+    """
+    mask_rows = jnp.asarray(mask_rows)
+    buf = block_gather_neighbors(g_block, axis_name, plan)   # (K, d)
+    sel = jnp.where(mask_rows[:, :, None] > 0, buf[None, :, :], 0.0)
+    return jnp.sum(sel, axis=1), jnp.sum(mask_rows, axis=1)  # (ln, d), (ln,)
 
 
 def plan_neighborhood_stats(g_local, axis_name: str, plan: CommPlan,

@@ -23,6 +23,23 @@ masks; ``plan_mix_dense`` is the mesh-free reference executor used as the
 oracle against ``mixing.dense_mix`` in the property tests; the byte
 accounting below is what ``launch.dryrun --plan`` renders and what the HLO
 assertions in the dist tests budget against.
+
+**Block mode** (``compile_block_plan``): a graph over K paper-nodes also
+lowers onto M < K devices (K/M contiguous nodes per device, the runtime's
+node-block layout). The node graph is quotiented by the block assignment:
+intra-block edges become local (zero-communication) mixing terms, and the
+inter-block edges project to a *block-level* multigraph over the M devices
+whose parallel edges collapse — one exchange of the whole (K/M, d) block
+payload serves every node-pair between two devices. That collapsed device
+graph is edge-colored (Misra–Gries, <= Delta_block + 1) so each color is a
+matching between devices lowering to one ``lax.ppermute`` of the block
+payload. Per-node coefficients are each device's (K/M, K) row slice of the
+round's W (``BlockPlanSchedule``), applied as one masked-neighborhood dot
+— which is what makes block execution bitwise-equal to the simulator's
+dense (K, K) @ (K, d) mix (same contraction, zeros where no exchange
+happened and W is zero anyway). The colors-per-step count drops from
+O(Delta_node) to O(Delta_block) <= M, the scale lever that runs paper
+K=32 sweeps on a 4-device CI mesh.
 """
 from __future__ import annotations
 
@@ -76,6 +93,12 @@ class CommPlan:
                 s[i, j] = s[j, i] = True
         return s
 
+    def coverage(self) -> np.ndarray:
+        """(K, K) bool: the off-diagonal W entries this plan can EXECUTE —
+        for a per-node plan, exactly its support (every weight needs a
+        permutation to ride)."""
+        return self.support()
+
     def partner_arrays(self) -> np.ndarray:
         """(C, K) int32 partner table (self-index where unmatched)."""
         return np.asarray(self.partners, dtype=np.int32).reshape(
@@ -125,27 +148,23 @@ class CommPlan:
         return "\n".join(lines)
 
 
-def compile_plan(support) -> CommPlan:
-    """Compile a support graph into a ``CommPlan``.
-
-    Args:
-      support: a ``core.topology.Topology``, or any (K, K) matrix whose
-        off-diagonal nonzero pattern is the exchange graph (a mixing matrix
-        works as-is; the diagonal is ignored — self-weights never move
-        bytes).
-    """
+def _support_adjacency(support) -> np.ndarray:
+    """(K, K) adjacency from a Topology or any square matrix's pattern."""
     if isinstance(support, topo.Topology):
         adj = support.adjacency
     else:
         adj = np.asarray(support)
     k = adj.shape[0]
-    if adj.shape != (k, k):
+    if adj.ndim != 2 or adj.shape != (k, k):
         raise ValueError(f"support must be square, got {adj.shape}")
-    edges = coloring.undirected_edges(adj)
-    classes = coloring.greedy_edge_coloring(edges, k)
+    return adj
+
+
+def _plan_from_classes(classes, k: int, edges) -> CommPlan:
+    """Lower validated color classes to ppermute perms + partner tables."""
+    coloring.check_coloring(classes, edges, k)
     perms, partners = [], []
     for cls in classes:
-        coloring.check_matching(cls, k)
         perm = []
         partner = list(range(k))
         for i, j in cls:
@@ -159,6 +178,179 @@ def compile_plan(support) -> CommPlan:
                     perms=tuple(perms), partners=tuple(partners))
 
 
+def compile_plan(support, *, method: str = "auto") -> CommPlan:
+    """Compile a support graph into a ``CommPlan`` (one node per device).
+
+    Args:
+      support: a ``core.topology.Topology``, or any (K, K) matrix whose
+        off-diagonal nonzero pattern is the exchange graph (a mixing matrix
+        works as-is; the diagonal is ignored — self-weights never move
+        bytes).
+      method: coloring pass (``coloring.edge_coloring``): "auto" never
+        exceeds the Vizing bound Delta + 1; "mg" / "greedy" force one pass.
+    """
+    adj = _support_adjacency(support)
+    k = adj.shape[0]
+    edges = coloring.undirected_edges(adj)
+    classes = coloring.edge_coloring(edges, k, method=method)
+    return _plan_from_classes(classes, k, edges)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    """A ``CommPlan`` over K paper-nodes lowered onto M < K devices.
+
+    Nodes map to devices contiguously (node k lives on device k // (K/M),
+    the runtime's node-block layout). The quotient of the node graph by
+    that assignment splits the edges:
+
+    * ``intra_edges`` — both endpoints on one device: local mixing terms,
+      zero communication;
+    * ``inter_edges`` — endpoints on different devices: projected onto the
+      block-level multigraph over the M devices, whose parallel edges
+      collapse (one (K/M, d) block exchange serves every node-pair between
+      the two devices). The collapsed device graph's edge coloring lives in
+      ``block`` — a ``CommPlan`` whose "nodes" are the M devices, each
+      color one device-matching ppermute of the block payload.
+    """
+
+    num_nodes: int            # K paper-nodes
+    num_devices: int          # M mesh devices
+    block: CommPlan           # device-level plan (block.num_nodes == M)
+    intra_edges: Tuple[Edge, ...]  # node-level, both ends on one device
+    inter_edges: Tuple[Edge, ...]  # node-level, ends on distinct devices
+
+    @property
+    def local_nodes(self) -> int:
+        return self.num_nodes // self.num_devices
+
+    @property
+    def num_colors(self) -> int:
+        """Block-level colors = ppermutes per gossip step."""
+        return self.block.num_colors
+
+    @property
+    def num_edges(self) -> int:
+        """Node-level edge count (intra + inter)."""
+        return len(self.intra_edges) + len(self.inter_edges)
+
+    def support(self) -> np.ndarray:
+        """(K, K) bool: the NODE-level exchange pattern this plan covers
+        (same contract as ``CommPlan.support`` — ``check_plan_covers``
+        consumes either)."""
+        s = np.zeros((self.num_nodes, self.num_nodes), dtype=bool)
+        for i, j in self.intra_edges + self.inter_edges:
+            s[i, j] = s[j, i] = True
+        return s
+
+    def max_degree(self) -> int:
+        return int(self.support().sum(axis=1).max(initial=0))
+
+    def coverage(self) -> np.ndarray:
+        """(K, K) bool: the off-diagonal W entries this plan can EXECUTE.
+
+        Wider than ``support()``: EVERY same-device node pair is covered —
+        the device's whole block sits in the assembled buffer, so an
+        intra-block weight between nodes that were never graph-adjacent
+        still computes exactly — plus every node pair whose blocks exchange
+        under some color (one block ppermute delivers the full block, not
+        just the compiled edges' rows)."""
+        k, ln = self.num_nodes, self.local_nodes
+        cov = np.zeros((k, k), dtype=bool)
+        blocks = [np.arange(b * ln, (b + 1) * ln) for b in
+                  range(self.num_devices)]
+        for b in range(self.num_devices):
+            cov[np.ix_(blocks[b], blocks[b])] = True
+        for cls in self.block.colors:
+            for u, v in cls:
+                cov[np.ix_(blocks[u], blocks[v])] = True
+                cov[np.ix_(blocks[v], blocks[u])] = True
+        np.fill_diagonal(cov, False)
+        return cov
+
+    def device_of(self, node: int) -> int:
+        return node // self.local_nodes
+
+    def cache_token(self):
+        return ("BlockPlan", self.num_nodes, self.num_devices,
+                self.block.cache_token(), self.intra_edges, self.inter_edges)
+
+    # -- byte accounting: per-LINK now means per block-level link -----------
+
+    def bytes_per_device_per_step(self, d: int, itemsize: int = 4) -> int:
+        """Worst-case ppermute payload per device per gossip step: one
+        (K/M, d) block per block-level color."""
+        return self.num_colors * self.local_nodes * d * itemsize
+
+    def bytes_per_link_per_step(self, d: int, itemsize: int = 4) -> int:
+        """Bytes crossing one block-level (device-pair) link, both
+        directions — covers ALL node-edges between the two blocks."""
+        return 2 * self.local_nodes * d * itemsize
+
+    def total_bytes_per_step(self, d: int, itemsize: int = 4) -> int:
+        return self.block.num_edges * self.bytes_per_link_per_step(d,
+                                                                   itemsize)
+
+    def render(self, d: int | None = None, itemsize: int = 4,
+               max_edges: int = 8) -> str:
+        """Human-readable block plan (the ``dryrun --plan --topo`` section
+        when the mesh is smaller than the graph)."""
+        ln = self.local_nodes
+        lines = [f"[block plan] K={self.num_nodes} nodes on "
+                 f"M={self.num_devices} devices ({ln} nodes/device)  "
+                 f"edges: intra={len(self.intra_edges)} "
+                 f"inter={len(self.inter_edges)} "
+                 f"(collapsed to {self.block.num_edges} device link(s))  "
+                 f"colors={self.num_colors}"]
+        for c, cls in enumerate(self.block.colors):
+            shown = ", ".join(f"dev{i}<->dev{j}" for i, j in cls[:max_edges])
+            more = f", ... +{len(cls) - max_edges}" if len(cls) > max_edges \
+                else ""
+            lines.append(f"  color {c}: {len(cls)} link(s)  {shown}{more}")
+        if d is not None:
+            lines.append(
+                f"  bytes/round (1 gossip step, d={d}, itemsize={itemsize}): "
+                f"per-device<={self.bytes_per_device_per_step(d, itemsize):,} "
+                f"per-link={self.bytes_per_link_per_step(d, itemsize):,} "
+                f"total={self.total_bytes_per_step(d, itemsize):,}  "
+                f"(dense all-gather per-device="
+                f"{self.num_nodes * d * itemsize:,})")
+        return "\n".join(lines)
+
+
+def compile_block_plan(support, num_devices: int, *,
+                       method: str = "auto") -> BlockPlan:
+    """Quotient a K-node support graph onto M devices and color the result.
+
+    Args:
+      support: as ``compile_plan`` (Topology or (K, K) pattern).
+      num_devices: M; K % M == 0, K/M contiguous nodes per device.
+      method: coloring pass for the collapsed device graph (see
+        ``coloring.edge_coloring``; "auto" <= Delta_block + 1).
+    """
+    adj = _support_adjacency(support)
+    k = adj.shape[0]
+    if num_devices < 1 or k % num_devices != 0:
+        raise ValueError(f"K={k} nodes must divide over M={num_devices} "
+                         "devices (contiguous node blocks)")
+    ln = k // num_devices
+    intra, inter = [], []
+    block_adj = np.zeros((num_devices, num_devices), dtype=bool)
+    for i, j in coloring.undirected_edges(adj):
+        bi, bj = i // ln, j // ln
+        if bi == bj:
+            intra.append((i, j))
+        else:
+            inter.append((i, j))
+            block_adj[bi, bj] = block_adj[bj, bi] = True
+    block_edges = coloring.undirected_edges(block_adj)
+    classes = coloring.edge_coloring(block_edges, num_devices, method=method)
+    return BlockPlan(num_nodes=k, num_devices=num_devices,
+                     block=_plan_from_classes(classes, num_devices,
+                                              block_edges),
+                     intra_edges=tuple(intra), inter_edges=tuple(inter))
+
+
 def check_plan_covers(plan: CommPlan, w: np.ndarray,
                       atol: float = 0.0) -> None:
     """Raise ValueError if ``w`` has off-diagonal mass outside the plan.
@@ -167,7 +359,11 @@ def check_plan_covers(plan: CommPlan, w: np.ndarray,
     reproduces ``dense_mix(w, .)`` exactly iff every nonzero off-diagonal
     W_ij rides some color's permutation. Churn-reweighted matrices over the
     compiled graph always pass (reweighting only *removes* edges); a
-    w_override with extra edges must recompile.
+    w_override with extra edges must recompile. Accepts a ``CommPlan`` or a
+    ``BlockPlan`` — both expose ``coverage()``, the executable pattern this
+    checks (for a block plan that is wider than the compiled graph edges:
+    intra-block entries ride the local mixing term and any pair of
+    exchanging blocks rides the full block payload).
     """
     w = np.asarray(w)
     if w.shape != (plan.num_nodes, plan.num_nodes):
@@ -175,7 +371,7 @@ def check_plan_covers(plan: CommPlan, w: np.ndarray,
                          f"K={plan.num_nodes}")
     off = np.abs(w.copy())
     np.fill_diagonal(off, 0.0)
-    uncovered = off * ~plan.support()
+    uncovered = off * ~plan.coverage()
     if uncovered.max(initial=0.0) > atol:
         i, j = np.unravel_index(np.argmax(uncovered), uncovered.shape)
         raise ValueError(
@@ -277,3 +473,89 @@ def mix_with_plan(plan: CommPlan, w, v_stack):
     """Convenience: one gossip step of ``w`` through the compiled plan."""
     diag, coefs = plan_coefficients(plan, w)
     return plan_mix_dense(plan, diag, coefs, v_stack)
+
+
+# ---------------------------------------------------------------------------
+# block mode: K nodes on M devices
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlanSchedule:
+    """Per-round mixing matrices for block-mode plan execution.
+
+    Block mode's per-node coefficients ARE each device's (K/M, K) row slice
+    of the round's W — the coefficient mask that weights the device's
+    assembled neighborhood buffer in one dot (``lowering.block_mix_step``).
+    ``w`` is the (T, K, K) round stack the dist runtime shards row-wise
+    over the node axis per round; coverage against the compiled plan is
+    validated here (per round, or once for a ``static`` stack stored as
+    broadcast views), so a round whose W grew edges outside the compiled
+    support fails loudly instead of silently dropping weight mass.
+    """
+
+    w: np.ndarray  # (T, K, K)
+
+    @classmethod
+    def from_w_stack(cls, plan: BlockPlan, w_stack, *,
+                     static: bool = False) -> "BlockPlanSchedule":
+        w_stack = np.asarray(w_stack)
+        t = w_stack.shape[0]
+        if static or t == 0:
+            w0 = w_stack[0] if t else np.eye(plan.num_nodes,
+                                             dtype=w_stack.dtype)
+            if t and not (w_stack == w0).all():
+                raise ValueError(
+                    "BlockPlanSchedule.from_w_stack(static=True) requires a "
+                    "round-invariant W stack — this one varies; drop "
+                    "static= to validate per-round coverage")
+            check_plan_covers(plan, w0)
+            return cls(w=np.broadcast_to(w0, (t,) + w0.shape))
+        for t_i in range(t):
+            check_plan_covers(plan, w_stack[t_i])
+        return cls(w=w_stack)
+
+    def entries(self) -> dict:
+        """The executor schedule entry the dist runtime splices in (sharded
+        ``P(axis)`` on the row dimension of each round's slice)."""
+        return {"plan_w": self.w}
+
+
+def block_mix_dense(plan: BlockPlan, w, v_stack, *, check: bool = True):
+    """Mesh-free reference executor for block mode: per device, assemble
+    the (K, d) neighborhood buffer (own block + one block per block-level
+    color; never-exchanged blocks stay zero) and apply the device's (K/M, K)
+    W rows in ONE dot.
+
+    Because every nonzero W entry lands on an assembled row (coverage
+    checked) and assembled-but-unweighted rows multiply exact zeros, each
+    device's dot runs the same contraction as the dense (K, K) @ (K, d)
+    matmul — ``mixing.dense_mix`` BITWISE, which is the parity contract the
+    distributed block lowering (``lowering.block_mix_step``) is pinned to.
+    """
+    import jax.numpy as jnp
+
+    w = np.asarray(w)
+    if check:
+        check_plan_covers(plan, w)
+    k, m, ln = plan.num_nodes, plan.num_devices, plan.local_nodes
+    v_stack = jnp.asarray(v_stack)
+    flat = v_stack.reshape(k, -1)
+    partners = plan.block.partner_arrays()  # (C, M)
+    outs = []
+    for dev in range(m):
+        buf = jnp.zeros_like(flat)
+        buf = buf.at[dev * ln:(dev + 1) * ln].set(
+            flat[dev * ln:(dev + 1) * ln])
+        for c in range(plan.num_colors):
+            src = int(partners[c, dev])
+            if src != dev:
+                buf = buf.at[src * ln:(src + 1) * ln].set(
+                    flat[src * ln:(src + 1) * ln])
+        w_rows = jnp.asarray(w[dev * ln:(dev + 1) * ln], dtype=flat.dtype)
+        outs.append(w_rows @ buf)
+    return jnp.concatenate(outs, axis=0).reshape(v_stack.shape)
+
+
+def mix_with_block_plan(plan: BlockPlan, w, v_stack):
+    """Convenience: one gossip step of ``w`` through the block plan."""
+    return block_mix_dense(plan, w, v_stack)

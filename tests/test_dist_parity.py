@@ -1,4 +1,4 @@
-"""shard_map runtime == single-host simulator on a 1-device mesh, bit for bit.
+"""shard_map runtime == single-host simulator, bit for bit.
 
 A 1-device mesh runs the real ``repro.dist.runtime`` code — shard_map,
 collectives, schedule plumbing — with every collective degenerating to the
@@ -6,7 +6,22 @@ identity, so the distributed driver must reproduce ``run_cola`` EXACTLY
 (state bitwise; metric rows to fusion rounding, same contract as the
 loop-vs-block executor tests). Covers the full elasticity surface: churn
 (freeze + reset-on-leave) and heterogeneous CD budgets, over 200+ rounds.
+
+The block-mode suite extends the bitwise contract to REAL multi-device
+meshes: ``comm="plan"`` with K=8 paper-nodes on M in {1, 2, 4} devices
+(K/M node blocks, block-level colors) must also match the simulator bit
+for bit, static AND under churn, including certificate-driven ``eps=``
+stopping — because each device's assembled-buffer dot runs the simulator's
+own dense contraction (``repro.topo.lowering.block_mix_step``). The
+in-process tests skip the M's the suite's device count cannot carry and
+run fully in the CI dist-4dev job; a slow subprocess test pins the 2- and
+4-device acceptance scenario from the default 1-device suite.
 """
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -110,21 +125,19 @@ def test_dist_gossip_steps_and_gram_modes(ridge, mesh1):
         _assert_parity(sim, dist, repr(cfg))
 
 
-def test_ring_comm_layout_and_churn_dispatch(ridge, mesh1):
-    """comm='ring' under churn no longer raises 'needs a circulant W' — it
-    dispatches into the compiled topology-program path (repro.topo), which
-    still requires one node per device; a too-small mesh is the only
-    remaining error."""
+def test_ring_and_plan_dispatch_to_block_on_small_mesh(ridge, mesh1):
+    """The historical 'one node per device' ValueErrors are retired: on a
+    mesh smaller than K, comm='ring' and comm='plan' (with or without
+    churn) dispatch into the BLOCK plan path and reproduce the simulator
+    bitwise."""
     cfg = ColaConfig(kappa=1.0)
-    with pytest.raises(ValueError, match="one node per device"):
-        # churn -> plan path; 8 nodes on 1 device cannot ppermute
-        run_dist_cola(ridge, topo.ring(K), cfg, mesh1, 4, comm="ring",
-                      active_schedule=_drop)
-    with pytest.raises(ValueError, match="one node per device"):
-        # 8 nodes on 1 device: ring comm needs K == mesh axis size
-        run_dist_cola(ridge, topo.ring(K), cfg, mesh1, 4, comm="ring")
-    with pytest.raises(ValueError, match="one node per device"):
-        run_dist_cola(ridge, topo.ring(K), cfg, mesh1, 4, comm="plan")
+    for kwargs in ({}, dict(active_schedule=_drop)):
+        sim = run_cola(ridge, topo.ring(K), cfg, 8, record_every=4, seed=3,
+                       **kwargs)
+        for comm in ("ring", "plan"):
+            dist = run_dist_cola(ridge, topo.ring(K), cfg, mesh1, 8,
+                                 comm=comm, record_every=4, seed=3, **kwargs)
+            _assert_parity(sim, dist, f"{comm}:{sorted(kwargs)}")
 
 
 def test_dist_zero_rounds(ridge, mesh1):
@@ -132,3 +145,122 @@ def test_dist_zero_rounds(ridge, mesh1):
                         comm="dense")
     assert res.history["round"] == []
     assert float(jnp.abs(res.state.x_parts).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# block-mode parity: K=8 paper-nodes on M in {1, 2, 4} devices, bitwise
+# ---------------------------------------------------------------------------
+
+def _block_mesh(m: int):
+    if jax.device_count() < m:
+        pytest.skip(f"block-mode mesh needs {m} devices "
+                    f"(suite has {jax.device_count()}; CI dist-4dev runs it)")
+    return jax.make_mesh((m,), ("data",))
+
+
+@pytest.fixture(scope="module")
+def lasso():
+    x, y, _ = synthetic.regression(150, 48, seed=2, sparsity_solution=0.2)
+    return problems.lasso(jnp.asarray(x), jnp.asarray(y), 5e-2, box=5.0)
+
+
+@pytest.mark.parametrize("m", [1, 2, 4])
+@pytest.mark.parametrize("case", ["static", "churn", "budgets"])
+def test_block_plan_bitwise_matches_sim(ridge, m, case):
+    """run_dist_cola(comm='plan') with K=8 on M devices: the torus (a
+    genuinely non-circulant graph) quotients into K/M node blocks and the
+    run matches run_cola bit for bit — static, under churn, and with
+    heterogeneous CD budgets."""
+    mesh = _block_mesh(m)
+    kwargs = {"static": {}, "churn": dict(active_schedule=_drop),
+              "budgets": dict(budget_schedule=_budgets)}[case]
+    graph = topo.torus_2d(2, K // 2)
+    cfg = ColaConfig(kappa=1.0)
+    sim = run_cola(ridge, graph, cfg, 25, record_every=6, seed=3, **kwargs)
+    dist = run_dist_cola(ridge, graph, cfg, mesh, 25, comm="plan",
+                         record_every=6, seed=3, block_size=16, **kwargs)
+    _assert_parity(sim, dist, f"block m={m} {case}")
+
+
+@pytest.mark.parametrize("m", [2, 4])
+def test_block_plan_certificate_stop_bitwise(lasso, m):
+    """Certificate-driven eps= stopping through the BLOCK plan path: stop
+    round and certificate rows equal the simulator's, stopped state bitwise
+    equal to the truncated non-stopping run."""
+    mesh = _block_mesh(m)
+    graph = topo.torus_2d(2, K // 2)
+    cfg = ColaConfig(kappa=8.0)
+    kw = dict(record_every=20, recorder="certificate", eps=0.1)
+    sim = run_cola(lasso, graph, cfg, 400, **kw)
+    dist = run_dist_cola(lasso, graph, cfg, mesh, 400, comm="plan", **kw)
+    assert dist.history["stop_round"] == sim.history["stop_round"]
+    assert dist.history["stop_round"] is not None
+    for name in ("local_gap_max", "grad_disagreement_max", "cond9_nodes",
+                 "cond10_nodes", "certified"):
+        np.testing.assert_allclose(sim.history[name], dist.history[name],
+                                   rtol=1e-5, atol=1e-6, err_msg=name)
+    t_stop = dist.history["stop_round"]
+    trunc = run_dist_cola(lasso, graph, cfg, mesh, t_stop + 1, comm="plan",
+                          record_every=20)
+    np.testing.assert_array_equal(np.asarray(dist.state.x_parts),
+                                  np.asarray(trunc.state.x_parts))
+    np.testing.assert_array_equal(np.asarray(dist.state.v_stack),
+                                  np.asarray(trunc.state.v_stack))
+
+
+# --- subprocess pin: the 2-/4-device acceptance scenario from the default
+# 1-device suite (the CI dist-4dev job runs the in-process suite above) ----
+
+BLOCK_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.data import synthetic
+    from repro.core import problems, topology as topo
+    from repro.core.cola import ColaConfig, run_cola
+    from repro.dist.runtime import run_dist_cola
+
+    assert jax.device_count() == 4
+    K = 8
+    graph = topo.torus_2d(2, 4)
+    x, y, _ = synthetic.regression(150, 48, seed=4)
+    prob = problems.ridge_primal(jnp.asarray(x), jnp.asarray(y), 1e-2)
+    cfg = ColaConfig(kappa=1.0)
+
+    def churn(t, rng):
+        return rng.random(K) < 0.7
+
+    for kwargs in ({}, dict(active_schedule=churn)):
+        sim = run_cola(prob, graph, cfg, 25, record_every=6, seed=3,
+                       **kwargs)
+        for m in (2, 4):
+            mesh = jax.make_mesh((m,), ("data",))
+            dist = run_dist_cola(prob, graph, cfg, mesh, 25, comm="plan",
+                                 record_every=6, seed=3, **kwargs)
+            np.testing.assert_array_equal(np.asarray(sim.state.x_parts),
+                                          np.asarray(dist.state.x_parts))
+            np.testing.assert_array_equal(np.asarray(sim.state.v_stack),
+                                          np.asarray(dist.state.v_stack))
+
+    xl, yl, _ = synthetic.regression(150, 48, seed=2, sparsity_solution=0.2)
+    lasso = problems.lasso(jnp.asarray(xl), jnp.asarray(yl), 5e-2, box=5.0)
+    mesh = jax.make_mesh((4,), ("data",))
+    stop = run_dist_cola(lasso, graph, ColaConfig(kappa=8.0), mesh, 400,
+                         comm="plan", record_every=20,
+                         recorder="certificate", eps=0.1)
+    sim = run_cola(lasso, graph, ColaConfig(kappa=8.0), 400,
+                   record_every=20, recorder="certificate", eps=0.1)
+    assert stop.history["stop_round"] == sim.history["stop_round"]
+    assert stop.history["stop_round"] is not None
+    print("BLOCK_PARITY_OK")
+""")
+
+
+@pytest.mark.slow
+def test_block_plan_4dev_subprocess():
+    env = dict(os.environ, PYTHONPATH="src:.")
+    out = subprocess.run([sys.executable, "-c", BLOCK_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert "BLOCK_PARITY_OK" in out.stdout, out.stdout + "\n" + out.stderr

@@ -12,9 +12,15 @@ dispatch into it) must, on a real node mesh:
 * keep certificate-driven ``eps=`` stopping bitwise-consistent with the
   truncated run.
 
-The in-process tests skip on a single-device suite (one node per device is
-the plan-path contract) and run in the CI 4-virtual-device job; the
-subprocess test pins the same coverage from the default 1-device suite.
+Block mode extends the HLO contract to meshes smaller than the graph:
+K paper-nodes on M < K devices lower to at most Delta_block + 1
+collective-permutes of (K/M, d) block payloads per gossip step — asserted
+on a complete graph with ODD K (the regime where greedy coloring exceeds
+the Vizing bound at the node level) — and still zero all-gathers.
+
+The in-process tests skip on a single-device suite (they need a real
+multi-device mesh) and run in the CI 4-virtual-device job; the subprocess
+test pins the same coverage from the default 1-device suite.
 """
 import os
 import subprocess
@@ -55,7 +61,8 @@ def lasso_prob():
 
 needs_mesh = pytest.mark.skipif(
     jax.device_count() < 4,
-    reason="plan execution places one node per device")
+    reason="per-node plan assertions want a K-device mesh (K == 4 here); "
+           "smaller meshes exercise the block path instead")
 
 
 @needs_mesh
@@ -242,6 +249,76 @@ def _assert_plan_round_neighbor_only():
     assert coll_d["all-gather"] >= k * prob.d * itemsize / k, coll_d
 
 
+@pytest.mark.skipif(jax.device_count() < 3,
+                    reason="block HLO assertion lowers for a 3-device mesh")
+def test_block_plan_round_hlo_is_neighbor_only():
+    _assert_block_round_neighbor_only()
+
+
+def _assert_block_round_neighbor_only():
+    """The block-mode HLO budget, on the acceptance scenario: a complete
+    graph with ODD K (K=9 — where greedy node-level coloring exceeds the
+    Vizing bound) quotiented onto M=3 devices. One gossip step must issue
+    at most Delta_block + 1 collective-permutes (the block-level color
+    count — NOT the 9 the per-node coloring would take), move at most
+    colors * (K/M) * d * itemsize payload bytes per device, and contain
+    zero all-gathers/all-reduces."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import mixing
+    from repro.core.cola import _round_body, build_env, init_state
+    from repro.core.partition import make_partition
+    from repro.dist import runtime as rt
+    from repro.dist.sharding import (block_payload_pspec, cola_env_pspecs,
+                                     cola_state_pspecs)
+    from repro.launch import hlo_analysis
+    from repro import topo as rtopo
+
+    k, m, itemsize = 9, 3, 4
+    x, y, _ = synthetic.regression(153, 48, seed=2, sparsity_solution=0.2)
+    prob = problems.lasso(jnp.asarray(x), jnp.asarray(y), 5e-2, box=5.0)
+    graph = topo.complete(k)
+    part = make_partition(prob.n, k)
+    env = build_env(prob, part)
+    mesh = jax.make_mesh((m,), ("data",))
+    plan = rtopo.compile_block_plan(graph, m)
+    delta_block = int(np.asarray(
+        [row.sum() for row in plan.block.support()]).max())
+    assert plan.num_colors <= delta_block + 1  # Vizing bound on the quotient
+    cfg = ColaConfig(kappa=1.0)
+    mix_fn, grad_mix_fn = rt._dist_mixers("data", k // m, 1, "plan",
+                                          cfg.gossip_steps, plan)
+    body = _round_body(prob, part, cfg, mix_fn=mix_fn,
+                       grad_mix_fn=grad_mix_fn)
+    state_spec, env_spec = cola_state_pspecs("data"), cola_env_pspecs("data")
+    shard_step = mixing.shard_map(
+        lambda st, e, pay, act: body(st, e, pay, act), mesh,
+        in_specs=(state_spec, env_spec, block_payload_pspec("data"),
+                  P("data")),
+        out_specs=state_spec)
+
+    w = topo.metropolis_weights(graph).astype(np.float32)
+    sds = lambda a: jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype)
+    args = (jax.tree.map(sds, init_state(prob, part)),
+            jax.tree.map(sds, env), sds(w), sds(np.ones(k, np.float32)))
+    sh = lambda spec: NamedSharding(mesh, spec)
+    in_sh = (jax.tree.map(lambda _: sh(state_spec), args[0]),
+             jax.tree.map(lambda _: sh(env_spec), args[1]),
+             sh(block_payload_pspec("data")), sh(P("data")))
+    hlo = jax.jit(shard_step, in_shardings=in_sh) \
+        .lower(*args).compile().as_text()
+    rep = hlo_analysis.analyze(hlo)
+    coll, counts = rep["collectives"], rep["collective_counts"]
+    assert coll["all-gather"] == 0, coll
+    assert coll["all-reduce"] == 0, coll
+    assert coll["reduce-scatter"] == 0 and coll["all-to-all"] == 0, coll
+    # the acceptance budget: <= Delta_block + 1 collective-permutes of
+    # (K/M, d) block payloads — 3 on K_9-over-3-devices, not the 9+ the
+    # node-level coloring would cost
+    assert 0 < counts["collective-permute"] <= delta_block + 1, counts
+    assert coll["collective-permute"] <= \
+        plan.num_colors * plan.local_nodes * prob.d * itemsize, coll
+
+
 # --- subprocess pin: the full acceptance scenario from the 1-device suite --
 
 PLAN_SCRIPT = textwrap.dedent("""
@@ -287,6 +364,7 @@ PLAN_SCRIPT = textwrap.dedent("""
                                   np.asarray(trunc.state.x_parts))
     np.testing.assert_array_equal(np.asarray(stop.state.v_stack),
                                   np.asarray(trunc.state.v_stack))
+    tdp._assert_block_round_neighbor_only()
     print("DIST_PLAN_OK")
 """)
 

@@ -1,10 +1,15 @@
 """The topology-program compiler: edge coloring, plan IR, mixing semantics.
 
-Mesh-free: ``plan_mix_dense`` is the reference executor, pinned against
-``mixing.dense_mix`` (the bitwise oracle for arbitrary graphs) for random
-sparse doubly-stochastic W — including churn-reweighted supports — via the
-hypothesis property test. The shard_map lowering itself is covered by
-``tests/test_dist_plan.py`` (4-virtual-device subprocess + CI mesh job).
+Mesh-free: ``plan_mix_dense`` / ``block_mix_dense`` are the reference
+executors, pinned against ``mixing.dense_mix`` (the oracle for arbitrary
+graphs; BITWISE in block mode) for random sparse doubly-stochastic W —
+including churn-reweighted supports — via the hypothesis property tests.
+The coloring wall validates greedy AND Misra–Gries through
+``check_coloring`` (proper + exact partition) and pins the Vizing bound:
+Misra–Gries never exceeds Delta + 1, including the odd-complete-K
+regression where greedy does. The shard_map lowering itself is covered by
+``tests/test_dist_plan.py`` / ``test_dist_parity.py`` (4-virtual-device
+subprocess + CI mesh job).
 """
 import jax.numpy as jnp
 import numpy as np
@@ -36,15 +41,61 @@ def test_greedy_coloring_is_proper_and_bounded(k, p, seed):
     adj = _random_support(k, p, seed)
     edges = coloring.undirected_edges(adj)
     classes = coloring.greedy_edge_coloring(edges, k)
-    # partition: every edge exactly once
-    flat = [e for cls in classes for e in cls]
-    assert sorted(flat) == sorted(edges)
-    # proper: every class is a matching
-    for cls in classes:
-        coloring.check_matching(cls, k)
+    # proper coloring + exact edge partition, via the shared validator
+    coloring.check_coloring(classes, edges, k)
     # greedy bound
     delta = int(adj.sum(axis=1).max())
     assert len(classes) <= max(2 * delta - 1, 1)
+
+
+@given(k=st.integers(3, 24), p=st.floats(0.05, 0.9), seed=st.integers(0, 99))
+@settings(max_examples=40, deadline=None)
+def test_misra_gries_is_proper_and_vizing_bounded(k, p, seed):
+    """The satellite property wall: Misra–Gries is a proper edge coloring
+    with AT MOST Delta + 1 classes on random graphs — the Vizing bound the
+    greedy pass can exceed — and the 'auto' pass inherits the bound."""
+    adj = _random_support(k, p, seed)
+    edges = coloring.undirected_edges(adj)
+    delta = int(adj.sum(axis=1).max())
+    mg = coloring.misra_gries_edge_coloring(edges, k)
+    coloring.check_coloring(mg, edges, k)
+    assert len(mg) <= delta + 1
+    auto = coloring.edge_coloring(edges, k)  # the compile_plan default
+    coloring.check_coloring(auto, edges, k)
+    assert len(auto) <= delta + 1
+
+
+@pytest.mark.parametrize("k", [5, 9, 11, 13])
+def test_odd_complete_regression_greedy_exceeds_vizing(k):
+    """K_n for odd n is the regression motivating Misra–Gries: chi' = n =
+    Delta + 1, greedy lands strictly above it (extra ppermutes per gossip
+    step), Misra–Gries exactly on it — and the default compile path takes
+    the Misra–Gries result."""
+    adj = topo.complete(k).adjacency
+    edges = coloring.undirected_edges(adj)
+    delta = k - 1
+    greedy = coloring.greedy_edge_coloring(edges, k)
+    coloring.check_coloring(greedy, edges, k)
+    assert len(greedy) > delta + 1  # the regression
+    mg = coloring.misra_gries_edge_coloring(edges, k)
+    coloring.check_coloring(mg, edges, k)
+    assert len(mg) == delta + 1  # Vizing-optimal (chi'(K_odd) = n)
+    assert rtopo.compile_plan(adj).num_colors == delta + 1
+
+
+def test_edge_coloring_methods():
+    adj = topo.complete(5).adjacency
+    edges = coloring.undirected_edges(adj)
+    assert coloring.edge_coloring(edges, 5, method="greedy") == \
+        coloring.greedy_edge_coloring(edges, 5)
+    assert coloring.edge_coloring(edges, 5, method="mg") == \
+        coloring.misra_gries_edge_coloring(edges, 5)
+    with pytest.raises(ValueError, match="unknown coloring method"):
+        coloring.edge_coloring(edges, 5, method="rainbow")
+    with pytest.raises(ValueError, match="not a matching"):
+        coloring.check_coloring([[(0, 1), (1, 2)]], [(0, 1), (1, 2)], 3)
+    with pytest.raises(ValueError, match="partition"):
+        coloring.check_coloring([[(0, 1)]], [(0, 1), (1, 2)], 3)
 
 
 def test_coloring_deterministic():
@@ -52,11 +103,17 @@ def test_coloring_deterministic():
     a = coloring.greedy_edge_coloring(coloring.undirected_edges(adj), 12)
     b = coloring.greedy_edge_coloring(coloring.undirected_edges(adj), 12)
     assert a == b
+    mg_a = coloring.misra_gries_edge_coloring(
+        coloring.undirected_edges(adj), 12)
+    mg_b = coloring.misra_gries_edge_coloring(
+        coloring.undirected_edges(adj), 12)
+    assert mg_a == mg_b
     assert rtopo.compile_plan(adj).cache_token() == \
         rtopo.compile_plan(adj).cache_token()
 
 
 def test_ring_colors_to_two_matchings_even_k():
+    # 'auto' keeps greedy's Delta-optimal 2 matchings on the even ring
     plan = rtopo.compile_plan(topo.ring(8))
     assert plan.num_colors == 2
     assert rtopo.compile_plan(topo.ring(7)).num_colors == 3  # odd cycle
@@ -156,6 +213,145 @@ def test_plan_support_roundtrip():
     np.testing.assert_array_equal(plan.support(), graph.adjacency)
     assert plan.max_degree() == 3
     assert plan.num_edges == graph.adjacency.sum() // 2
+
+
+# ---------------------------------------------------------------------------
+# block plans: K nodes quotiented onto M < K devices
+# ---------------------------------------------------------------------------
+
+def test_block_plan_quotient_structure():
+    g = topo.torus_2d(2, 4)  # K=8
+    bp = rtopo.compile_block_plan(g, 4)
+    assert (bp.num_nodes, bp.num_devices, bp.local_nodes) == (8, 4, 2)
+    # node-level support is preserved exactly (intra + inter)
+    np.testing.assert_array_equal(bp.support(), g.adjacency)
+    assert bp.num_edges == g.adjacency.sum() // 2
+    # every intra edge stays inside one block, every inter edge crosses
+    for i, j in bp.intra_edges:
+        assert i // 2 == j // 2
+    for i, j in bp.inter_edges:
+        assert i // 2 != j // 2
+    # the block coloring is a proper coloring of the collapsed device graph
+    blk_edges = [e for cls in bp.block.colors for e in cls]
+    coloring.check_coloring(bp.block.colors, blk_edges, 4)
+    assert bp.num_colors <= 4  # Delta_block + 1 on 4 devices
+
+    # M == 1: everything is intra, zero communication
+    bp1 = rtopo.compile_block_plan(g, 1)
+    assert bp1.num_colors == 0 and not bp1.inter_edges
+    assert bp1.bytes_per_device_per_step(64) == 0
+
+    with pytest.raises(ValueError, match="divide"):
+        rtopo.compile_block_plan(g, 3)
+
+
+def test_block_plan_collapses_parallel_edges():
+    """The quotient multigraph's parallel node-edges ride ONE block
+    exchange: complete K_16 on 4 devices needs only 3 colors (K_4's
+    chromatic index), not 15."""
+    bp = rtopo.compile_block_plan(topo.complete(16), 4)
+    assert len(bp.inter_edges) == 96  # 16*15/2 - 4*(4*3/2)
+    assert bp.block.num_edges == 6    # collapsed: K_4 on the devices
+    assert bp.num_colors == 3         # vs 15 per-node colors
+    assert rtopo.compile_plan(topo.complete(16)).num_colors == 15
+
+
+@given(k=st.integers(2, 16), p=st.floats(0.1, 0.9), seed=st.integers(0, 999),
+       drop=st.floats(0.0, 0.5))
+@settings(max_examples=40, deadline=None)
+def test_block_mix_equals_dense_mix_bitwise(k, p, seed, drop):
+    """The block-mode parity contract: for any random sparse
+    doubly-stochastic W (and any churn reweighting) and any admissible M,
+    block execution == the dense (K, K) matmul BITWISE — each device's
+    assembled-buffer dot runs the simulator's own contraction."""
+    rng = np.random.default_rng(seed)
+    graph = topo.Topology("rand", _random_support(k, p, seed))
+    v = rng.standard_normal((k, 7)).astype(np.float32)
+    w = topo.metropolis_weights(graph)
+    active = rng.random(k) >= drop
+    if not active.any():
+        active[:] = True
+    w_t = topo.reweight_for_active(graph, active)
+    for m in (d for d in (1, 2, 4) if k % d == 0):
+        bp = rtopo.compile_block_plan(graph, m)
+        for w_round in (w, w_t):
+            got = np.asarray(rtopo.mix_with_block_plan(bp, w_round, v))
+            want = np.asarray(mixing.dense_mix(
+                jnp.asarray(w_round, jnp.float32), jnp.asarray(v)))
+            np.testing.assert_array_equal(got, want)
+
+
+def test_block_plan_coverage_validation():
+    """Block coverage is wider than the compiled edges — a whole block
+    payload moves per exchange — and exactly as wide as what the buffer
+    dot executes: intra-block pairs and exchanging-block pairs pass (and
+    compute bitwise against dense_mix), while weight between blocks that
+    never exchange still fails loudly."""
+    bp = rtopo.compile_block_plan(topo.ring(8), 4)  # block graph: 4-cycle
+    v = np.arange(32, dtype=np.float32).reshape(8, 4)
+    # extra edges that stay inside exchanged blocks or within one block:
+    # executable even though they are not compiled graph edges
+    w_extra = np.asarray(topo.metropolis_weights(
+        topo.connected_cycle(8, 2)))   # +-2 offsets: adjacent-block pairs
+    rtopo.check_plan_covers(bp, w_extra)
+    np.testing.assert_array_equal(
+        np.asarray(rtopo.block_mix_dense(bp, w_extra, v)),
+        np.asarray(mixing.dense_mix(jnp.asarray(w_extra, jnp.float32),
+                                    jnp.asarray(v))))
+    # blocks {0,1} and {4,5} never exchange on the 4-cycle block graph:
+    # W[0,4] is genuinely undeliverable and must raise
+    w_bad = np.eye(8)
+    w_bad[0, 4] = w_bad[4, 0] = 0.5
+    with pytest.raises(ValueError, match="outside the compiled plan"):
+        rtopo.check_plan_covers(bp, w_bad)
+    with pytest.raises(ValueError, match="outside the compiled plan"):
+        rtopo.block_mix_dense(bp, w_bad, v)
+    # ... but the same entry is intra-block on a 2-device split: covered
+    rtopo.check_plan_covers(rtopo.compile_block_plan(topo.ring(8), 2), w_bad)
+    # churn subsets stay covered
+    act = np.array([1, 1, 0, 1, 1, 1, 0, 1], dtype=bool)
+    rtopo.block_mix_dense(bp, topo.reweight_for_active(topo.ring(8), act),
+                          np.zeros((8, 4), np.float32))
+
+
+def test_block_plan_schedule_validates_and_broadcasts():
+    g = topo.torus_2d(2, 4)
+    bp = rtopo.compile_block_plan(g, 4)  # block graph: a 4-cycle
+    rng = np.random.default_rng(0)
+    t, k = 5, 8
+    w_stack = np.stack([
+        topo.reweight_for_active(g, rng.random(k) < 0.8)
+        for _ in range(t)]).astype(np.float32)
+    ps = rtopo.BlockPlanSchedule.from_w_stack(bp, w_stack)
+    assert ps.entries()["plan_w"].shape == (t, k, k)
+    # static: broadcast views, validated once
+    static = rtopo.BlockPlanSchedule.from_w_stack(
+        bp, np.broadcast_to(w_stack[0], (t, k, k)), static=True)
+    assert static.w.base is not None
+    with pytest.raises(ValueError, match="round-invariant"):
+        rtopo.BlockPlanSchedule.from_w_stack(bp, w_stack, static=True)
+    # a round with weight between blocks that never exchange fails loudly
+    bad = w_stack.copy()
+    bad[3] = np.eye(k, dtype=np.float32)
+    bad[3, 0, 7] = bad[3, 7, 0] = 0.5  # block 0 <-> block 3: no color
+    with pytest.raises(ValueError, match="outside the compiled plan"):
+        rtopo.BlockPlanSchedule.from_w_stack(bp, bad)
+
+
+def test_block_plan_byte_accounting_and_render():
+    bp = rtopo.compile_block_plan(topo.complete(16), 4)
+    d, item = 64, 4
+    ln = bp.local_nodes
+    assert bp.bytes_per_link_per_step(d, item) == 2 * ln * d * item
+    assert bp.bytes_per_device_per_step(d, item) == \
+        bp.num_colors * ln * d * item
+    assert bp.total_bytes_per_step(d, item) == \
+        bp.block.num_edges * 2 * ln * d * item
+    text = bp.render(d=d, itemsize=item)
+    assert "colors=3" in text and "intra=24" in text and "inter=96" in text
+    assert "dev0<->dev1" in text and "bytes/round" in text
+    assert bp.cache_token() != rtopo.compile_block_plan(
+        topo.complete(16), 2).cache_token()
 
 
 # ---------------------------------------------------------------------------
