@@ -69,6 +69,12 @@ _REC_KEYS = tuple(f"rec_{m}_{r}_e{e}_rounds_per_sec"
 _PLAN_KEYS = ("plan_gossip_rounds_per_sec", "dense_gossip_rounds_per_sec")
 _GATED = ("block_rounds_per_sec", "dist_block_rounds_per_sec") \
     + _REC_KEYS + _PLAN_KEYS
+# robust (trimmed-mean) plan gossip is gated on its SAME-RUN ratio against
+# plain plan gossip (< _ROBUST_MAX_OVERHEAD x), not on an absolute
+# rounds/sec bar — the ratio is machine-drift free, so the key stays out
+# of _GATED and out of the committed-baseline bookkeeping
+_ROBUST_KEY = "robust_gossip_rounds_per_sec"
+_ROBUST_MAX_OVERHEAD = 1.3
 
 
 def _bench_case(runner, rounds, repeats: int = 3):
@@ -157,8 +163,8 @@ _PLAN_BENCH_SCRIPT = textwrap.dedent("""
     cfg = ColaConfig(kappa=1.0)
     mesh = jax.make_mesh((8,), ("data",))
 
-    def bench(comm):
-        runner = lambda: run_dist_cola(prob, graph, cfg, mesh, rounds,
+    def bench(comm, run_cfg=cfg):
+        runner = lambda: run_dist_cola(prob, graph, run_cfg, mesh, rounds,
                                        comm=comm, record_every=rounds - 1)
         runner()  # warmup owns compilation
         best = 0.0
@@ -171,12 +177,18 @@ _PLAN_BENCH_SCRIPT = textwrap.dedent("""
 
     plan_rps, plan_res = bench("plan")
     dense_rps, dense_res = bench("dense")
+    robust_rps, robust_res = bench("plan",
+                                   ColaConfig(kappa=1.0, robust="trim"))
     assert np.allclose(plan_res.history["primal"][-1],
                        dense_res.history["primal"][-1], rtol=1e-5), \\
         "plan gossip diverged from the dense oracle"
+    assert np.allclose(robust_res.history["primal"][-1],
+                       plan_res.history["primal"][-1], rtol=1e-5), \\
+        "robust trim on a clean run diverged from plain plan gossip"
     print("PLANBENCH " + json.dumps(
         {"plan_gossip_rounds_per_sec": round(plan_rps, 2),
-         "dense_gossip_rounds_per_sec": round(dense_rps, 2)}))
+         "dense_gossip_rounds_per_sec": round(dense_rps, 2),
+         "robust_gossip_rounds_per_sec": round(robust_rps, 2)}))
 """)
 
 
@@ -284,6 +296,20 @@ def check_regression(result: dict, smoke: bool, tolerance: float) -> list[str]:
                 f"{drift:.2f}, tolerance {tolerance:.0%})")
         csv_row("round_bench", "gate", key,
                 f"{got:.1f} vs bar {bar:.1f} (committed {base:.1f})")
+    # robust-mixing overhead: same-run ratio against plain plan gossip, so
+    # no committed baseline and no drift correction is involved
+    robust = result.get(_ROBUST_KEY)
+    if not robust:
+        failures.append(f"missing {_ROBUST_KEY} measurement")
+    else:
+        overhead = result["plan_gossip_rounds_per_sec"] / robust
+        csv_row("round_bench", "gate", _ROBUST_KEY,
+                f"{overhead:.2f}x overhead vs plain plan gossip "
+                f"(bar {_ROBUST_MAX_OVERHEAD:.1f}x)")
+        if overhead > _ROBUST_MAX_OVERHEAD:
+            failures.append(
+                f"{_ROBUST_KEY}: robust trim costs {overhead:.2f}x over "
+                f"plain plan gossip (bar {_ROBUST_MAX_OVERHEAD:.1f}x)")
     return failures
 
 

@@ -1,0 +1,30 @@
+"""repro.attack — adversarial attack scenarios as schedule transforms.
+
+Attack scenarios are reusable transforms over the executor's pre-materialized
+``(T, ...)`` schedules (see ``repro.core.executor``): a scenario rewrites or
+adds schedule entries that the round body consumes, so the SAME attack
+definition drives the single-host simulator (``run_cola(attacks=...)``) and
+the shard_map distributed runtime (``run_dist_cola(attacks=...)``) with
+bitwise-identical corruption — and composes freely with churn / budget
+schedules, which are materialized first.
+
+Defenses live in the mixing layer (``ColaConfig(robust=...)`` →
+``repro.core.mixing.robust_neighborhood_mix``); detection lives in the
+certificate layer (``certificate_violated`` via the Lemma-1 consensus
+residual, ``repro.core.duality.consensus_residual``). The threat model:
+attacks corrupt the DATA PLANE (payloads, links, work); the recorder /
+certificate layer is trusted telemetry.
+"""
+from repro.attack.audit import gradient_inversion_report, payload_cosines
+from repro.attack.scenarios import (ATTACK_ENTRY_NAMES, AttackContext,
+                                    AttackInfo, Byzantine, Eavesdropper,
+                                    FreeRider, LinkCorruption, SCENARIOS,
+                                    apply_attacks, register_scenario,
+                                    scenario)
+
+__all__ = [
+    "ATTACK_ENTRY_NAMES", "AttackContext", "AttackInfo", "Byzantine",
+    "Eavesdropper", "FreeRider", "LinkCorruption", "SCENARIOS",
+    "apply_attacks", "register_scenario", "scenario",
+    "gradient_inversion_report", "payload_cosines",
+]

@@ -1,0 +1,61 @@
+"""Eavesdropper auditing: what does a passive link observer learn?
+
+Pasquini et al. (PAPERS.md) show decentralized gossip leaks MORE than
+federated averaging: every payload v_k a node emits is an estimate of the
+global consensus A x, so a single tapped link reconstructs the shared state
+— and through grad f(v) the data-dependent residual — without compromising
+any node. These helpers quantify that leakage from the ``RunResult.taps``
+trajectory an ``Eavesdropper`` scenario records.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def payload_cosines(taps, reference) -> np.ndarray:
+    """(T, n_tap) cosine similarity of each tapped payload to ``reference``
+    (d,) — e.g. the true consensus A x* — per round. 0 rows (the zero
+    initial state) map to cosine 0."""
+    taps = np.asarray(taps, dtype=np.float64)
+    ref = np.asarray(reference, dtype=np.float64)
+    num = taps @ ref
+    den = np.linalg.norm(taps, axis=-1) * np.linalg.norm(ref) + 1e-30
+    return num / den
+
+
+def gradient_inversion_report(taps, problem, reference) -> dict:
+    """Audit a tap trajectory for state/gradient reconstruction leakage.
+
+    Args:
+      taps: (T, n_tap, d) recorded payloads (``RunResult.taps``).
+      problem: the problem whose ``grad_f`` maps payloads to the
+        data-dependent gradient (the inversion target: for quadratic losses
+        grad f(v) exposes the residual v - y, i.e. the labels).
+      reference: (d,) ground-truth consensus to compare against (A x at the
+        solution, or the final honest v).
+
+    Returns a dict:
+      ``state_cosine``      (T, n_tap) payload-vs-reference cosine per round;
+      ``final_state_cosine``  scalar mean over taps at the last round;
+      ``grad_cosine``       (n_tap,) cosine of grad f(tap_T) vs
+                            grad f(reference) — gradient-inversion fidelity;
+      ``payload_norm``      (T,) mean tapped payload norm (attack visibility).
+    """
+    taps = np.asarray(taps)
+    if taps.ndim != 3:
+        raise ValueError(f"taps must be (T, n_tap, d); got {taps.shape}")
+    ref = np.asarray(reference)
+    state_cos = payload_cosines(taps, ref)
+    g_ref = np.asarray(problem.grad_f(jnp.asarray(ref)), dtype=np.float64)
+    g_tap = np.asarray(jax.vmap(problem.grad_f)(jnp.asarray(taps[-1])),
+                       dtype=np.float64)
+    num = g_tap @ g_ref
+    den = np.linalg.norm(g_tap, axis=-1) * np.linalg.norm(g_ref) + 1e-30
+    return {
+        "state_cosine": state_cos,
+        "final_state_cosine": float(state_cos[-1].mean()),
+        "grad_cosine": num / den,
+        "payload_norm": np.linalg.norm(taps, axis=-1).mean(axis=-1),
+    }

@@ -1,0 +1,292 @@
+"""Attack scenarios as pre-materialized schedule transforms.
+
+Each scenario is a frozen dataclass with ``apply(sched, ctx)`` mutating the
+driver's materialized schedule dict in place:
+
+* ``Byzantine``     — nodes emit sign-flipped / scaled / random ``v_k``
+                      payloads on a round window. Writes the per-node payload
+                      transform entries ``atk_coef`` (T, K) and — for random
+                      payloads — ``atk_bias_coef`` (T, K) + ``atk_bias``
+                      (T, K, d) that the round body applies to the OUTGOING
+                      ``v`` before the gossip mix. The attacker is
+                      two-faced: the lie exists only on the wire — receivers
+                      consume it, while the liar's own mixing term and
+                      internal state evolve honestly (so a working defense
+                      recovers near-clean dynamics and the certificate can
+                      stay sound).
+* ``FreeRider``     — nodes do no local work (``atk_work`` (T, K) zeroes
+                      their dx); with ``stale=True`` they also emit their
+                      initial (zero) state instead of fresh progress.
+* ``LinkCorruption``— per-(src, dst) directed-edge payload scaling: rewrites
+                      the materialized W stack itself, so the corruption
+                      flows identically through the dense mix, the per-node
+                      ``PlanSchedule`` coefficients and the block
+                      ``BlockPlanSchedule`` rows (all derive from ``w``).
+* ``Eavesdropper``  — a passive tap: the simulator records the tapped nodes'
+                      emitted payloads each round into ``RunResult.taps``
+                      (T, n_tap, d) for gradient-inversion auditing
+                      (``repro.attack.audit``). Simulator-only.
+
+Scenarios registered in ``SCENARIOS`` can be constructed by name via
+``scenario("byzantine", ...)``. ``apply_attacks`` runs a list of scenarios
+left to right (later scenarios overwrite overlapping node/round windows of
+the same entry) and returns the transform summary the drivers need:
+which entries exist, the tap nodes, whether W was touched (the dist plan
+scheduler must then materialize per-round coefficients), and a hashable
+token for compiled-driver cache keys.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+# payload-transform schedule entries the round body may consume; prefixed
+# "atk_" in the schedule dict. "dishonest" is derived, not consumed by the
+# round body: the (T, K) ground-truth mask of nodes whose wire payload
+# differs from their true state that round. The certificate recorder reads
+# it (``metrics.attackify``) to audit the HONEST COHORT — the harness knows
+# what it injected, the defense never sees it.
+ATTACK_ENTRY_NAMES = ("coef", "bias_coef", "bias", "work", "dishonest")
+
+SCENARIOS: dict = {}
+
+
+def register_scenario(name: str):
+    """Class decorator: make the scenario constructible by name."""
+    def deco(cls):
+        SCENARIOS[name] = cls
+        return cls
+    return deco
+
+
+def scenario(name: str, **kwargs):
+    """Construct a registered scenario by name (the string-keyed API the
+    benchmarks/CLI use): ``scenario("byzantine", nodes=(3, 11))``."""
+    if name not in SCENARIOS:
+        raise ValueError(f"unknown attack scenario {name!r} "
+                         f"(registered: {sorted(SCENARIOS)})")
+    return SCENARIOS[name](**kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttackContext:
+    """Run facts a scenario may need to materialize its entries."""
+
+    graph: Any          # repro.core.topology.Topology
+    rounds: int
+    k: int
+    d: int
+    dtype: Any
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class AttackInfo:
+    """What ``apply_attacks`` did — consumed by the drivers."""
+
+    token: tuple              # hashable summary for compiled-driver cache keys
+    entry_names: tuple        # subset of ATTACK_ENTRY_NAMES present in sched
+    tap_nodes: tuple          # eavesdropper node ids (sim-only)
+    w_modified: bool          # LinkCorruption rewrote the W stack
+
+
+def _window(start: int, stop: int | None, rounds: int) -> slice:
+    stop = rounds if stop is None else min(stop, rounds)
+    if not (0 <= start <= stop):
+        raise ValueError(f"bad attack round window [{start}, {stop})")
+    return slice(start, stop)
+
+
+def _ensure_entry(sched: dict, name: str, ctx: AttackContext,
+                  fill: float) -> np.ndarray:
+    """Materialize a writable (T, K) attack entry, defaulting to ``fill``."""
+    key = "atk_" + name
+    if key not in sched:
+        sched[key] = np.full((ctx.rounds, ctx.k), fill, dtype=ctx.dtype)
+    return sched[key]
+
+
+def _resolve_nodes(nodes, fraction, ctx: AttackContext, seed: int) -> tuple:
+    if nodes is not None:
+        nodes = tuple(int(n) for n in nodes)
+    elif fraction is not None:
+        count = max(1, int(round(fraction * ctx.k)))
+        rng = np.random.default_rng(seed)
+        nodes = tuple(int(n) for n in
+                      sorted(rng.choice(ctx.k, size=count, replace=False)))
+    else:
+        raise ValueError("need nodes= or fraction=")
+    if any(n < 0 or n >= ctx.k for n in nodes):
+        raise ValueError(f"attack nodes {nodes} out of range for K={ctx.k}")
+    return nodes
+
+
+@register_scenario("byzantine")
+@dataclasses.dataclass(frozen=True)
+class Byzantine:
+    """Nodes emit corrupted v_k payloads: ``v_send = coef * v + bias``.
+
+    mode="sign_flip": coef = -scale (the canonical poisoning attack — the
+    emitted estimate points away from the node's actual state);
+    mode="scale":     coef = scale (inflate/deflate);
+    mode="random":    coef = 0, bias = scale * a run-constant standard-normal
+                      direction per node (drawn from ``seed``).
+
+    The lie is wire-only (a two-faced attacker): neighbors receive
+    ``v_send`` while the liar's own mixing term and subsequent local solve
+    use its honest state — the strongest stealthy variant, since the
+    attacker's internal bookkeeping stays self-consistent.
+    """
+
+    nodes: tuple | None = None
+    fraction: float | None = None
+    mode: str = "sign_flip"
+    scale: float = 1.0
+    start: int = 0
+    stop: int | None = None
+    seed: int = 0
+
+    def apply(self, sched: dict, ctx: AttackContext) -> None:
+        if self.mode not in ("sign_flip", "scale", "random"):
+            raise ValueError(f"unknown Byzantine mode {self.mode!r}")
+        nodes = list(_resolve_nodes(self.nodes, self.fraction, ctx,
+                                    self.seed))
+        rows = _window(self.start, self.stop, ctx.rounds)
+        coef = _ensure_entry(sched, "coef", ctx, 1.0)
+        if self.mode == "sign_flip":
+            coef[rows, nodes] = -self.scale
+        elif self.mode == "scale":
+            coef[rows, nodes] = self.scale
+        else:  # random payload: drop the state, emit a fixed random vector
+            coef[rows, nodes] = 0.0
+            bias_coef = _ensure_entry(sched, "bias_coef", ctx, 0.0)
+            bias_coef[rows, nodes] = self.scale
+            # run-constant per-node directions; (T, K, d) broadcast view
+            # keeps the schedule O(K d) in host memory
+            if "atk_bias" in sched:
+                base = np.array(sched["atk_bias"][0])
+            else:
+                base = np.zeros((ctx.k, ctx.d), dtype=ctx.dtype)
+            rng = np.random.default_rng(self.seed)
+            base[nodes] = rng.standard_normal(
+                (len(nodes), ctx.d)).astype(ctx.dtype)
+            sched["atk_bias"] = np.broadcast_to(base,
+                                                (ctx.rounds,) + base.shape)
+
+
+@register_scenario("free_rider")
+@dataclasses.dataclass(frozen=True)
+class FreeRider:
+    """Nodes that stop doing local work: their dx is zeroed every attacked
+    round (``atk_work``), so they ride their neighbors' progress. With
+    ``stale=True`` they also emit their INITIAL (zero) state instead of the
+    mixed estimate they carry — the under-churn "stale state" payload."""
+
+    nodes: tuple
+    start: int = 0
+    stop: int | None = None
+    stale: bool = False
+
+    def apply(self, sched: dict, ctx: AttackContext) -> None:
+        nodes = list(_resolve_nodes(self.nodes, None, ctx, 0))
+        rows = _window(self.start, self.stop, ctx.rounds)
+        work = _ensure_entry(sched, "work", ctx, 1.0)
+        work[rows, nodes] = 0.0
+        if self.stale:
+            coef = _ensure_entry(sched, "coef", ctx, 1.0)
+            coef[rows, nodes] = 0.0
+
+
+@register_scenario("link_corruption")
+@dataclasses.dataclass(frozen=True)
+class LinkCorruption:
+    """Scale the payload crossing chosen DIRECTED edges (src -> dst):
+    ``W[t, dst, src] *= scale`` in the materialized stack. scale=0 drops the
+    link. The corruption flows through every comm path identically because
+    the plan schedules derive from the same post-transform W; scaling stays
+    inside the compiled plan's support, so coverage checks still pass."""
+
+    edges: tuple                # ((src, dst), ...)
+    scale: float = 0.0
+    start: int = 0
+    stop: int | None = None
+
+    def apply(self, sched: dict, ctx: AttackContext) -> None:
+        rows = _window(self.start, self.stop, ctx.rounds)
+        # always copy: the no-churn stack is a read-only broadcast view, and
+        # a churn stack may be shared — the identity change also tells
+        # apply_attacks that W was rewritten
+        w = np.array(sched["w"])
+        for src, dst in self.edges:
+            src, dst = int(src), int(dst)
+            if not (0 <= src < ctx.k and 0 <= dst < ctx.k):
+                raise ValueError(f"link ({src}, {dst}) out of range "
+                                 f"for K={ctx.k}")
+            if src == dst:
+                raise ValueError("link corruption targets edges, not the "
+                                 "self term — use Byzantine for payloads")
+            w[rows, dst, src] = w[rows, dst, src] * self.scale
+        sched["w"] = w
+
+
+@register_scenario("eavesdropper")
+@dataclasses.dataclass(frozen=True)
+class Eavesdropper:
+    """Passive link tap: record the tapped nodes' EMITTED payloads (after
+    any Byzantine transform — what actually crosses the wire) each round.
+    The simulator returns them as ``RunResult.taps`` (T, n_tap, d) for
+    ``repro.attack.audit``; the distributed runtime rejects taps (recording
+    full payload trajectories per round is a simulator-side analysis)."""
+
+    nodes: tuple
+
+    def apply(self, sched: dict, ctx: AttackContext) -> None:
+        _resolve_nodes(self.nodes, None, ctx, 0)  # validate only
+
+
+def apply_attacks(sched: dict, attacks, ctx: AttackContext
+                  ) -> tuple[dict, AttackInfo]:
+    """Run scenarios left to right over a materialized schedule.
+
+    Returns the (possibly copied) schedule and an ``AttackInfo``. Drivers
+    must fold ``info.token`` into their compiled-driver cache keys (attack
+    entries change the traced step function) and — when ``info.w_modified``
+    — materialize per-round plan coefficients instead of the static
+    broadcast fast path.
+    """
+    if attacks is None:
+        attacks = ()
+    if not isinstance(attacks, (list, tuple)):
+        attacks = (attacks,)
+    sched = dict(sched)
+    w_before = sched["w"]
+    tap_nodes: list = []
+    for atk in attacks:
+        if not hasattr(atk, "apply"):
+            raise TypeError(f"not an attack scenario: {atk!r} (want an "
+                            "object with .apply(sched, ctx), e.g. from "
+                            "repro.attack.scenario())")
+        atk.apply(sched, ctx)
+        if isinstance(atk, Eavesdropper):
+            tap_nodes.extend(int(n) for n in atk.nodes)
+    # ground truth for the cohort certificate: a node is dishonest on round
+    # t iff its wire payload differs from its state (coef != 1 or a bias
+    # injection) — the transform the round body will actually apply
+    if "atk_coef" in sched or "atk_bias_coef" in sched:
+        dis = np.zeros((ctx.rounds, ctx.k), dtype=bool)
+        if "atk_coef" in sched:
+            dis |= sched["atk_coef"] != 1.0
+        if "atk_bias_coef" in sched:
+            dis |= sched["atk_bias_coef"] != 0.0
+        sched["atk_dishonest"] = dis.astype(ctx.dtype)
+    entry_names = tuple(n for n in ATTACK_ENTRY_NAMES
+                        if "atk_" + n in sched)
+    info = AttackInfo(
+        token=tuple(repr(a) for a in attacks),
+        entry_names=entry_names,
+        tap_nodes=tuple(dict.fromkeys(tap_nodes)),  # dedupe, keep order
+        w_modified=sched["w"] is not w_before,
+    )
+    return sched, info

@@ -28,7 +28,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import executor as exec_engine, metrics as metrics_lib, \
-    topology as topo
+    mixing, topology as topo
+
+
+def _baseline_mixer(w_mix, robust, trim, clip):
+    """The consensus contraction the baseline rounds use: the plain
+    ``w_mix @`` dot when ``robust`` is None (bitwise the historical path),
+    else the same Byzantine-resilient per-neighborhood aggregation CoLA's
+    mixing layer applies (``mixing.robust_mix_dense``) so DGD/DIGing can be
+    benchmarked under the attack harness on equal footing."""
+    if robust is None:
+        return lambda ws: w_mix @ ws
+    if robust not in mixing.ROBUST_MODES:
+        raise ValueError(f"unknown robust mode {robust!r} "
+                         f"(want one of {mixing.ROBUST_MODES})")
+    return lambda ws: mixing.robust_mix_dense(w_mix, ws, robust,
+                                              trim=trim, clip=clip)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,14 +177,17 @@ def _run(prob: ConsensusProblem, round_fn: Callable, state, rounds: int,
 
 def run_dgd(prob: ConsensusProblem, graph: topo.Topology, *, step: float,
             rounds: int, record_every: int = 1, diminishing: bool = False,
+            robust: str | None = None, robust_trim: int = 1,
+            robust_clip: float | None = None,
             executor: str = "block", block_size: int = 64) -> BaselineResult:
     w_mix = jnp.asarray(topo.metropolis_weights(graph), dtype=prob.x_parts.dtype)
     k, d = prob.num_nodes, prob.dim
+    mix = _baseline_mixer(w_mix, robust, robust_trim, robust_clip)
 
     def one_round(carry):
         ws, t = carry
         alpha = step / jnp.sqrt(t + 1.0) if diminishing else step
-        mixed = w_mix @ ws
+        mixed = mix(ws)
         grad = prob.smooth_grad(ws)
         new = prob.prox_reg(mixed - alpha * grad, alpha)
         return (new, t + 1.0)
@@ -184,19 +202,24 @@ def run_dgd(prob: ConsensusProblem, graph: topo.Topology, *, step: float,
 # ---------------------------------------------------------------------------
 
 def run_diging(prob: ConsensusProblem, graph: topo.Topology, *, step: float,
-               rounds: int, record_every: int = 1, executor: str = "block",
+               rounds: int, record_every: int = 1,
+               robust: str | None = None, robust_trim: int = 1,
+               robust_clip: float | None = None, executor: str = "block",
                block_size: int = 64) -> BaselineResult:
     w_mix = jnp.asarray(topo.metropolis_weights(graph), dtype=prob.x_parts.dtype)
     k, d = prob.num_nodes, prob.dim
+    # both contractions (the iterate mix and the tracker mix) go through the
+    # robust aggregation — a liar corrupts s exactly like ws on the wire
+    mix = _baseline_mixer(w_mix, robust, robust_trim, robust_clip)
 
     def one_round(carry):
         ws, s, g_prev = carry
-        ws_new = w_mix @ ws - step * s
+        ws_new = mix(ws) - step * s
         # nonsmooth reg handled by subgradient inside the tracked gradient
         g_new = prob.smooth_grad(ws_new)
         if prob.reg == "l1":
             g_new = g_new + (prob.lam / k) * jnp.sign(ws_new)
-        s_new = w_mix @ s + g_new - g_prev
+        s_new = mix(s) + g_new - g_prev
         return (ws_new, s_new, g_new)
 
     ws0 = jnp.zeros((k, d), dtype=prob.x_parts.dtype)

@@ -61,6 +61,13 @@ class ColaConfig:
     cd_mode: str = "auto"           # local solver formulation:
     #   "auto" — Gram-cached when subproblem.gram_pays says it's cheaper,
     #   "gram" / "residual" — force one path (see subproblem docstring).
+    robust: str | None = None       # Byzantine-resilient v aggregation:
+    #   None — the paper's linear W mix; "trim" / "median" / "clip" swap in
+    #   repro.core.mixing.robust_neighborhood_mix (per-neighborhood trimmed
+    #   mean / median / per-neighbor norm clipping). Nonlinear: B gossip
+    #   steps apply sequentially (no W^B fold).
+    robust_trim: int = 1            # extremes dropped per side ("trim" mode)
+    robust_clip: float | None = None  # clip radius; None = median-adaptive
 
     def resolved_sigma(self, k: int) -> float:
         return self.gamma * k if self.sigma_prime is None else self.sigma_prime
@@ -115,6 +122,23 @@ def init_state(problem: Problem, part: Partition) -> ColaState:
     )
 
 
+def _apply_payload_attack(v: jax.Array, atk: dict | None) -> jax.Array:
+    """The wire transform a Byzantine/free-rider schedule applies to the
+    OUTGOING per-node payloads: ``coef * v + bias_coef * bias``. One shared
+    implementation feeds both the round body's mix input and the
+    eavesdropper taps, so what the tap records is exactly what crossed the
+    wire. Elementwise per node: identical on stacked (K, d) and node-sharded
+    (ln, d) operands."""
+    if not atk:
+        return v
+    if "coef" in atk:
+        v = atk["coef"][:, None].astype(v.dtype) * v
+    if "bias_coef" in atk:
+        v = v + (atk["bias_coef"][:, None].astype(v.dtype)
+                 * atk["bias"].astype(v.dtype))
+    return v
+
+
 def _round_body(problem: Problem, part: Partition, cfg: ColaConfig, *,
                 mix_fn: Callable | None = None,
                 grad_mix_fn: Callable | None = None) -> Callable:
@@ -123,25 +147,51 @@ def _round_body(problem: Problem, part: Partition, cfg: ColaConfig, *,
     shard_map distributed runtime (``repro.dist.runtime``) — which is what
     makes the drivers bitwise identical.
 
-    ``mix_fn(w, v_stack)`` applies the B gossip steps (default: the dense
-    ``mixing.mix_power`` on the full stacked state); ``grad_mix_fn(w, grads)``
-    applies one mixing step for ``grad_mode='mixed'``. The distributed
-    runtime swaps in collective (ppermute/all-gather) implementations while
-    every node-local op stays this exact code.
+    ``mix_fn(w, v_send, v_self)`` applies the B gossip steps (default: the
+    dense ``mixing.mix_power_wire`` on the full stacked state, or the
+    robust dense aggregation when ``cfg.robust`` is set); ``v_self`` is
+    None unless a wire attack corrupted the payloads. ``grad_mix_fn(w,
+    grads)`` applies one mixing step for ``grad_mode='mixed'``. The
+    distributed runtime swaps in collective (ppermute/all-gather)
+    implementations while every node-local op stays this exact code.
+
+    ``atk`` (an optional dict of per-node attack operands sliced from the
+    schedule by the drivers — see ``repro.attack``) corrupts the round: the
+    emitted payload becomes ``coef * v + bias_coef * bias`` on the wire
+    BEFORE the gossip mix — receivers consume the lie while every node's
+    own state (and own mixing term) evolves honestly — and ``work`` masks
+    dx after the solve (free riders). All elementwise per node, so the
+    simulator's (K,) entries and the distributed runtime's node-sharded
+    slices produce bitwise-identical rounds.
     """
     k = part.num_nodes
     sigma = cfg.resolved_sigma(k)
     spec = SubproblemSpec(sigma_over_tau=sigma / problem.tau, inv_k=1.0 / k)
     if mix_fn is None:
-        mix_fn = lambda w, v: mixing.mix_power(w, v, cfg.gossip_steps)
+        if cfg.robust is not None:
+            mix_fn = lambda w, v_send, v_self: mixing.robust_mix_steps(
+                w, v_send, cfg.robust, trim=cfg.robust_trim,
+                clip=cfg.robust_clip, steps=cfg.gossip_steps,
+                self_stack=v_self)
+        else:
+            mix_fn = lambda w, v_send, v_self: mixing.mix_power_wire(
+                w, v_send, v_self, cfg.gossip_steps)
     if grad_mix_fn is None:
         grad_mix_fn = mixing.dense_mix
 
     def one_round(state: ColaState, env: ColaEnv, w: jax.Array,
                   active: jax.Array,
-                  budgets: jax.Array | None = None) -> ColaState:
+                  budgets: jax.Array | None = None,
+                  atk: dict | None = None) -> ColaState:
         # Step 4: gossip mixing of the local estimates (B steps, App. E.2).
-        v_half = mix_fn(w, state.v_stack)
+        # A payload attack exists ONLY on the wire: receivers consume the
+        # lie, but each node's own mixing term and its internal state stay
+        # honest (a two-faced attacker — the stealthiest case for the
+        # certificate layer to catch). v_self=None flags the honest fast
+        # path, which is then bitwise the unattacked program.
+        v_send = _apply_payload_attack(state.v_stack, atk)
+        v_self = None if v_send is state.v_stack else state.v_stack
+        v_half = mix_fn(w, v_send, v_self)
 
         # Gradient each node uses for its subproblem.
         grads = jax.vmap(problem.grad_f)(v_half)
@@ -163,6 +213,9 @@ def _round_body(problem: Problem, part: Partition, cfg: ColaConfig, *,
                           step_budgets=budgets,
                           gram_parts=env.gram_parts if use_gram else None)
         dx = dx * active[:, None].astype(dx.dtype)
+        if atk is not None and "work" in atk:
+            # free riders: no local progress this round
+            dx = dx * atk["work"][:, None].astype(dx.dtype)
 
         # Steps 6-8: local variable + local estimate updates.
         x_new = state.x_parts + cfg.gamma * dx
@@ -193,6 +246,9 @@ def cocoa_mixing(k: int) -> np.ndarray:
 class RunResult(NamedTuple):
     state: ColaState
     history: dict  # lists keyed by metric name
+    # Eavesdropper tap trajectory (T, n_tap, d) when the attack list carries
+    # a repro.attack.Eavesdropper (simulator only); None otherwise.
+    taps: Any = None
 
 
 _METRICS = metrics_lib.GAP_METRICS
@@ -205,6 +261,7 @@ def run_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
              budget_schedule: Callable[[int, np.random.Generator], np.ndarray] | None = None,
              leave_mode: str = "freeze", seed: int = 0,
              w_override: np.ndarray | None = None,
+             attacks=None,
              executor: str = "block", block_size: int = 64) -> RunResult:
     """Driver: runs Algorithm 1 under a pluggable metric Recorder.
 
@@ -227,16 +284,25 @@ def run_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         implement the identical controller (the loop driver on host, the
         block driver inside the scan carry), so histories still match.
       active_schedule: optional (round, rng) -> (K,) bool mask simulating node
-        churn (Fig. 4/6). W is re-normalized over the active subgraph each
-        round via Metropolis weights.
+        churn (Fig. 4/6), or a pre-materialized (T, K) bool array (the
+        array form consumes no draws from the shared schedule rng). W is
+        re-normalized over the active subgraph each round via Metropolis
+        weights.
       budget_schedule: optional (round, rng) -> (K,) int CD-step budgets —
         heterogeneous per-node solver quality Theta_k (Definition 5):
-        stragglers do fewer coordinate updates this round.
+        stragglers do fewer coordinate updates this round. Also accepts a
+        pre-materialized (T, K) int array.
       leave_mode: "freeze" (paper's main model: x_[k] frozen) or "reset"
         (App. D Fig. 6: x_[k] zeroed and all v_j adjusted to preserve the
         Lemma-1 mean invariant).
       w_override: use this mixing matrix instead of Metropolis weights
         (e.g. ``cocoa_mixing(K)`` for the centralized special case).
+      attacks: optional ``repro.attack`` scenario (or list of scenarios) —
+        Byzantine payloads, free riders, link corruption, eavesdropper
+        taps — applied as transforms over the pre-materialized schedule
+        (block executor only). Composes with churn/budget schedules, which
+        materialize first. Defenses are orthogonal: set ``cfg.robust``.
+        An ``Eavesdropper`` fills ``RunResult.taps``.
       executor: "block" (default) runs ``block_size`` rounds per device
         dispatch via the round-block engine; "loop" is the retained
         one-dispatch-per-round reference path. Both consume the schedule
@@ -254,6 +320,10 @@ def run_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
     base_w = w_override if w_override is not None else topo.metropolis_weights(graph)
     rec = metrics_lib.make_recorder(recorder, problem, part, env, graph,
                                     base_w, eps)
+    active_schedule = _as_schedule_fn(active_schedule, rounds, k,
+                                      "active_schedule")
+    budget_schedule = _as_schedule_fn(budget_schedule, rounds, k,
+                                      "budget_schedule")
     if active_schedule is not None:
         # churn: certificates must judge each record round against the
         # REWEIGHTED exchange (mask + beta of the active subnetwork), not
@@ -262,8 +332,13 @@ def run_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
     args = (problem, part, env, state, graph, cfg, rounds, record_every,
             rec, active_schedule, budget_schedule, leave_mode, seed, base_w)
     if executor == "block":
-        return _run_cola_block(*args, block_size=block_size)
+        return _run_cola_block(*args, attacks=attacks, block_size=block_size)
     if executor == "loop":
+        if attacks is not None:
+            raise ValueError(
+                "attacks= requires executor='block' — attack scenarios are "
+                "schedule transforms over the pre-materialized (T, ...) "
+                "schedules the loop driver does not build")
         return _run_cola_loop(*args)
     raise ValueError(f"unknown executor {executor!r} (want 'block' or 'loop')")
 
@@ -345,7 +420,22 @@ def _run_cola_loop(problem, part, env, state, graph, cfg, rounds, record_every,
             if stop_fn is not None and bool(stop_fn(row)):
                 history["stop_round"] = t
                 break
-    return RunResult(state=state, history=history)
+    return RunResult(state=state,
+                     history=metrics_lib.annotate_violation(history))
+
+
+def _as_schedule_fn(s, rounds: int, k: int, name: str):
+    """Normalize a schedule argument: pass callables (and None) through,
+    wrap a pre-materialized (T, K) array as a per-round lookup. The wrapper
+    ignores the shared schedule rng — callers mixing array and callable
+    schedules must account for the draws the array form no longer takes."""
+    if s is None or callable(s):
+        return s
+    arr = np.asarray(s)
+    if arr.shape != (rounds, k):
+        raise ValueError(f"pre-materialized {name} must be ({rounds}, {k}),"
+                         f" got {arr.shape}")
+    return lambda t, rng: arr[t]
 
 
 def _materialize_schedule(graph, rounds, active_schedule, budget_schedule,
@@ -405,7 +495,8 @@ def _materialize_schedule(graph, rounds, active_schedule, budget_schedule,
 
 def _run_cola_block(problem, part, env, state, graph, cfg, rounds,
                     record_every, recorder, active_schedule, budget_schedule,
-                    leave_mode, seed, base_w, *, block_size) -> RunResult:
+                    leave_mode, seed, base_w, *, attacks=None,
+                    block_size) -> RunResult:
     """Round-block driver: ``block_size`` rounds per dispatch (see
     ``repro.core.executor``), the Recorder's row computed on device inside
     the scan, certificate-driven early exit handled by the engine."""
@@ -413,6 +504,25 @@ def _run_cola_block(problem, part, env, state, graph, cfg, rounds,
     sched = _materialize_schedule(graph, rounds, active_schedule,
                                   budget_schedule, leave_mode, seed, base_w,
                                   dtype)
+    atk_info = None
+    if attacks is not None:
+        from repro import attack as attack_lib
+        # attacks transform the schedule AFTER churn/budgets materialize and
+        # BEFORE the certificate schedule derives from it — certificates
+        # judge the corrupted exchange, exactly what ran
+        sched, atk_info = attack_lib.apply_attacks(
+            sched, attacks,
+            attack_lib.AttackContext(graph=graph, rounds=rounds,
+                                     k=part.num_nodes, d=problem.d,
+                                     dtype=dtype, seed=seed))
+        if "dishonest" in atk_info.entry_names:
+            # payload-corrupting attacks: the certificate audits the honest
+            # cohort against the ground-truth dishonesty mask the schedule
+            # transform recorded (see metrics.attackify)
+            recorder = metrics_lib.attackify(recorder)
+    atk_names = atk_info.entry_names if atk_info else ()
+    tap_nodes = atk_info.tap_nodes if atk_info else ()
+    tap_idx = jnp.asarray(tap_nodes, jnp.int32) if tap_nodes else None
     has_budget = "budgets" in sched
     has_reset = "leavers" in sched
     body = _round_body(problem, part, cfg)
@@ -425,17 +535,26 @@ def _run_cola_block(problem, part, env, state, graph, cfg, rounds,
                 s_t["reset_any"],
                 lambda ss: _reset_leavers(ss, env_ctx, part, s_t["leavers"]),
                 lambda ss: ss, st)
+        atk = {n: s_t["atk_" + n] for n in atk_names} or None
+        aux = None
+        if tap_idx is not None:
+            # what the tapped nodes emit THIS round (post-reset state, same
+            # wire transform the mix consumes — XLA shares the computation)
+            aux = _apply_payload_attack(st.v_stack, atk)[tap_idx]
         st = body(st, env_ctx, s_t["w"], s_t["active"],
-                  s_t["budgets"] if has_budget else None)
-        return st, None
+                  s_t["budgets"] if has_budget else None, atk)
+        return st, aux
 
     cad = metrics_lib.as_cadence(record_every)
     rec = (None if cad
            else exec_engine.record_flags(rounds, record_every))
-    if getattr(recorder, "uses_schedule", False):
+    cert = metrics_lib.first_certificate(recorder)
+    if cert is not None and cert.dynamic:
         # dynamic certificate: the per-round neighbor mask + threshold ride
         # the schedule like every other per-round input. Under an adaptive
         # cadence any round may record, so materialize every round's entry.
+        # (attack-aware recorders also use the schedule, but their entry —
+        # atk_dishonest — was materialized by apply_attacks already.)
         sched.update(metrics_lib.certificate_schedule(
             recorder, sched["w"], sched["active"],
             np.ones((rounds,), dtype=bool) if cad else rec))
@@ -444,9 +563,11 @@ def _run_cola_block(problem, part, env, state, graph, cfg, rounds,
         record_mask=rec, block_size=block_size, cadence=cad,
         num_rounds=rounds,
         cache_key=("cola-block", exec_engine.fingerprint(problem), part, cfg,
-                   has_budget, has_reset, recorder.cache_token()))
+                   has_budget, has_reset, recorder.cache_token(),
+                   atk_info.token if atk_info else None))
     return RunResult(state=res.state,
-                     history=metrics_lib.history_from(recorder, res))
+                     history=metrics_lib.history_from(recorder, res),
+                     taps=res.aux if tap_nodes else None)
 
 
 def _reset_leavers(state: ColaState, env: ColaEnv, part: Partition,

@@ -131,6 +131,30 @@ def neighborhood_mean(grads: jax.Array, mask: jax.Array) -> jax.Array:
     return jnp.sum(sel, axis=1) / counts
 
 
+def consensus_residual(v_sum: jax.Array, ax_sum: jax.Array,
+                       k_nodes: int) -> jax.Array:
+    """Relative Lemma-1 invariant residual: ||(1/K) sum_k v_k - A x|| scaled
+    by (||A x|| + 1).
+
+    Every HONEST CoLA dynamic — any dx, churn freezing, budgets, Fig.-6
+    resets — preserves (1/K) sum_k v_k = A x exactly in exact arithmetic
+    (the mean-v and Ax updates cancel algebraically), and doubly-stochastic
+    linear mixing keeps the mean untouched. A Byzantine payload (the
+    effective column-stochasticity of the mix is broken) or per-link
+    corruption moves the mean without moving A x, so this residual is the
+    certificate layer's tamper detector (``certificate_violated``). Robust
+    NONLINEAR aggregation (trim/median/clip) drifts it benignly by the
+    neighborhood spread, which vanishes near consensus — hence a tolerance
+    band rather than an exact-zero check.
+
+    Args:
+      v_sum: (d,) sum over all K nodes of v_k (psum-able partial in dist).
+      ax_sum: (d,) sum over all K nodes of A_[k] x_[k] (= A x).
+    """
+    rho = jnp.linalg.norm(v_sum / k_nodes - ax_sum)
+    return rho / (jnp.linalg.norm(ax_sum) + 1.0)
+
+
 def node_subproblem_gaps(problem, x_parts: jax.Array, v_stack: jax.Array,
                          a_parts: jax.Array, gp_parts: jax.Array,
                          masks: jax.Array, grads: jax.Array) -> jax.Array:

@@ -54,13 +54,18 @@ import numpy as np
 
 from repro.core import topology as topo
 from repro.core.duality import (block_spectral_norms, certificate_thresholds,
-                                gap_report, neighbor_mask, neighborhood_mean,
-                                node_subproblem_gaps)
+                                consensus_residual, gap_report, neighbor_mask,
+                                neighborhood_mean, node_subproblem_gaps)
 from repro.core.partition import Partition
 
 GAP_METRICS = ("primal", "hamiltonian", "dual", "gap", "consensus_violation")
+# append-only: downstream code indexes the first five by name, and new
+# columns extend the row (consensus_residual = the Lemma-1 invariant
+# residual, certificate_violated = the tamper-detection flag; see
+# ``duality.consensus_residual``)
 CERT_METRICS = ("local_gap_max", "grad_disagreement_max", "cond9_nodes",
-                "cond10_nodes", "certified")
+                "cond10_nodes", "certified", "consensus_residual",
+                "certificate_violated")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,12 +195,41 @@ class CertificateRecorder:
     # the churn round's actual exchange justifies. See ``dynamize`` /
     # ``certificate_schedule``.
     dynamic: bool = False
+    # Lemma-1 tamper detection (``duality.consensus_residual``): certifying
+    # additionally requires the relative invariant residual <= cons_tol
+    # (Prop. 1's proof rests on (1/K) sum v_k = A x — an attacked run that
+    # satisfies Eqs. 9-10 at a SHIFTED fixed point must not certify), and
+    # residual > viol_tol (or non-finite state) raises the
+    # ``certificate_violated`` flag. Honest linear runs sit at float noise
+    # (~1e-6); robust nonlinear aggregation drifts the invariant by the
+    # neighborhood spread, which decays toward consensus — hence a band,
+    # not an exact-zero check. An undefended Byzantine payload moves the
+    # mean by O(||v||) per round, far above viol_tol.
+    cons_tol: float = 1e-2
+    viol_tol: float = 0.1
+    stop_on_violation: bool = False
+    # attack-harness mode (``attackify``): audit the HONEST COHORT. A node
+    # that lies on the wire cannot have its data used by any sound
+    # aggregator — the achievable target is the honest sub-network's
+    # problem, so certifying the full-network invariant under a working
+    # defense is impossible by construction. The recorder instead reads the
+    # ground-truth per-round dishonesty mask the attack schedule recorded
+    # (``sched["atk_dishonest"]`` — experimenter knowledge, never visible
+    # to the defense) and restricts every certificate input to honest
+    # nodes: the Lemma-1 sums, the Eq.-9/10 conditions and the Eq.-10
+    # neighborhood mean. Under the trim defense (drop + weight-to-self)
+    # with a symmetric W the restricted mixing is column-stochastic, so the
+    # cohort invariant sum_H v_k = K * A_H x_H holds EXACTLY whenever the
+    # gate rejects every lie — the defended run certifies at float noise,
+    # while an undefended run absorbs the lies into honest states and
+    # trips ``certificate_violated``.
+    attack_aware: bool = False
 
     labels = CERT_METRICS
 
     @property
     def uses_schedule(self) -> bool:
-        return self.dynamic
+        return self.dynamic or self.attack_aware
 
     def local_row_inputs(self, x_parts, v_stack, grads, neigh_mean):
         """(local_gap, disagreement) per node — shared by the stacked
@@ -207,30 +241,66 @@ class CertificateRecorder:
         disagree = jnp.linalg.norm(grads - neigh_mean, axis=1)
         return local_gap, disagree
 
-    def summarize(self, local_gap, disagree, *, psum=None, pmax=None,
-                  grad_thresh=None, dtype=jnp.float32) -> jax.Array:
+    def summarize(self, local_gap, disagree, *, resid, psum=None, pmax=None,
+                  grad_thresh=None, honest=None, dtype=jnp.float32
+                  ) -> jax.Array:
         """Assemble the scalar row from per-node quantities.
 
         ``psum``/``pmax`` default to identity (single-program stacked state);
         the distributed runtime passes ``lax.psum``/``lax.pmax`` partials so
         the cross-device reductions are scalar collectives. ``grad_thresh``
         overrides the static Eq.-10 threshold (the dynamic churn path feeds
-        the per-round value).
+        the per-round value). ``resid`` is the already-reduced Lemma-1
+        consensus residual (``duality.consensus_residual``) — certification
+        requires it <= cons_tol; > viol_tol (or non-finite, the divergence
+        signature) raises ``certificate_violated``. ``honest`` (attack-aware
+        mode) is this program's node slice of the 0/1 honesty mask: the
+        Eq.-9/10 conditions and maxima restrict to honest nodes, and
+        certification requires all HONEST nodes to satisfy both.
         """
         psum = psum if psum is not None else (lambda x: x)
         pmax = pmax if pmax is not None else (lambda x: x)
         if grad_thresh is None:
             grad_thresh = self.grad_thresh
-        k = self.part.num_nodes
         cond9 = local_gap <= self.gap_thresh
         cond10 = disagree <= grad_thresh
+        if honest is None:
+            n_target = jnp.asarray(self.part.num_nodes, dtype)
+        else:
+            ok = honest > 0
+            cond9, cond10 = cond9 & ok, cond10 & ok
+            local_gap = jnp.where(ok, local_gap, 0.0)
+            disagree = jnp.where(ok, disagree, 0.0)
+            n_target = psum(jnp.sum(honest.astype(dtype)))
         n9 = psum(jnp.sum(cond9.astype(dtype)))
         n10 = psum(jnp.sum(cond10.astype(dtype)))
         n_both = psum(jnp.sum((cond9 & cond10).astype(dtype)))
-        certified = (n_both == k).astype(dtype)
+        resid = resid.astype(dtype)
+        certified = ((n_both == n_target)
+                     & (resid <= self.cons_tol)).astype(dtype)
+        violated = ((resid > self.viol_tol)
+                    | ~jnp.isfinite(resid)).astype(dtype)
         return jnp.stack([pmax(jnp.max(local_gap)).astype(dtype),
                           pmax(jnp.max(disagree)).astype(dtype),
-                          n9, n10, certified])
+                          n9, n10, certified, resid, violated])
+
+    def invariant_sums(self, x_parts, v_stack, a_parts,
+                       honest=None) -> jax.Array:
+        """(2, d) stacked [sum_k v_k, sum_k A_[k] x_[k]] — the Lemma-1
+        residual's inputs. Stacked so the distributed path completes BOTH
+        partials with ONE vector psum (O(d), no stack gathers). ``honest``
+        (attack-aware mode) restricts both sums to the honest cohort, whose
+        invariant sum_H v = K * A_H x_H is what a working defense
+        preserves (the full-network one is unpreservable: a rejected liar's
+        data never reaches the cohort)."""
+        if honest is None:
+            v_sum = jnp.sum(v_stack, axis=0)
+            ax_sum = jnp.einsum("kdn,kn->d", a_parts, x_parts)
+        else:
+            h = honest.astype(v_stack.dtype)
+            v_sum = jnp.sum(h[:, None] * v_stack, axis=0)
+            ax_sum = jnp.einsum("kdn,kn,k->d", a_parts, x_parts, h)
+        return jnp.stack([v_sum, ax_sum])
 
     def record_fn(self, state, sched=None) -> jax.Array:
         grads = jax.vmap(self.problem.grad_f)(state.v_stack)   # (K, d)
@@ -239,17 +309,33 @@ class CertificateRecorder:
             grad_thresh = sched["cert_grad_thresh"]
         else:
             mask, grad_thresh = self.neigh_mask, self.grad_thresh
+        hon = None
+        if self.attack_aware:
+            hon = (jnp.asarray(sched["atk_dishonest"])
+                   <= 0).astype(state.v_stack.dtype)
+            # dishonest nodes leave every neighborhood mean: their emitted
+            # gradient information is exactly what the defense discards
+            mask = jnp.asarray(mask) * hon[None, :]
         neigh_mean = neighborhood_mean(grads, mask)
         local_gap, disagree = self.local_row_inputs(
             state.x_parts, state.v_stack, grads, neigh_mean)
-        return self.summarize(local_gap, disagree, grad_thresh=grad_thresh)
+        sums = self.invariant_sums(state.x_parts, state.v_stack,
+                                   self.a_parts, honest=hon)
+        resid = consensus_residual(sums[0], sums[1], self.part.num_nodes)
+        return self.summarize(local_gap, disagree, resid=resid,
+                              grad_thresh=grad_thresh, honest=hon)
 
     @property
     def stop_fn(self) -> Callable | None:
-        if not self.stop_on_certified:
-            return None
-        idx = self.labels.index("certified")
-        return lambda row: row[idx] > 0
+        idx_c = self.labels.index("certified")
+        idx_v = self.labels.index("certificate_violated")
+        if self.stop_on_certified and self.stop_on_violation:
+            return lambda row: (row[idx_c] > 0) | (row[idx_v] > 0)
+        if self.stop_on_certified:
+            return lambda row: row[idx_c] > 0
+        if self.stop_on_violation:
+            return lambda row: row[idx_v] > 0
+        return None
 
     def cadence_ratio(self, row) -> jax.Array:
         """Distance-to-certification for ``AdaptiveCadence``: the worse of
@@ -268,12 +354,16 @@ class CertificateRecorder:
     def cache_token(self):
         return ("CertificateRecorder", self.eps, self.beta_ub, self.l_bound,
                 self.gap_thresh, self.grad_thresh, self.stop_on_certified,
-                self.dynamic, np.asarray(self.neigh_mask).tobytes())
+                self.dynamic, self.cons_tol, self.viol_tol,
+                self.stop_on_violation, self.attack_aware,
+                np.asarray(self.neigh_mask).tobytes())
 
     def collective_footprint(self, k: int, d: int, n_k: int,
                              itemsize: int = 4, comm: str = "dense",
                              conn: int = 1) -> dict:
-        scalars = (2 * len(self.labels) + 3) * itemsize
+        # scalar psums + the ONE stacked (2, d) Lemma-1 invariant psum
+        # (``invariant_sums``) — still O(d) per device per record round
+        scalars = (2 * len(self.labels) + 3) * itemsize + 2 * d * itemsize
         if comm == "ring":
             # 2*conn ppermute pushes of one (d,) gradient + scalar psums
             return {"all-gather": 0, "all-reduce": scalars,
@@ -398,7 +488,9 @@ class FnRecorder:
 def certificate_recorder(problem, part: Partition, env, neighbors,
                          eps: float, *, w=None,
                          sigma_k: jax.Array | None = None,
-                         stop_on_certified: bool = True
+                         stop_on_certified: bool = True,
+                         cons_tol: float = 1e-2, viol_tol: float = 0.1,
+                         stop_on_violation: bool = False
                          ) -> CertificateRecorder:
     """Build a ``CertificateRecorder``, resolving every round-invariant input.
 
@@ -433,7 +525,8 @@ def certificate_recorder(problem, part: Partition, env, neighbors,
         gp_parts=env.gp_parts, masks=env.masks, neigh_mask=mask,
         sigma_k=sigma_k, eps=float(eps), beta_ub=beta_ub, l_bound=l_bound,
         gap_thresh=float(gap_thresh), grad_thresh=float(grad_thresh),
-        stop_on_certified=stop_on_certified)
+        stop_on_certified=stop_on_certified, cons_tol=cons_tol,
+        viol_tol=viol_tol, stop_on_violation=stop_on_violation)
 
 
 def dynamize(recorder):
@@ -447,6 +540,32 @@ def dynamize(recorder):
             dynamize(p) for p in recorder.parts))
     if isinstance(recorder, CertificateRecorder):
         return dataclasses.replace(recorder, dynamic=True)
+    return recorder
+
+
+def attackify(recorder, cons_tol: float = 0.25, viol_tol: float = 0.5):
+    """Attack-harness variant: every certificate part audits the honest
+    cohort, reading the attack schedule's ground-truth per-round dishonesty
+    mask (``atk_dishonest``) — see ``CertificateRecorder.attack_aware``.
+    Drivers apply this when ``apply_attacks`` reports payload-corrupting
+    scenarios; a clean run's recorder is untouched.
+
+    The default tolerances widen: when the attack begins at round S > 0,
+    the cohort invariant inherits the boundary offset
+    ``C = sum_L (K a_L x_L(S) - v_L(S))`` — the pre-onset entanglement of
+    the liars' contributions with the honest states. A sound defense keeps
+    C CONSTANT (the residual plateaus at ||C||-scale, ~0.1 for onsets in
+    the first tenth of training, exactly 0 for round-0 onsets), while an
+    undefended run absorbs new lie mass every round and the residual
+    accumulates toward ~1. The (0.25, 0.5) band separates those regimes;
+    the raw residual stays in the history for inspection."""
+    if isinstance(recorder, ComposedRecorder):
+        return dataclasses.replace(recorder, parts=tuple(
+            attackify(p, cons_tol, viol_tol) for p in recorder.parts))
+    if isinstance(recorder, CertificateRecorder):
+        return dataclasses.replace(recorder, attack_aware=True,
+                                   cons_tol=max(recorder.cons_tol, cons_tol),
+                                   viol_tol=max(recorder.viol_tol, viol_tol))
     return recorder
 
 
@@ -528,6 +647,19 @@ def make_recorder(kind, problem, part: Partition, env, graph,
                      "'gap+certificate' or a Recorder instance)")
 
 
+def annotate_violation(history: dict) -> dict:
+    """Surface tamper detection in the history: ``violated_round`` is the
+    first RECORDED round whose ``certificate_violated`` flag fired (None when
+    the flag never fired; absent when the recorder has no certificate part).
+    """
+    if "certificate_violated" in history:
+        history["violated_round"] = next(
+            (r for r, v in zip(history["round"],
+                               history["certificate_violated"]) if v > 0),
+            None)
+    return history
+
+
 def history_from(recorder, result) -> dict:
     """Build the driver history dict from a ``BlockRunResult``: one list per
     recorder label, the recorded round indices (truncated at early stop) and
@@ -536,7 +668,7 @@ def history_from(recorder, result) -> dict:
     for j, name in enumerate(recorder.labels):
         history[name] = [float(v) for v in result.metrics[:, j]]
     history["stop_round"] = result.stop_round
-    return history
+    return annotate_violation(history)
 
 
 def render_footprints(k: int, d: int, n_k: int, itemsize: int = 4) -> str:

@@ -65,9 +65,10 @@ from repro.core import executor as exec_engine, metrics as metrics_lib, \
     mixing, topology as topo
 from repro.topo import lowering as topo_lowering, plan as topo_plan
 from repro.core.cola import (ColaConfig, RunResult,
+                             _as_schedule_fn,
                              _materialize_schedule, _reset_leavers,
                              _round_body, build_env, init_state)
-from repro.core.duality import neighborhood_mean
+from repro.core.duality import consensus_residual, neighborhood_mean
 from repro.core.partition import make_partition
 from repro.core.problems import Problem
 from repro.dist.sharding import (block_payload_pspec, cola_env_pspecs,
@@ -77,14 +78,19 @@ from repro.dist.sharding import (block_payload_pspec, cola_env_pspecs,
 
 def _dist_mixers(axis: str, local_nodes: int, conn: int, comm: str,
                  gossip_steps: int,
-                 plan: topo_plan.CommPlan | topo_plan.BlockPlan | None = None
+                 plan: topo_plan.CommPlan | topo_plan.BlockPlan | None = None,
+                 robust: str | None = None, robust_trim: int = 1,
+                 robust_clip: float | None = None
                  ) -> tuple[Callable, Callable]:
     """(mix_fn, grad_mix_fn) for the shard_map round body.
 
     The first mixer argument is the round's *comm payload* — the schedule
     slice the driver routes in: the replicated (K, K) W for ``dense`` /
     ``ring``, or the node-sharded ``(plan_diag, plan_coefs)`` pair for
-    ``plan``.
+    ``plan``. ``mix_fn(payload, v_send, v_self)`` follows the simulator's
+    wire-only attack contract: ``v_send`` is what goes over the wire,
+    ``v_self`` the honest local stack (None on unattacked rounds — the fast
+    path, bitwise identical to the pre-attack program).
 
     ``dense``: all-gather the (K, d) stack, fold W^B once (redundantly per
     device, O(B K^3) — cheap next to the solve), mix, slice back this
@@ -105,6 +111,17 @@ def _dist_mixers(axis: str, local_nodes: int, conn: int, comm: str,
     neighborhood buffer in one dot — bitwise the simulator's dense mix.
     Either way any sparse graph (and any churn reweighting of it) runs at
     neighbor-only cost with a single compiled program.
+
+    ``robust`` swaps the v-aggregation for the Byzantine-resilient
+    neighborhood statistic (``mixing.robust_neighborhood_mix``): on
+    ``dense`` every device robust-mixes the all-gathered full stack and
+    slices its block back (bitwise the simulator's ``robust_mix_steps``);
+    on ``plan`` the plan MUST be a BlockPlan — the assembled neighborhood
+    buffer feeds ``block_robust_mix_steps`` (``run_dist_cola`` compiles a
+    BlockPlan whenever robust is set, even at one node per device). The
+    gradient mixer stays LINEAR regardless — the simulator's
+    ``grad_mode='mixed'`` default is the plain ``dense_mix``, and robust
+    statistics defend the consensus state, not the gradient average.
     """
     if comm == "dense":
         def steps_mix(w, stack, steps):
@@ -154,7 +171,69 @@ def _dist_mixers(axis: str, local_nodes: int, conn: int, comm: str,
         raise ValueError(
             f"unknown comm {comm!r} (want 'dense', 'ring' or 'plan')")
 
-    mix_fn = lambda w, v: steps_mix(w, v, gossip_steps)
+    if robust is None:
+        if comm == "dense":
+            # bitwise the simulator's mix_power_wire: gather both the wire
+            # payload and (when attacked) the honest stack, run the full-K
+            # computation redundantly per device, slice this block back
+            def mix_fn(w, v_send, v_self):
+                if v_self is None:
+                    return steps_mix(w, v_send, gossip_steps)
+                full = lax.all_gather(v_send, axis, tiled=True)
+                full_self = lax.all_gather(v_self, axis, tiled=True)
+                mixed = mixing.mix_power_wire(w, full, full_self,
+                                              gossip_steps)
+                i = lax.axis_index(axis)
+                return lax.dynamic_slice_in_dim(mixed, i * local_nodes,
+                                                local_nodes)
+        elif comm == "ring":
+            def mix_fn(w, v_send, v_self):
+                if v_self is None or gossip_steps <= 0:
+                    return steps_mix(w, v_send, gossip_steps)
+                band = mixing.banded_weights(w, conn)
+                out = mixing.ring_mix_ppermute(v_send[0], axis, band, conn)
+                out = out + band[conn] * (v_self[0] - v_send[0])
+                for _ in range(gossip_steps - 1):
+                    out = mixing.ring_mix_ppermute(out, axis, band, conn)
+                return out[None]
+        elif isinstance(plan, topo_plan.BlockPlan):
+            def mix_fn(payload, v_send, v_self):
+                return topo_lowering.block_mix_steps_wire(
+                    v_send, v_self, axis, plan, payload, gossip_steps)
+        else:
+            def mix_fn(payload, v_send, v_self):
+                diag, coefs = payload
+                out = topo_lowering.plan_mix_steps_wire(
+                    v_send[0], None if v_self is None else v_self[0],
+                    axis, plan, diag[0], coefs[:, 0], gossip_steps)
+                return out[None]
+    elif comm == "dense":
+        def mix_fn(w, v_send, v_self):
+            if gossip_steps <= 0:
+                return v_send
+            full = lax.all_gather(v_send, axis, tiled=True)   # (K, d)
+            full_self = (None if v_self is None
+                         else lax.all_gather(v_self, axis, tiled=True))
+            mixed = mixing.robust_mix_steps(w, full, robust,
+                                            trim=robust_trim,
+                                            clip=robust_clip,
+                                            steps=gossip_steps,
+                                            self_stack=full_self)
+            i = lax.axis_index(axis)
+            return lax.dynamic_slice_in_dim(mixed, i * local_nodes,
+                                            local_nodes)
+    elif comm == "plan" and isinstance(plan, topo_plan.BlockPlan):
+        def mix_fn(payload, v_send, v_self):
+            return topo_lowering.block_robust_mix_steps(
+                v_send, axis, plan, payload, robust, trim=robust_trim,
+                clip=robust_clip, steps=gossip_steps, v_self=v_self)
+    else:
+        raise ValueError(
+            f"robust={robust!r} needs comm='dense' or a block-level plan; "
+            f"got comm={comm!r} (run_dist_cola compiles the BlockPlan and "
+            "re-dispatches 'ring' automatically)")
+    # one LINEAR step for grad_mode='mixed', matching the simulator's
+    # dense_mix default even when the v aggregation is robust
     grad_mix_fn = lambda w, g: steps_mix(w, g, 1)
     return mix_fn, grad_mix_fn
 
@@ -209,17 +288,30 @@ def _certificate_dist_record(rec, mesh, axis: str, local_nodes: int,
     if comm == "ring":
         # the ppermute neighborhood must match the recorder's mask; a mask
         # that is NOT the circulant band (historically a ValueError)
-        # dispatches into the plan path — compile the mask's own support
+        # dispatches into the plan path — compile the mask's own support.
+        # Attack-aware mode also needs per-round mask rows (dishonest
+        # columns drop out of the Eq.-10 mean), which the band path has no
+        # slot for.
         band = np.zeros((k, k))
         idx = np.arange(k)
         for off in range(-conn, conn + 1):
             band[idx, (idx + off) % k] = 1.0
-        if not np.array_equal(np.asarray(rec.neigh_mask) != 0, band != 0):
+        if (rec.attack_aware or not np.array_equal(
+                np.asarray(rec.neigh_mask) != 0, band != 0)):
             comm, plan = "plan", compile_support(np.asarray(rec.neigh_mask))
     if comm == "plan" and plan is None:
         plan = compile_support(np.asarray(rec.neigh_mask))
 
-    def body(x_l, v_l, a_l, gp_l, m_l, nm_l, thr):
+    def body(x_l, v_l, a_l, gp_l, m_l, nm_l, thr, hon):
+        hon_l = None
+        if rec.attack_aware:
+            # hon is the replicated (K,) honesty mask from the attack
+            # schedule: columns mask the neighborhood mean (a liar's
+            # gradient never enters it), the own-node slice masks the
+            # cohort sums and conditions
+            nm_l = nm_l * hon[None, :].astype(nm_l.dtype)
+            hon_l = lax.dynamic_slice_in_dim(
+                hon, lax.axis_index(axis) * local_nodes, local_nodes)
         grads = jax.vmap(rec.problem.grad_f)(v_l)            # (ln, d)
         if comm == "plan" and isinstance(plan, topo_plan.BlockPlan):
             # block exchange of the whole (ln, d) gradient block; the
@@ -254,14 +346,22 @@ def _certificate_dist_record(rec, mesh, axis: str, local_nodes: int,
                                     masks=m_l)
         local_gap, disagree = local.local_row_inputs(x_l, v_l, grads,
                                                      neigh_mean)
-        return rec.summarize(local_gap, disagree, grad_thresh=thr,
+        # Lemma-1 tamper detection: local [sum_l v_l, sum_l A_l x_l]
+        # partials completed with ONE stacked (2, d) psum — O(d), no stack
+        # gathers; identity on a 1-device mesh (bitwise the simulator)
+        sums = lax.psum(rec.invariant_sums(x_l, v_l, a_l, honest=hon_l),
+                        axis)
+        resid = consensus_residual(sums[0], sums[1], k)
+        return rec.summarize(local_gap, disagree, resid=resid,
+                             grad_thresh=thr, honest=hon_l,
                              psum=lambda s: lax.psum(s, axis),
                              pmax=lambda s: lax.pmax(s, axis))
 
     node, repl = P(axis), P()
     shard = mixing.shard_map(
         body, mesh,
-        in_specs=(node, node, node, node, node, node, repl), out_specs=P())
+        in_specs=(node, node, node, node, node, node, repl, repl),
+        out_specs=P())
 
     def record(state, sched=None):
         if rec.dynamic:
@@ -270,8 +370,13 @@ def _certificate_dist_record(rec, mesh, axis: str, local_nodes: int,
             nm, thr = sched["cert_mask"], sched["cert_grad_thresh"]
         else:
             nm, thr = rec.neigh_mask, jnp.asarray(rec.grad_thresh)
+        if rec.attack_aware:
+            hon = (jnp.asarray(sched["atk_dishonest"])
+                   <= 0).astype(state.v_stack.dtype)
+        else:
+            hon = jnp.ones((k,), state.v_stack.dtype)  # unused, DCE'd
         return shard(state.x_parts, state.v_stack, rec.a_parts,
-                     rec.gp_parts, rec.masks, nm, thr)
+                     rec.gp_parts, rec.masks, nm, thr, hon)
 
     return record
 
@@ -342,6 +447,7 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
                   active_schedule=None, budget_schedule=None,
                   leave_mode: str = "freeze", seed: int = 0,
                   w_override: np.ndarray | None = None,
+                  attacks=None,
                   block_size: int = 64) -> RunResult:
     """Run Algorithm 1 with the node axis sharded over ``mesh``.
 
@@ -363,6 +469,17 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         "plan" automatically when churn is scheduled, W is not
         circulant-banded, or the mesh is smaller than K.
       conn: connectivity of the circulant band for ``comm="ring"``.
+      attacks: the same ``repro.attack`` scenarios ``run_cola`` accepts —
+        they transform the identical pre-materialized schedule, so a seeded
+        attack corrupts the distributed run bitwise like the simulator.
+        ``Eavesdropper`` taps are simulator-only (rejected here).
+
+    ``cfg.robust`` swaps the v aggregation for the Byzantine-resilient
+    neighborhood statistic on every comm path: ``dense`` robust-mixes the
+    all-gathered stack; ``ring``/``plan`` compile a block-level plan (even
+    at one node per device — the robust statistic needs the assembled
+    neighborhood buffer) and run ``block_robust_mix_steps``, bitwise the
+    simulator's ``robust_mix_steps``.
 
     The certificate recorder records under shard_map from local gradients
     (``ppermute``/``psum``, O(colors·(K/M)·d) per device per record round)
@@ -383,6 +500,10 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
                          f"mesh axis {axis!r}")
     local_nodes = k // m
 
+    active_schedule = _as_schedule_fn(active_schedule, rounds, k,
+                                      "active_schedule")
+    budget_schedule = _as_schedule_fn(budget_schedule, rounds, k,
+                                      "budget_schedule")
     base_w = (w_override if w_override is not None
               else topo.metropolis_weights(graph))
     plan = None
@@ -391,8 +512,11 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         # circulant W with one node per device; churn reweighting, a
         # non-circulant graph, or a mesh smaller than K now dispatches into
         # the compiled topology-program path instead of the historical
-        # ValueErrors ("churn forces comm='dense'" / "one node per device")
-        if active_schedule is not None or local_nodes != 1:
+        # ValueErrors ("churn forces comm='dense'" / "one node per device");
+        # robust aggregation is nonlinear — it also needs the plan path's
+        # assembled neighborhood buffer
+        if (active_schedule is not None or local_nodes != 1
+                or cfg.robust is not None):
             comm = "plan"
         else:
             try:
@@ -411,8 +535,13 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
             np.fill_diagonal(off, False)
             support = support | off
         # one node per device lowers per-node colors; K/M > 1 nodes per
-        # device quotients the graph onto the mesh (block-level colors)
-        plan = (topo_plan.compile_plan(support) if local_nodes == 1
+        # device quotients the graph onto the mesh (block-level colors).
+        # Robust aggregation always takes the block form — the trimmed-mean
+        # / median / clip statistic runs over the ppermute-assembled
+        # neighborhood buffer, which only the BlockPlan materializes (a
+        # 1-node block is a valid BlockPlan)
+        plan = (topo_plan.compile_plan(support)
+                if local_nodes == 1 and cfg.robust is None
                 else topo_plan.compile_block_plan(support, m))
 
     part = make_partition(problem.n, k)
@@ -424,6 +553,22 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
     sched = _materialize_schedule(graph, rounds, active_schedule,
                                   budget_schedule, leave_mode, seed, base_w,
                                   dtype)
+    atk_info = None
+    if attacks is not None:
+        from repro import attack as attack_lib
+        # same transform order as the simulator: churn/budgets materialize,
+        # attacks corrupt, then the certificate/plan schedules derive from
+        # the corrupted exchange
+        sched, atk_info = attack_lib.apply_attacks(
+            sched, attacks,
+            attack_lib.AttackContext(graph=graph, rounds=rounds, k=k,
+                                     d=problem.d, dtype=dtype, seed=seed))
+        if atk_info.tap_nodes:
+            raise ValueError(
+                "Eavesdropper taps are simulator-only (per-round payload "
+                "trajectories are an analysis artifact) — record them with "
+                "run_cola(attacks=...)")
+    atk_names = atk_info.entry_names if atk_info else ()
     has_budget = "budgets" in sched
     has_reset = "leavers" in sched
 
@@ -431,6 +576,10 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
                                     base_w, eps)
     if active_schedule is not None:
         rec = metrics_lib.dynamize(rec)  # churn-aware certificate inputs
+    if "dishonest" in atk_names:
+        # payload-corrupting attacks: certificates audit the honest cohort
+        # against the schedule's ground-truth mask (metrics.attackify)
+        rec = metrics_lib.attackify(rec)
 
     # lay the node axis of state + env over the mesh axis up front so the
     # donated buffers never migrate between blocks
@@ -445,12 +594,15 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         comm, conn, plan)
 
     mix_fn, grad_mix_fn = _dist_mixers(axis, local_nodes, conn, comm,
-                                       cfg.gossip_steps, plan)
+                                       cfg.gossip_steps, plan,
+                                       robust=cfg.robust,
+                                       robust_trim=cfg.robust_trim,
+                                       robust_clip=cfg.robust_clip)
     body = _round_body(problem, part, cfg, mix_fn=mix_fn,
                        grad_mix_fn=grad_mix_fn)
 
     def shard_round(st, env_l, w_t, active_l, budgets_l, leavers_l,
-                    reset_any):
+                    reset_any, atk_l):
         if has_reset:
             # the simulator's reset, with the node-sum completed across
             # devices — shares the Lemma-1 invariant implementation
@@ -461,7 +613,8 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
                     total_fn=lambda c: lax.psum(jnp.sum(c, axis=0), axis)),
                 lambda ss: ss, st)
         return body(st, env_l, w_t, active_l,
-                    budgets_l if has_budget else None)
+                    budgets_l if has_budget else None,
+                    atk_l if atk_names else None)
 
     # node-axis operands shard over `axis`; the per-round scalars are
     # replicated. The comm payload is the replicated (K, K) W for
@@ -477,11 +630,14 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         payload_spec = block_payload_pspec(axis)
     else:
         payload_spec = plan_payload_pspecs(axis)
+    # attack entries are per-node (K,)-rows (the (T, K, d) bias slices to
+    # (K, d)) — they shard over the node axis like the state they corrupt
     shard_step = mixing.shard_map(
         shard_round, mesh,
         in_specs=(state_spec, env_spec, payload_spec, node,
                   node if has_budget else repl,
-                  node if has_reset else repl, repl),
+                  node if has_reset else repl, repl,
+                  {n: node for n in atk_names}),
         out_specs=state_spec)
 
     zeros_k = np.zeros((rounds,), dtype)
@@ -493,10 +649,12 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
             payload = s_t["plan_w"]
         else:
             payload = (s_t["plan_diag"], s_t["plan_coefs"])
+        atk = {n: s_t["atk_" + n] for n in atk_names}
         st = shard_step(st, env_ctx, payload, s_t["active"],
                         s_t["budgets"] if has_budget else s_t["_pad"],
                         s_t["leavers"] if has_reset else s_t["_pad"],
-                        s_t["reset_any"] if has_reset else s_t["_pad"])
+                        s_t["reset_any"] if has_reset else s_t["_pad"],
+                        atk)
         return st, None
 
     sched = dict(sched)
@@ -505,7 +663,10 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
     cad = metrics_lib.as_cadence(record_every)
     rec_mask = (None if cad
                 else exec_engine.record_flags(rounds, record_every))
-    if dist_rec.uses_schedule:
+    cert = metrics_lib.first_certificate(rec)
+    if cert is not None and cert.dynamic:
+        # (attack-aware recorders also read the schedule, but their entry —
+        # atk_dishonest — was materialized by apply_attacks already)
         sched.update(metrics_lib.certificate_schedule(
             rec, sched["w"], sched["active"],
             np.ones((rounds,), dtype=bool) if cad else rec_mask))
@@ -516,8 +677,12 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         # schedule, the block path re-enters it row-sharded as ``plan_w``
         sched_cls = (topo_plan.BlockPlanSchedule if block_mode
                      else topo_plan.PlanSchedule)
+        # a LinkCorruption-rewritten W stack varies per round even without
+        # churn — the static broadcast fast path would bake round 0's links
+        w_static = (active_schedule is None
+                    and not (atk_info is not None and atk_info.w_modified))
         sched.update(sched_cls.from_w_stack(
-            plan, sched["w"], static=active_schedule is None).entries())
+            plan, sched["w"], static=w_static).entries())
         del sched["w"]
     res = exec_engine.run_round_blocks(
         step_fn, state, sched, context=env, recorder=dist_rec,
@@ -525,6 +690,7 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         num_rounds=rounds,
         cache_key=("cola-dist", exec_engine.fingerprint(problem), part, cfg,
                    mesh, axis, comm, conn, has_budget, has_reset,
-                   dist_rec.cache_token()))
+                   dist_rec.cache_token(),
+                   atk_info.token if atk_info else None))
     return RunResult(state=res.state,
                      history=metrics_lib.history_from(dist_rec, res))

@@ -33,6 +33,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import executor as exec_engine, metrics as metrics_lib, \
     mixing, topology as topo
+from repro.optim import privacy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +44,13 @@ class GossipConfig:
     topology: str = "ring"        # any key of topology.TOPOLOGIES
     gossip_steps: int = 1         # B mixing applications per round (App. E.2)
     mix_every: int = 1            # local steps between gossip rounds
+    # Byzantine-resilient aggregation of the neighbor replicas — the same
+    # robust mixing layer CoLA's v-aggregation uses (repro.core.mixing);
+    # dense (vmap/GSPMD) path only: the ppermute ring folds W^B and has no
+    # per-neighborhood buffer to aggregate over
+    robust: str | None = None     # None | "trim" | "median" | "clip"
+    robust_trim: int = 1
+    robust_clip: float | None = None
 
     def graph(self) -> topo.Topology:
         return topo.TOPOLOGIES[self.topology](self.num_nodes)
@@ -75,15 +83,54 @@ def ring_mix_pytree(stacked_local: Any, axis: str, band: jax.Array,
     return jax.tree.map(mix_leaf, stacked_local)
 
 
+def robust_mix_pytree(w: jax.Array, stacked: Any, mode: str, *,
+                      trim: int = 1, clip: float | None = None,
+                      steps: int = 1) -> Any:
+    """Byzantine-resilient gossip over a (K, ...)-stacked pytree: each leaf
+    flattens to a (K, d) stack and goes through the same
+    ``mixing.robust_mix_steps`` aggregation CoLA's v-mixing uses."""
+    def mix_leaf(p):
+        flat = p.reshape(p.shape[0], -1)
+        out = mixing.robust_mix_steps(w, flat, mode, trim=trim, clip=clip,
+                                      steps=steps)
+        return out.reshape(p.shape).astype(p.dtype)
+    return jax.tree.map(mix_leaf, stacked)
+
+
 def _param_mixer(gcfg: GossipConfig, mesh, axis: str | None,
-                 conn: int | None) -> Callable:
-    """``mix(w, params) -> params`` applying the B gossip steps — the ONE
-    mixing dispatch both gossip drivers (per-round ``make_gossip_step`` and
-    the block runner) share: dense (K, K) pytree mix without a mesh, banded
+                 conn: int | None,
+                 dp: privacy.DPConfig | None = None) -> Callable:
+    """``mix(w, params, key=None) -> params`` applying the B gossip steps —
+    the ONE mixing dispatch both gossip drivers (per-round
+    ``make_gossip_step`` and the block runner) share: dense (K, K) pytree
+    mix without a mesh (optionally robust and/or DP-noised), banded
     ``ppermute`` ring under shard_map with one (circulant W of connectivity
-    ``conn``)."""
-    def mix(w, params):
+    ``conn``). ``key`` is consumed only by the DP wire mechanism."""
+    if gcfg.robust is not None and mesh is not None:
+        raise ValueError(
+            "robust= gossip needs the dense path: the ppermute ring folds "
+            "W^B and exposes no per-neighborhood buffer (drop mesh/axis)")
+    if dp is not None:
+        if mesh is not None:
+            raise ValueError("dp= gossip is implemented on the dense path "
+                             "(drop mesh/axis)")
+        if gcfg.robust is not None:
+            raise ValueError(
+                "dp= with robust= is unsupported: per-link noise gives "
+                "every receiver a distinct wire view, which the shared "
+                "neighborhood buffer of the robust aggregation cannot "
+                "represent")
+
+    def mix(w, params, key=None):
+        if dp is not None:
+            return privacy.noisy_dense_mix(w, params, dp, key,
+                                           gcfg.gossip_steps)
         if mesh is None:
+            if gcfg.robust is not None:
+                return robust_mix_pytree(w, params, gcfg.robust,
+                                         trim=gcfg.robust_trim,
+                                         clip=gcfg.robust_clip,
+                                         steps=gcfg.gossip_steps)
             return mix_pytree(w, params, gcfg.gossip_steps)
         band = mixing.banded_weights(w, conn or 1)
         shard = mixing.shard_map(
@@ -97,7 +144,8 @@ def _param_mixer(gcfg: GossipConfig, mesh, axis: str | None,
 
 def make_gossip_step(local_step: Callable, gcfg: GossipConfig, *,
                      mesh=None, axis: str | None = None,
-                     conn: int | None = None) -> Callable:
+                     conn: int | None = None,
+                     dp: privacy.DPConfig | None = None) -> Callable:
     """Wrap a local (state, batch) -> (state, metrics) step with gossip mixing.
 
     Returns step(states, batches, w, active) operating on (K, ...)-stacked
@@ -109,11 +157,16 @@ def make_gossip_step(local_step: Callable, gcfg: GossipConfig, *,
 
     With ``mesh``/``axis`` the mixing runs as a ppermute ring under a
     shard_map over that axis (requires circulant W of connectivity ``conn``);
-    otherwise a dense (K,K) mix (vmap/GSPMD path, any W).
+    otherwise a dense (K,K) mix (vmap/GSPMD path, any W) — optionally
+    Byzantine-robust (``gcfg.robust``) or DP-noised (``dp=``, see
+    ``repro.optim.privacy``; pass the round index as ``dp_round`` so the
+    key schedule stays reproducible, and account one
+    ``dp.releases_per_mix_round(...)`` batch per mixed round).
     """
-    mix_params = _param_mixer(gcfg, mesh, axis, conn)
+    mix_params = _param_mixer(gcfg, mesh, axis, conn, dp)
+    base_key = None if dp is None else jax.random.PRNGKey(dp.seed)
 
-    def step(states, batches, w, active, do_mix=True):
+    def step(states, batches, w, active, do_mix=True, dp_round=0):
         new_states, metrics = jax.vmap(local_step)(states, batches)
         keep = lambda new, old: jax.tree.map(
             lambda a, b: jnp.where(
@@ -125,8 +178,10 @@ def make_gossip_step(local_step: Callable, gcfg: GossipConfig, *,
             # communication volume by mix_every at a Theta-quantified
             # convergence cost (App. E.2 in reverse)
             return new_states, metrics
-        return new_states._replace(params=mix_params(w, new_states.params)), \
-            metrics
+        key = (None if base_key is None
+               else jax.random.fold_in(base_key, dp_round))
+        return new_states._replace(
+            params=mix_params(w, new_states.params, key)), metrics
 
     return jax.jit(step, static_argnames=("do_mix",))
 
@@ -140,7 +195,8 @@ def mix_schedule(rounds: int, mix_every: int) -> np.ndarray:
 def make_gossip_block_runner(local_step: Callable, gcfg: GossipConfig, *,
                              mesh=None, axis: str | None = None,
                              conn: int | None = None,
-                             recorder=None) -> Callable:
+                             recorder=None,
+                             dp: privacy.DPConfig | None = None) -> Callable:
     """Round-block gossip-DP: many local-step+mix rounds per device dispatch.
 
     The per-round ``make_gossip_step`` path dispatches one jitted program per
@@ -168,9 +224,17 @@ def make_gossip_block_runner(local_step: Callable, gcfg: GossipConfig, *,
       mix:     (T,) bool gossip-mix flags (see ``mix_schedule``),
     returning (states, metrics) — metrics leaves are (T, ...) stacks — or,
     when a recorder is set, (states, metrics, history).
+
+    With ``dp=`` every mixed round applies the clipped Gaussian wire
+    mechanism (``repro.optim.privacy``) with a per-round folded key, and
+    the returned history (recorder path) gains ``dp_epsilon`` — the
+    cumulative zCDP-accounted epsilon at each recorded round, counting
+    ``gossip_steps * deg_max`` releases per mixed round under per-link
+    noise — plus a ``dp`` summary dict (final epsilon/rho/releases).
     NOTE: ``states`` buffers are donated — do not reuse the argument.
     """
-    mix_params = _param_mixer(gcfg, mesh, axis, conn)
+    mix_params = _param_mixer(gcfg, mesh, axis, conn, dp)
+    base_key = None if dp is None else jax.random.PRNGKey(dp.seed)
 
     def step_fn(states, _ctx, sched_t):
         new_states, metrics = jax.vmap(local_step)(states, sched_t["batch"])
@@ -179,22 +243,43 @@ def make_gossip_block_runner(local_step: Callable, gcfg: GossipConfig, *,
             lambda a, b: jnp.where(
                 active.reshape((-1,) + (1,) * (a.ndim - 1)) > 0, a, b),
             new_states, states)
+        key = (None if base_key is None
+               else jax.random.fold_in(base_key, sched_t["dp_round"]))
         mixed = lax.cond(
             sched_t["mix"],
-            lambda p: mix_params(sched_t["w"], p),
+            lambda p: mix_params(sched_t["w"], p, key),
             lambda p: p, keep.params)
         return keep._replace(params=mixed), metrics
 
     def run(states, batches, w, active, mix, *, block_size: int = 32,
             record_mask=None):
         sched = {"batch": batches, "w": w, "active": active, "mix": mix}
+        if dp is not None:
+            # per-round key index: noise draws are a function of the round,
+            # not of block boundaries or early stopping
+            sched["dp_round"] = np.arange(len(np.asarray(mix)))
         res = exec_engine.run_round_blocks(step_fn, states, sched,
                                            recorder=recorder,
                                            record_mask=record_mask,
                                            block_size=block_size)
         if recorder is None:
             return res.state, res.aux
-        return res.state, res.aux, metrics_lib.history_from(recorder, res)
+        history = metrics_lib.history_from(recorder, res)
+        if dp is not None:
+            mix_host = np.asarray(mix, dtype=bool)
+            rounds_rec = np.asarray(history["round"], dtype=np.int64)
+            cum = np.cumsum(mix_host)
+            history["dp_epsilon"] = privacy.epsilon_schedule(
+                dp, gcfg.graph(), gcfg.gossip_steps,
+                cum[np.clip(rounds_rec, 0, len(cum) - 1)]).tolist()
+            final = privacy.GaussianAccountant(dp.sigma, dp.delta).add(
+                int(cum[-1]) * dp.releases_per_mix_round(gcfg.graph(),
+                                                         gcfg.gossip_steps))
+            history["dp"] = {
+                "clip": dp.clip, "sigma": dp.sigma, "delta": dp.delta,
+                "per_link": dp.per_link, "releases": final.releases,
+                "rho": final.rho, "epsilon": final.epsilon()}
+        return res.state, res.aux, history
 
     return run
 

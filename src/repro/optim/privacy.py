@@ -1,0 +1,180 @@
+"""Differential privacy for the gossip parameter exchange.
+
+Every gossip mix round each node EMITS its (clipped) parameter vector onto
+the wire; an eavesdropper on the links (``repro.attack.Eavesdropper`` is the
+in-repo threat model) sees one Gaussian-noised copy per release. This module
+provides the two pieces the gossip drivers need:
+
+* the mechanism: per-node L2 clipping to ``clip`` plus Gaussian wire noise
+  with std ``sigma * 2 * clip`` — the L2 sensitivity of a clipped emission
+  under replace-one-node adjacency is ``2 * clip``;
+* the accounting: a zero-concentrated-DP (zCDP) Gaussian accountant
+  [Bun & Steinke 2016]. Each release with noise multiplier ``sigma`` costs
+  ``rho = 1 / (2 sigma^2)``; rho composes additively, and converts to
+  ``(epsilon, delta)`` via ``epsilon = rho + 2 sqrt(rho ln(1/delta))``.
+
+The release count is where per-LINK noise differs from per-round noise, and
+is the contract the gossip drivers must get right:
+
+* ``per_link=True`` (plan/ppermute-style gossip — each directed edge
+  carries an independent draw): an adversary observing all links sees
+  ``deg_max`` independent noisy copies per emission, so one mix round of
+  B gossip steps costs ``B * deg_max`` releases per node.
+* ``per_link=False`` (broadcast gossip — one draw shared by all of a
+  node's neighbors): ``B`` releases per mix round.
+
+Noise is injected on the WIRE only: the off-diagonal W terms. A node's own
+``w_kk`` contribution never leaves the node and stays noiseless.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DPConfig:
+    """Gaussian-mechanism parameters for the gossip wire.
+
+    ``clip``     — per-node L2 bound on the emitted parameter vector (the
+                   whole pytree, flattened) enforced before every emission;
+    ``sigma``    — noise multiplier: wire noise std is ``sigma * 2 * clip``;
+    ``delta``    — target delta for the (epsilon, delta) conversion;
+    ``per_link`` — independent draw per directed link (True, matches plan
+                   gossip) vs one draw broadcast to all neighbors (False);
+    ``seed``     — root of the jax.random key schedule (keys are folded
+                   with the round index and gossip step, so the noise
+                   stream is reproducible and schedule-independent).
+    """
+
+    clip: float
+    sigma: float
+    delta: float = 1e-5
+    per_link: bool = True
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.clip <= 0 or self.sigma <= 0:
+            raise ValueError("DPConfig needs clip > 0 and sigma > 0")
+        if not (0 < self.delta < 1):
+            raise ValueError(f"delta must be in (0, 1), got {self.delta}")
+
+    @property
+    def sensitivity(self) -> float:
+        # replace-one-node adjacency: two clipped vectors differ by <= 2*clip
+        return 2.0 * self.clip
+
+    @property
+    def noise_std(self) -> float:
+        return self.sigma * self.sensitivity
+
+    def releases_per_mix_round(self, graph, gossip_steps: int) -> int:
+        """Gaussian releases per node per gossip-mix round: every gossip
+        step re-emits, and per-link noise hands each of up to ``deg_max``
+        neighbors an independent copy."""
+        return gossip_steps * (max_degree(graph) if self.per_link else 1)
+
+
+def max_degree(graph) -> int:
+    """Largest neighbor count (excluding self) in the topology."""
+    adj = np.asarray(graph.adjacency, dtype=bool)
+    np.fill_diagonal(adj, False)
+    return int(adj.sum(axis=1).max())
+
+
+class GaussianAccountant:
+    """Additive zCDP composition for repeated Gaussian releases.
+
+    ``add(n)`` registers n releases at noise multiplier ``sigma``;
+    ``epsilon()`` converts the accumulated rho to epsilon at ``delta``.
+    """
+
+    def __init__(self, sigma: float, delta: float = 1e-5):
+        if sigma <= 0:
+            raise ValueError("sigma must be > 0")
+        self.sigma = float(sigma)
+        self.delta = float(delta)
+        self.releases = 0
+
+    def add(self, n: int = 1) -> "GaussianAccountant":
+        if n < 0:
+            raise ValueError("cannot un-release")
+        self.releases += int(n)
+        return self
+
+    @property
+    def rho(self) -> float:
+        return self.releases / (2.0 * self.sigma ** 2)
+
+    def epsilon(self, delta: float | None = None) -> float:
+        delta = self.delta if delta is None else delta
+        rho = self.rho
+        if rho == 0.0:
+            return 0.0
+        return rho + 2.0 * math.sqrt(rho * math.log(1.0 / delta))
+
+
+def epsilon_schedule(dp: DPConfig, graph, gossip_steps: int,
+                     mixes_so_far: np.ndarray) -> np.ndarray:
+    """Cumulative epsilon after each entry of ``mixes_so_far`` (a running
+    count of completed gossip-mix rounds) — the host-side curve the block
+    runner attaches to run histories."""
+    per_round = dp.releases_per_mix_round(graph, gossip_steps)
+    out = np.empty(len(mixes_so_far), dtype=np.float64)
+    for i, m in enumerate(np.asarray(mixes_so_far, dtype=np.int64)):
+        acct = GaussianAccountant(dp.sigma, dp.delta).add(int(m) * per_round)
+        out[i] = acct.epsilon()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the mechanism: clip + wire noise, pytree-stacked over the node axis
+# ---------------------------------------------------------------------------
+
+def clip_params(params_stack, clip: float):
+    """Scale each node's FULL parameter vector (all leaves, flattened) to
+    L2 norm <= clip. One global factor per node, as in DP-SGD clipping."""
+    leaves = jax.tree.leaves(params_stack)
+    sq = sum(jnp.sum(p.astype(jnp.float32).reshape(p.shape[0], -1) ** 2,
+                     axis=1) for p in leaves)                       # (K,)
+    scale = jnp.minimum(1.0, clip / jnp.sqrt(sq + 1e-30))
+    return jax.tree.map(
+        lambda p: (p * scale.reshape((-1,) + (1,) * (p.ndim - 1))
+                   .astype(p.dtype)),
+        params_stack)
+
+
+def noisy_dense_mix(w, params_stack, dp: DPConfig, key, steps: int = 1):
+    """B gossip steps of the dense (K, K) mix with the DP wire mechanism:
+    each step re-clips the circulating values (every emission is clipped)
+    and adds Gaussian noise on the off-diagonal W support — per directed
+    link (independent (K, K, ...) draws) or per sender ((K, ...) draws
+    shared by the row), matching ``dp.per_link``.
+    """
+    k = w.shape[0]
+    wire = w * (1.0 - jnp.eye(k, dtype=w.dtype))   # off-diagonal: the links
+    std = dp.noise_std
+    out = params_stack
+    for s in range(steps):
+        out = clip_params(out, dp.clip)
+        key_s = jax.random.fold_in(key, s)
+        mixed = []
+        flat, treedef = jax.tree.flatten(out)
+        for i, p in enumerate(flat):
+            key_i = jax.random.fold_in(key_s, i)
+            if dp.per_link:
+                xi = jax.random.normal(key_i, (k,) + p.shape, dtype=p.dtype)
+                noise = jnp.einsum("kl,kl...->k...",
+                                   wire.astype(p.dtype), xi) * std
+            else:
+                xi = jax.random.normal(key_i, p.shape, dtype=p.dtype)
+                noise = jnp.einsum("kl,l...->k...",
+                                   wire.astype(p.dtype), xi) * std
+            dot = jnp.einsum("kl,l...->k...", w.astype(p.dtype), p)
+            mixed.append((dot + noise).astype(p.dtype))
+        out = jax.tree.unflatten(treedef, mixed)
+    return out

@@ -35,6 +35,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import mixing
 from repro.topo.plan import BlockPlan, CommPlan
 
 
@@ -71,6 +72,19 @@ def plan_mix_steps(v_local, axis_name: str, plan: CommPlan, diag, coefs,
     for _ in range(steps):
         out = plan_mix_step(out, axis_name, plan, diag, coefs)
     return out
+
+
+def plan_mix_steps_wire(v_send, v_self, axis_name: str, plan: CommPlan,
+                        diag, coefs, steps: int):
+    """``plan_mix_steps`` where the FIRST step's payload may be a wire lie
+    (``repro.attack``): the node ppermutes ``v_send`` but its own W_kk term
+    uses its honest ``v_self`` (pass None for the honest fast path). Later
+    steps re-mix received values, which are honest."""
+    if v_self is None or steps <= 0:
+        return plan_mix_steps(v_send, axis_name, plan, diag, coefs, steps)
+    first = plan_mix_step(v_send, axis_name, plan, diag, coefs)
+    first = first + diag * (v_self - v_send)
+    return plan_mix_steps(first, axis_name, plan, diag, coefs, steps - 1)
 
 
 def block_gather_neighbors(x_block, axis_name: str, plan: BlockPlan):
@@ -120,6 +134,77 @@ def block_mix_steps(v_block, axis_name: str, plan: BlockPlan, w_rows,
     out = v_block
     for _ in range(steps):
         out = block_mix_step(out, axis_name, plan, w_rows)
+    return out
+
+
+def block_mix_steps_wire(v_send, v_self, axis_name: str, plan: BlockPlan,
+                         w_rows, steps: int):
+    """``block_mix_steps`` where the FIRST step's payload may be a wire lie
+    (``repro.attack``): each node of the block sends ``v_send`` but its own
+    W_kk term uses its honest ``v_self`` (pass None for the honest fast
+    path). Later steps re-mix received values, which are honest."""
+    if v_self is None or steps <= 0:
+        return block_mix_steps(v_send, axis_name, plan, w_rows, steps)
+    ln = plan.local_nodes
+    first = block_mix_step(v_send, axis_name, plan, w_rows)
+    row_ids = lax.axis_index(axis_name) * ln + jnp.arange(ln)
+    diag = jnp.take_along_axis(w_rows, row_ids[:, None], axis=1)  # (ln, 1)
+    delta = (v_self - v_send).reshape(ln, -1)
+    first = first + (diag.astype(delta.dtype) * delta).reshape(v_send.shape)
+    return block_mix_steps(first, axis_name, plan, w_rows, steps - 1)
+
+
+def block_robust_mix_step(v_block, axis_name: str, plan: BlockPlan, w_rows,
+                          mode: str, *, trim: int = 1,
+                          clip: float | None = None, v_self=None):
+    """One ROBUST gossip step for THIS device's (K/M, ...) node block: the
+    Byzantine-resilient replacement for ``block_mix_step``'s dot.
+
+    Assembles the same ppermute neighborhood buffer, then aggregates each of
+    this device's node rows with ``mixing.robust_neighborhood_mix`` (trimmed
+    mean / median / norm clipping) instead of the linear W contraction. The
+    robust rule depends only on buffer slots inside each node's W-row
+    support — which the coverage contract guarantees were exchanged — so the
+    result is BITWISE the simulator's ``mixing.robust_mix_dense`` on every
+    mesh size, exactly like the linear block path.
+
+    Bitwise caveat: the guarantee holds for ``mode="trim"`` / ``"median"``
+    (selection + the shared weighted einsum). ``mode="clip"`` adds a
+    sqrt/divide chain (deviation norms -> tau / norm scale) that XLA fuses
+    differently inside the full scanned round program depending on the
+    shard shape — a standalone call is bitwise on every mesh, but whole
+    attacked runs drift by ~1 ulp (observed 6e-8) on multi-device meshes.
+    End-to-end parity for clip is therefore allclose, not bitwise.
+
+    ``v_self`` (same shape as ``v_block``) supplies each node's honest state
+    when ``v_block`` is an attacked wire payload: the node's own buffer slot
+    is overridden so a liar's lie travels to neighbors but never enters its
+    own aggregate (wire-only attack semantics).
+    """
+    ln = plan.local_nodes
+    flat = v_block.reshape(ln, -1)
+    buf = block_gather_neighbors(flat, axis_name, plan)          # (K, d)
+    row_ids = lax.axis_index(axis_name) * ln + jnp.arange(ln)
+    ov = None if v_self is None else v_self.reshape(ln, -1)
+    out = mixing.robust_neighborhood_mix(w_rows, buf, row_ids, mode,
+                                         trim=trim, clip=clip,
+                                         self_override=ov)
+    return out.reshape(v_block.shape).astype(v_block.dtype)
+
+
+def block_robust_mix_steps(v_block, axis_name: str, plan: BlockPlan, w_rows,
+                           mode: str, *, trim: int = 1,
+                           clip: float | None = None, steps: int = 1,
+                           v_self=None):
+    """B consecutive robust block-mode gossip steps — sequential on the wire
+    (robust aggregation has no W^B fold), matching
+    ``mixing.robust_mix_steps`` bitwise. ``v_self`` applies to the first
+    step only: after one exchange the circulating values are honest."""
+    out = v_block
+    for i in range(steps):
+        out = block_robust_mix_step(out, axis_name, plan, w_rows, mode,
+                                    trim=trim, clip=clip,
+                                    v_self=v_self if i == 0 else None)
     return out
 
 

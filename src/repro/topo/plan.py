@@ -559,3 +559,52 @@ def block_mix_dense(plan: BlockPlan, w, v_stack, *, check: bool = True):
 def mix_with_block_plan(plan: BlockPlan, w, v_stack):
     """Convenience: one gossip step of ``w`` through the block plan."""
     return block_mix_dense(plan, w, v_stack)
+
+
+def block_robust_mix_dense(plan: BlockPlan, w, v_stack, mode: str, *,
+                           trim: int = 1, clip: float | None = None,
+                           check: bool = True, self_stack=None):
+    """Mesh-free reference executor for ROBUST block mode: per device,
+    assemble the zero-filled neighborhood buffer exactly as
+    ``block_mix_dense`` does, then aggregate the device's node rows with
+    ``repro.core.mixing.robust_neighborhood_mix`` instead of the dot.
+
+    The robust rule reads only buffer slots inside each row's W support
+    (coverage-checked), so this equals the full-stack
+    ``mixing.robust_mix_dense`` BITWISE — the parity contract the shard_map
+    robust lowering (``lowering.block_robust_mix_step``) is pinned to.
+
+    ``self_stack`` (K, ...) supplies honest per-node states overriding each
+    node's OWN buffer slot when ``v_stack`` is an attacked wire payload.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import mixing as core_mixing
+
+    w = np.asarray(w)
+    if check:
+        check_plan_covers(plan, w)
+    k, m, ln = plan.num_nodes, plan.num_devices, plan.local_nodes
+    v_stack = jnp.asarray(v_stack)
+    flat = v_stack.reshape(k, -1)
+    partners = plan.block.partner_arrays()  # (C, M)
+    outs = []
+    for dev in range(m):
+        buf = jnp.zeros_like(flat)
+        buf = buf.at[dev * ln:(dev + 1) * ln].set(
+            flat[dev * ln:(dev + 1) * ln])
+        for c in range(plan.num_colors):
+            src = int(partners[c, dev])
+            if src != dev:
+                buf = buf.at[src * ln:(src + 1) * ln].set(
+                    flat[src * ln:(src + 1) * ln])
+        w_rows = jnp.asarray(w[dev * ln:(dev + 1) * ln], dtype=flat.dtype)
+        row_ids = jnp.arange(dev * ln, (dev + 1) * ln)
+        ov = None
+        if self_stack is not None:
+            ov = jnp.asarray(self_stack).reshape(k, -1)[dev * ln:(dev + 1) * ln]
+        outs.append(core_mixing.robust_neighborhood_mix(
+            w_rows, buf, row_ids, mode, trim=trim, clip=clip,
+            self_override=ov))
+    out = jnp.concatenate(outs, axis=0)
+    return out.reshape(v_stack.shape).astype(v_stack.dtype)

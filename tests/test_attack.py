@@ -1,0 +1,324 @@
+"""The adversarial attack harness (``repro.attack``) and the robust mixing
+layer it is defended by.
+
+Covers the three layers of the threat model:
+
+* scenarios as schedule transforms — entry materialization, the derived
+  ``atk_dishonest`` ground-truth mask, validation, the W-rewrite flag;
+* the robust aggregation rule itself — support-only dependence (the
+  property that makes sim and block-plan paths bitwise), gate behavior on
+  clean vs sign-flipped neighborhoods, self-override wire semantics;
+* driver integration — wire-only lies, free-riders frozen, taps, the
+  loop-executor and dist-tap rejections, and the end-to-end story:
+  an undefended Byzantine run trips the honest-cohort certificate while
+  ``robust="trim"`` neutralizes the same attack with the certificate sound.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import attack
+from repro.core import mixing, problems, topology as topo
+from repro.core.cola import ColaConfig, run_cola
+from repro.data import synthetic
+from repro.dist.runtime import run_dist_cola
+
+
+@pytest.fixture(scope="module")
+def lasso_prob():
+    x, y, _ = synthetic.regression(48, 24, seed=0)
+    return problems.lasso(jnp.asarray(x), jnp.asarray(y), 5e-2, box=5.0)
+
+
+def _ctx(k=8, rounds=10, d=6, seed=0):
+    return attack.AttackContext(graph=topo.connected_cycle(k, 2),
+                                rounds=rounds, k=k, d=d,
+                                dtype=np.float32, seed=seed)
+
+
+def _sched(ctx):
+    w = topo.metropolis_weights(ctx.graph).astype(np.float32)
+    return {"w": np.broadcast_to(w, (ctx.rounds,) + w.shape)}
+
+
+# ---------------------------------------------------------------- scenarios
+
+def test_scenario_registry_constructs_by_name():
+    byz = attack.scenario("byzantine", nodes=(1, 3), mode="scale", scale=2.0)
+    assert isinstance(byz, attack.Byzantine) and byz.nodes == (1, 3)
+    with pytest.raises(ValueError, match="unknown attack scenario"):
+        attack.scenario("not_a_scenario")
+
+
+def test_scenario_validation_errors():
+    ctx = _ctx()
+    with pytest.raises(ValueError, match="out of range"):
+        attack.apply_attacks(_sched(ctx), attack.Byzantine(nodes=(99,)), ctx)
+    with pytest.raises(ValueError, match="unknown Byzantine mode"):
+        attack.apply_attacks(_sched(ctx),
+                             attack.Byzantine(nodes=(0,), mode="nope"), ctx)
+    with pytest.raises(ValueError, match="round window"):
+        attack.apply_attacks(
+            _sched(ctx), attack.Byzantine(nodes=(0,), start=8, stop=2), ctx)
+    with pytest.raises(ValueError, match="self term"):
+        attack.apply_attacks(
+            _sched(ctx), attack.LinkCorruption(edges=((2, 2),)), ctx)
+    with pytest.raises(TypeError, match="not an attack scenario"):
+        attack.apply_attacks(_sched(ctx), ["byzantine"], ctx)
+
+
+def test_byzantine_materializes_coef_and_dishonest_mask():
+    ctx = _ctx(rounds=10)
+    sched, info = attack.apply_attacks(
+        _sched(ctx),
+        attack.Byzantine(nodes=(2, 5), mode="sign_flip", scale=3.0,
+                         start=4, stop=8), ctx)
+    coef = sched["atk_coef"]
+    assert coef.shape == (10, 8)
+    assert np.all(coef[4:8, [2, 5]] == -3.0)
+    # everything outside the node/round window is the identity transform
+    untouched = np.ones_like(coef)
+    untouched[4:8, [2, 5]] = -3.0
+    np.testing.assert_array_equal(coef, untouched)
+    # the derived ground truth marks exactly the lying (node, round) cells
+    dis = sched["atk_dishonest"]
+    np.testing.assert_array_equal(dis != 0.0, coef != 1.0)
+    assert "coef" in info.entry_names and "dishonest" in info.entry_names
+    assert not info.w_modified and info.tap_nodes == ()
+
+
+def test_byzantine_random_payload_is_run_constant():
+    ctx = _ctx(rounds=6, d=5)
+    sched, _ = attack.apply_attacks(
+        _sched(ctx), attack.Byzantine(nodes=(1,), mode="random", scale=2.0,
+                                      seed=7), ctx)
+    assert np.all(sched["atk_coef"][:, 1] == 0.0)
+    assert np.all(sched["atk_bias_coef"][:, 1] == 2.0)
+    bias = sched["atk_bias"]
+    assert bias.shape == (6, 8, 5)
+    # the injected direction is drawn once and held for the whole run
+    np.testing.assert_array_equal(bias[0], bias[-1])
+    assert np.any(bias[0, 1] != 0.0) and np.all(bias[0, 0] == 0.0)
+
+
+def test_free_rider_zeroes_work_and_stale_emits_initial():
+    ctx = _ctx()
+    sched, info = attack.apply_attacks(
+        _sched(ctx), attack.FreeRider(nodes=(0,), stale=True), ctx)
+    assert np.all(sched["atk_work"][:, 0] == 0.0)
+    assert np.all(sched["atk_coef"][:, 0] == 0.0)
+    assert "work" in info.entry_names
+
+
+def test_link_corruption_rewrites_w_stack():
+    ctx = _ctx()
+    base = _sched(ctx)
+    w0 = np.array(base["w"][0])
+    sched, info = attack.apply_attacks(
+        base, attack.LinkCorruption(edges=((0, 1),), scale=0.0, start=2), ctx)
+    assert info.w_modified
+    assert np.all(sched["w"][2:, 1, 0] == 0.0)
+    assert sched["w"][0, 1, 0] == w0[1, 0]        # before the window: intact
+    # only the targeted directed edge moved
+    assert sched["w"][3, 0, 1] == w0[0, 1]
+
+
+def test_fraction_resolves_deterministic_node_set():
+    ctx = _ctx(k=16)
+    a = attack.Byzantine(fraction=0.25, seed=3)
+    s1, _ = attack.apply_attacks(_sched(ctx), a, ctx)
+    s2, _ = attack.apply_attacks(_sched(ctx), a, ctx)
+    np.testing.assert_array_equal(s1["atk_coef"], s2["atk_coef"])
+    assert (s1["atk_coef"][0] != 1.0).sum() == 4   # 0.25 * 16
+
+
+# ---------------------------------------------------- robust aggregation
+
+def _neighborhood_case(rng, k=8, d=12):
+    graph = topo.connected_cycle(k, 2)
+    w = jnp.asarray(topo.metropolis_weights(graph), jnp.float32)
+    buf = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+    return w, buf
+
+
+@pytest.mark.parametrize("mode", mixing.ROBUST_MODES)
+@pytest.mark.parametrize("override", [False, True])
+def test_robust_mix_depends_only_on_neighborhood_support(mode, override):
+    """The bitwise sim<->block contract: rows outside a node's W support
+    must not influence its aggregate (block mode zero-fills them, sim mode
+    carries true values — both paths must agree exactly)."""
+    rng = np.random.default_rng(0)
+    w, buf = _neighborhood_case(rng)
+    k = buf.shape[0]
+    ids = jnp.arange(k)
+    ov = (jnp.asarray(rng.standard_normal(buf.shape), jnp.float32)
+          if override else None)
+    full = mixing.robust_neighborhood_mix(w, buf, ids, mode,
+                                          self_override=ov)
+    # zero out every (row i reads slot j) pair outside the support, one
+    # node at a time, exactly like the block path's assembled buffer
+    mask = np.asarray(w) != 0.0
+    np.fill_diagonal(mask, True)
+    for i in range(k):
+        zeroed = jnp.where(jnp.asarray(mask[i])[:, None], buf, 0.0)
+        row = mixing.robust_neighborhood_mix(
+            w[i:i + 1], zeroed, ids[i:i + 1], mode,
+            self_override=None if ov is None else ov[i:i + 1])
+        np.testing.assert_array_equal(np.asarray(row[0]),
+                                      np.asarray(full[i]),
+                                      err_msg=f"{mode} row {i} depends on "
+                                              "out-of-support slots")
+
+
+def test_robust_modes_are_linear_on_clean_neighborhoods():
+    """Honest payloads (same dual point + noise) must pass the gate: trim
+    and median reduce exactly to the linear W-mean on a clean buffer."""
+    rng = np.random.default_rng(1)
+    w, _ = _neighborhood_case(rng)
+    common = rng.standard_normal(12)
+    buf = jnp.asarray(common + 0.05 * rng.standard_normal((8, 12)),
+                      jnp.float32)
+    linear = w @ buf
+    for mode in ("trim", "median"):
+        out = mixing.robust_mix_dense(w, buf, mode)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(linear),
+                                      err_msg=f"{mode} gated a clean run")
+
+
+def test_trim_neutralizes_sign_flipped_neighbor():
+    rng = np.random.default_rng(2)
+    w, _ = _neighborhood_case(rng)
+    common = rng.standard_normal(12).astype(np.float32)
+    buf = np.tile(common, (8, 1)) + 0.05 * rng.standard_normal(
+        (8, 12)).astype(np.float32)
+    honest = jnp.asarray(buf.copy())
+    buf[3] = -10.0 * buf[3]                         # wire lie from node 3
+    attacked = jnp.asarray(buf)
+    trimmed = mixing.robust_mix_dense(w, attacked, "trim",
+                                      self_stack=honest)
+    linear = np.asarray(w @ attacked)
+    clean = np.asarray(w @ honest)
+    out = np.asarray(trimmed)
+    # receivers of the lie land far closer to the clean mix than the
+    # trusting linear mix does
+    for i in (1, 2, 4, 5):                          # neighbors of node 3
+        assert np.linalg.norm(out[i] - clean[i]) < \
+            0.2 * np.linalg.norm(linear[i] - clean[i])
+    # the liar's own aggregate used its honest state (self_override)
+    assert np.isfinite(out[3]).all()
+
+
+def test_robust_mix_rejects_unknown_mode():
+    rng = np.random.default_rng(3)
+    w, buf = _neighborhood_case(rng)
+    with pytest.raises(ValueError, match="unknown robust mode"):
+        mixing.robust_mix_dense(w, buf, "winsorize")
+
+
+def test_robust_mix_steps_applies_wire_attack_once():
+    """Multi-step robust gossip: the lie exists on the first exchange only
+    — later steps re-mix received (honest) values."""
+    rng = np.random.default_rng(4)
+    w, buf = _neighborhood_case(rng)
+    honest = jnp.asarray(rng.standard_normal(buf.shape), jnp.float32)
+    two = mixing.robust_mix_steps(w, buf, "trim", steps=2,
+                                  self_stack=honest)
+    first = mixing.robust_mix_dense(w, buf, "trim", self_stack=honest)
+    second = mixing.robust_mix_dense(w, first, "trim")
+    np.testing.assert_array_equal(np.asarray(two), np.asarray(second))
+
+
+# ---------------------------------------------------- driver integration
+
+def test_attacks_require_block_executor(lasso_prob):
+    graph = topo.connected_cycle(8, 2)
+    with pytest.raises(ValueError, match="executor='block'"):
+        run_cola(lasso_prob, graph, ColaConfig(), rounds=4,
+                 executor="loop", attacks=[attack.Byzantine(nodes=(0,))])
+
+
+def test_identity_link_corruption_is_bitwise_clean(lasso_prob):
+    """scale=1.0 rewrites the W stack with the same values: the run (forced
+    onto the per-round-coefficient plan path) must match the clean run
+    bitwise — the attack plumbing itself is exact."""
+    graph = topo.connected_cycle(8, 2)
+    cfg = ColaConfig(kappa=2.0)
+    clean = run_cola(lasso_prob, graph, cfg, rounds=12, record_every=4)
+    noop = run_cola(lasso_prob, graph, cfg, rounds=12, record_every=4,
+                    attacks=[attack.LinkCorruption(edges=((0, 1),),
+                                                   scale=1.0)])
+    np.testing.assert_array_equal(np.asarray(clean.state.x_parts),
+                                  np.asarray(noop.state.x_parts))
+    np.testing.assert_array_equal(np.asarray(clean.state.v_stack),
+                                  np.asarray(noop.state.v_stack))
+
+
+def test_free_rider_rides_but_run_converges(lasso_prob):
+    graph = topo.connected_cycle(8, 2)
+    cfg = ColaConfig(kappa=2.0)
+    res = run_cola(lasso_prob, graph, cfg, rounds=30, record_every=10,
+                   attacks=[attack.FreeRider(nodes=(2,))])
+    clean = run_cola(lasso_prob, graph, cfg, rounds=30, record_every=10)
+    x = np.asarray(res.state.x_parts)
+    assert np.all(x[2] == 0.0)                    # never did local work
+    assert np.any(x[1] != 0.0) and np.any(x[3] != 0.0)
+    # a single free-rider slows but does not break convergence
+    assert res.history["primal"][-1] < 1.5 * clean.history["primal"][-1] + 1.0
+
+
+def test_eavesdropper_taps_record_wire_payloads(lasso_prob):
+    graph = topo.connected_cycle(8, 2)
+    cfg = ColaConfig(kappa=2.0)
+    tap = attack.Eavesdropper(nodes=(3, 0))
+    byz = attack.Byzantine(nodes=(3,), mode="sign_flip", scale=2.0, start=4)
+    clean = run_cola(lasso_prob, graph, cfg, rounds=8, record_every=4,
+                     attacks=[tap])
+    lied = run_cola(lasso_prob, graph, cfg, rounds=8, record_every=4,
+                    attacks=[tap, byz])
+    assert clean.taps is not None and clean.taps.shape[:2] == (8, 2)
+    # before the onset the dynamics are identical; at the first attacked
+    # round the states still agree, so the emitted payload is exactly
+    # coef * the clean payload — the tap sees what crossed the wire
+    np.testing.assert_array_equal(np.asarray(lied.taps[:4]),
+                                  np.asarray(clean.taps[:4]))
+    np.testing.assert_allclose(np.asarray(lied.taps[4, 0]),
+                               -2.0 * np.asarray(clean.taps[4, 0]),
+                               rtol=1e-6)
+    # the honest tapped node's round-4 payload is untouched
+    np.testing.assert_array_equal(np.asarray(lied.taps[4, 1]),
+                                  np.asarray(clean.taps[4, 1]))
+
+
+def test_dist_runtime_rejects_taps(lasso_prob):
+    graph = topo.connected_cycle(8, 2)
+    mesh = jax.make_mesh((1,), ("nodes",))
+    with pytest.raises(ValueError, match="simulator-only"):
+        run_dist_cola(lasso_prob, graph, ColaConfig(), mesh, rounds=4,
+                      comm="plan", attacks=[attack.Eavesdropper(nodes=(0,))])
+
+
+def test_undefended_detected_trim_certified(lasso_prob):
+    """The end-to-end robustness story on the canonical scenario (small):
+    an undefended seeded sign-flip run trips the honest-cohort certificate;
+    ``robust="trim"`` neutralizes it and certifies the eps gap within 2x
+    the clean round count."""
+    graph = topo.torus_2d(4, 4)
+    byz = attack.Byzantine(nodes=(0, 10), mode="sign_flip", scale=10.0,
+                           start=5, seed=1)
+
+    def go(robust, atk):
+        cfg = ColaConfig(kappa=2.0, robust=robust)
+        return run_cola(lasso_prob, graph, cfg, rounds=600, record_every=20,
+                        recorder="gap+certificate", eps=1.0,
+                        attacks=([atk] if atk else None)).history
+
+    clean = go(None, None)
+    assert clean["stop_round"] is not None and clean["violated_round"] is None
+    undefended = go(None, byz)
+    assert undefended["violated_round"] is not None, \
+        "undefended sign-flip went undetected"
+    trim = go("trim", byz)
+    assert trim["violated_round"] is None
+    assert trim["stop_round"] is not None
+    assert trim["stop_round"] <= 2 * clean["stop_round"]

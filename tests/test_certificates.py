@@ -243,3 +243,61 @@ def test_recorder_certificates_sound_under_churn(setup):
     _, thr_full = metrics_lib.certificate_round_inputs(
         rec, topo.metropolis_weights(graph), np.ones(k, dtype=bool))
     assert thr <= thr_full + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# The attack dichotomy as a property: a lying participant is never silent
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 10 ** 6),
+       n_byz=st.sampled_from([1, 2]),
+       scale=st.sampled_from([5.0, 10.0]),
+       start=st.sampled_from([0, 5]))
+def test_attack_detected_or_neutralized_property(seed, n_byz, scale, start):
+    """Across random Byzantine placements (fraction >= 1/K sign-flip):
+    EITHER the undefended run visibly breaks AND the honest-cohort
+    certificate trips ``certificate_violated`` — no silent poisoning of a
+    run that claims a gap guarantee — OR ``robust="trim"`` neutralizes the
+    attack (converges within 2x the clean rounds, certificate sound).
+    Adversarial placements (e.g. colluders sharing a neighborhood on a
+    small torus) may evade the gate, which is exactly when the detection
+    arm of the dichotomy must hold instead. The clean defended run must
+    never false-alarm."""
+    from repro import attack
+
+    x, y, _ = synthetic.regression(48, 24, seed=0)
+    prob = problems.lasso(jnp.asarray(x), jnp.asarray(y), 5e-2, box=5.0)
+    k = 16
+    graph = topo.torus_2d(4, 4)
+    rng = np.random.default_rng(seed)
+    nodes = tuple(int(n) for n in
+                  rng.choice(k, size=n_byz, replace=False))
+    byz = attack.Byzantine(nodes=nodes, mode="sign_flip", scale=scale,
+                           start=start)
+
+    def go(robust, atk):
+        return run_cola(prob, graph, ColaConfig(kappa=2.0, robust=robust),
+                        rounds=600, record_every=20,
+                        recorder="gap+certificate", eps=1.0,
+                        attacks=([atk] if atk else None)).history
+
+    clean = go("trim", None)
+    assert clean["violated_round"] is None, \
+        "clean trim run false-alarmed the certificate"
+    assert clean["stop_round"] is not None
+
+    undefended = go(None, byz)
+    broken_and_detected = (
+        undefended["violated_round"] is not None
+        and (undefended["stop_round"] is None
+             or undefended["stop_round"] >= undefended["violated_round"]))
+
+    trim = go("trim", byz)
+    neutralized = (trim["violated_round"] is None
+                   and trim["stop_round"] is not None
+                   and trim["stop_round"] <= 2 * clean["stop_round"])
+    assert broken_and_detected or neutralized, (
+        nodes, scale, start,
+        undefended["violated_round"], undefended["stop_round"],
+        trim["violated_round"], trim["stop_round"])

@@ -27,8 +27,8 @@ SCRIPT = textwrap.dedent("""
         for cfg in (ColaConfig(kappa=1.0), ColaConfig(kappa=0.5, gossip_steps=2)):
             sim = run_cola(prob, graph, cfg, rounds=8)
             for comm in ("dense", "ring"):
-                st, hist = run_dist_cola(prob, graph, cfg, mesh, rounds=8,
-                                         comm=comm)
+                hist = run_dist_cola(prob, graph, cfg, mesh, rounds=8,
+                                     comm=comm).history
                 assert np.allclose(hist["primal"][-1],
                                    sim.history["primal"][-1], rtol=1e-5), (
                     pname, comm, hist["primal"][-1], sim.history["primal"][-1])

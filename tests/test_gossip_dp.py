@@ -145,3 +145,136 @@ def test_gossip_block_runner_consensus_recorder(setup):
         block_size=3)
     assert hist2["stop_round"] == 0
     assert hist2["round"] == [0]
+
+
+# ---------------------------------------------------------------------------
+# differential privacy on the gossip wire (repro.optim.privacy)
+# ---------------------------------------------------------------------------
+
+from repro.optim import privacy  # noqa: E402
+
+
+def test_dp_config_validation():
+    with pytest.raises(ValueError, match="clip > 0"):
+        privacy.DPConfig(clip=0.0, sigma=1.0)
+    with pytest.raises(ValueError, match="clip > 0"):
+        privacy.DPConfig(clip=1.0, sigma=-1.0)
+    with pytest.raises(ValueError, match="delta"):
+        privacy.DPConfig(clip=1.0, sigma=1.0, delta=2.0)
+    dp = privacy.DPConfig(clip=0.5, sigma=2.0)
+    assert dp.sensitivity == 1.0          # replace-one: 2 * clip
+    assert dp.noise_std == 2.0            # sigma * sensitivity
+
+
+def test_accountant_zcdp_composition():
+    acct = privacy.GaussianAccountant(sigma=2.0, delta=1e-5)
+    assert acct.epsilon() == 0.0
+    acct.add(16)
+    rho = 16 / (2.0 * 4.0)
+    assert acct.rho == pytest.approx(rho)
+    assert acct.epsilon() == pytest.approx(
+        rho + 2.0 * np.sqrt(rho * np.log(1e5)))
+    # additive composition: two batches == one combined batch
+    acct2 = privacy.GaussianAccountant(sigma=2.0).add(10).add(6)
+    assert acct2.rho == pytest.approx(acct.rho)
+    with pytest.raises(ValueError, match="un-release"):
+        acct.add(-1)
+
+
+def test_release_count_per_link_vs_broadcast():
+    graph = topo.TOPOLOGIES["ring"](8)          # degree 2
+    dp_link = privacy.DPConfig(clip=1.0, sigma=1.0, per_link=True)
+    dp_bcast = privacy.DPConfig(clip=1.0, sigma=1.0, per_link=False)
+    assert privacy.max_degree(graph) == 2
+    assert dp_link.releases_per_mix_round(graph, gossip_steps=3) == 6
+    assert dp_bcast.releases_per_mix_round(graph, gossip_steps=3) == 3
+    eps = privacy.epsilon_schedule(dp_link, graph, 3,
+                                   np.array([0, 1, 4, 10]))
+    assert eps[0] == 0.0
+    assert np.all(np.diff(eps) > 0)             # strictly accumulating
+
+
+def test_clip_params_bounds_global_pytree_norm():
+    rng = np.random.default_rng(0)
+    stack = {"a": jnp.asarray(rng.standard_normal((4, 10)), jnp.float32),
+             "b": jnp.asarray(rng.standard_normal((4, 3, 2)), jnp.float32)}
+    clipped = privacy.clip_params(stack, clip=1.0)
+    flat = np.concatenate(
+        [np.asarray(p).reshape(4, -1) for p in jax.tree.leaves(clipped)],
+        axis=1)
+    norms = np.linalg.norm(flat, axis=1)
+    assert np.all(norms <= 1.0 + 1e-6)
+    # a stack already inside the ball passes through untouched
+    small = jax.tree.map(lambda p: p * 1e-3, stack)
+    same = privacy.clip_params(small, clip=1.0)
+    for a, b in zip(jax.tree.leaves(small), jax.tree.leaves(same)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_noisy_mix_centers_on_clipped_mix_and_is_reproducible():
+    rng = np.random.default_rng(1)
+    k = 6
+    w = jnp.asarray(topo.metropolis_weights(topo.TOPOLOGIES["ring"](k)),
+                    jnp.float32)
+    stack = {"p": jnp.asarray(rng.standard_normal((k, 12)), jnp.float32)}
+    key = jax.random.PRNGKey(0)
+    tiny = privacy.DPConfig(clip=10.0, sigma=1e-7)
+    out = privacy.noisy_dense_mix(w, stack, tiny, key)
+    clean = jnp.einsum("kl,ld->kd", w, privacy.clip_params(
+        stack, 10.0)["p"])
+    np.testing.assert_allclose(np.asarray(out["p"]), np.asarray(clean),
+                               rtol=1e-4, atol=1e-5)
+    # the noise stream is a pure function of (key, step, leaf index)
+    loud = privacy.DPConfig(clip=10.0, sigma=0.5)
+    a = privacy.noisy_dense_mix(w, stack, loud, key)
+    b = privacy.noisy_dense_mix(w, stack, loud, key)
+    np.testing.assert_array_equal(np.asarray(a["p"]), np.asarray(b["p"]))
+    c = privacy.noisy_dense_mix(w, stack, loud, jax.random.PRNGKey(1))
+    assert np.any(np.asarray(a["p"]) != np.asarray(c["p"]))
+    # per-link and broadcast noise are genuinely different mechanisms
+    d = privacy.noisy_dense_mix(
+        w, stack, privacy.DPConfig(clip=10.0, sigma=0.5, per_link=False),
+        key)
+    assert np.any(np.asarray(a["p"]) != np.asarray(d["p"]))
+
+
+def test_dp_rejects_mesh_and_robust_combos(setup):
+    cfg, hp, state0, local, pipe = setup
+    gcfg = gsp.GossipConfig(num_nodes=4, robust="trim")
+    with pytest.raises(ValueError, match="per-link noise"):
+        gsp.make_gossip_step(local, gcfg,
+                             dp=privacy.DPConfig(clip=1.0, sigma=1.0))
+    mesh = jax.make_mesh((1,), ("nodes",))
+    with pytest.raises(ValueError, match="dense"):
+        gsp.make_gossip_step(local, gsp.GossipConfig(num_nodes=4),
+                             mesh=mesh, axis="nodes",
+                             dp=privacy.DPConfig(clip=1.0, sigma=1.0))
+
+
+def test_dp_block_runner_history_carries_epsilon(setup):
+    cfg, hp, state0, local, pipe = setup
+    k = 4
+    gcfg = gsp.GossipConfig(num_nodes=k, gossip_steps=2, mix_every=2)
+    dp = privacy.DPConfig(clip=5.0, sigma=1.0)
+    runner = gsp.make_gossip_block_runner(
+        local, gcfg, dp=dp, recorder=gsp.ConsensusRecorder())
+    rounds = 8
+    states = gsp.replicate_state(state0, k)
+    batches = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[_stack_batches(pipe, t, k) for t in range(rounds)])
+    w = jnp.broadcast_to(jnp.asarray(gcfg.weights(), jnp.float32),
+                         (rounds, k, k))
+    act = jnp.ones((rounds, k), jnp.float32)
+    mix = np.asarray([(t + 1) % gcfg.mix_every == 0 for t in range(rounds)],
+                     np.float32)
+    states, _, history = runner(states, batches, w, act, mix, block_size=4)
+    eps = np.asarray(history["dp_epsilon"])
+    assert eps.shape[0] == len(history["round"])
+    assert np.all(np.diff(eps) >= 0) and eps[-1] > 0
+    info = history["dp"]
+    # 4 mix rounds x B=2 steps x deg_max=2 links = 16 releases
+    assert info["releases"] == 16
+    assert info["epsilon"] == pytest.approx(
+        privacy.GaussianAccountant(1.0, dp.delta).add(16).epsilon())
+    assert info["per_link"] is True
