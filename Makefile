@@ -1,7 +1,7 @@
 # repo root on the path too: benchmarks/ imports `benchmarks.common`
 PY := PYTHONPATH=src:. python
 
-.PHONY: verify test quick bench bench-smoke
+.PHONY: verify test quick bench bench-smoke analysis
 
 # tier-1 gate: the full suite + the round-executor benchmark in smoke mode,
 # checked against the committed BENCH_cola.json trajectory (>20% slowdown
@@ -23,3 +23,9 @@ bench:
 
 bench-smoke:
 	$(PY) benchmarks/round_bench.py --smoke --check
+
+# static contract verification: AST lints over src/, every registered
+# driver config checked against its declared comm contract, and the
+# seeded-violation smoke proving each pass still fires
+analysis:
+	$(PY) -m repro.analysis --all --selftest

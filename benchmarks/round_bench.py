@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row
+from repro.core import executor as exec_engine
 from repro.core import metrics as metrics_lib, problems, topology as topo
 from repro.core.cola import ColaConfig, build_env, run_cola
 from repro.core.partition import make_partition
@@ -316,8 +317,23 @@ def check_regression(result: dict, smoke: bool, tolerance: float) -> list[str]:
 def run(smoke: bool = False, check: bool = False,
         tolerance: float = 0.2) -> dict:
     result = {"bench": "cola_round_executor"}
+    exec_engine.driver_cache_stats(reset=True)
     result.update(bench_config(smoke))
     if check:
+        # retrace accounting (the analysis.RetraceMonitor counters): every
+        # timed repeat must HIT the driver cache — a miss per repeat means
+        # the content key churns and each "measurement" re-traces, so the
+        # rounds/sec rows time compilation instead of the engine
+        stats = exec_engine.driver_cache_stats()
+        result["driver_cache"] = dict(stats)
+        csv_row("round_bench", "retrace", "driver_cache",
+                f"hits={stats['hits']} misses={stats['misses']} "
+                f"bypass={stats['bypass']}")
+        if stats["hits"] < stats["misses"]:
+            print("REGRESSION: driver cache misses outnumber hits "
+                  f"({stats['misses']} misses vs {stats['hits']} hits) — "
+                  "the bench is retracing per repeat", file=sys.stderr)
+            sys.exit(1)
         # gate against the COMMITTED numbers before any rewrite below —
         # checking after the write would compare the measurement to itself
         failures = check_regression(result, smoke, tolerance)

@@ -1,0 +1,112 @@
+"""repro.analysis — static contract verification for compiled COLA programs.
+
+The paper's claims are properties of *compiled artifacts*: the plan paths
+never gather the (K, d) stack, certificates exchange O(d) bytes, the round
+hot path is honest fp32, the block executor never re-traces a warmed
+driver. The numeric test suite can't see any of that — a program that
+silently all-gathers still converges. This package verifies the lowered
+programs themselves, at three levels:
+
+**1. Comm contracts** (``contracts``) — a ``CommContract`` declares the
+collective budget a lowered program is allowed (forbidden kinds, ppermute
+byte/count caps, psum allowances, gather floors); ``check_comm(program,
+contract)`` holds the compiled HLO to it via the trip-count-aware
+``launch.hlo_analysis.analyze``. Contracts come from the objects that know
+their own budget — ``CommPlan.contract()`` / ``BlockPlan.contract()``
+(backed by ``topo.lowering.comm_budget``, the single source of truth for
+what the lowerings emit) — or from the helpers ``ring_contract`` /
+``certificate_contract`` / ``gather_contract`` for plan-less paths. The
+dist test files assert through this layer instead of inline HLO regexes.
+
+**2. Jaxpr lint passes** (``passes``, registry ``PASS_REGISTRY``):
+
+=======================  ==================================================
+``dtype-drift``          every floating value in the jaxpr has the declared
+                         compute dtype (catches weak-type f64 promotion and
+                         lossy half-precision round-trips)
+``host-callback-in-scan``  no ``debug_callback``/``pure_callback``/... in a
+                         ``scan``/``while`` body (a host sync per round
+                         defeats round-block dispatch amortization)
+``constant-capture``     no closed-over array constant above a size
+                         threshold baked into the executable
+``donation``             every ``donate_argnums`` buffer is actually
+                         aliased in the lowering (jax drops unusable
+                         donations with only a warning)
+``retrace``              a warmed-up run resolves every
+                         ``executor.cached_driver`` probe as a hit
+                         (``RetraceMonitor`` hooks the cache's listener
+                         API; any miss = unstable cache key)
+=======================  ==================================================
+
+**3. Repo AST lints** (``astlint``, registry ``RULES``): ``frozen-transform``
+(schedule transforms / registered attack scenarios must be frozen
+dataclasses — they ride compiled-driver cache keys), ``id-in-cache-key``
+(no ``id()``/``hash()`` in cache keys — addresses get recycled), and
+``prng-reuse`` (a PRNG key consumed twice without a split/fold_in rebind).
+
+**Drivers** (``drivers``, registry ``DRIVER_REGISTRY``) bind the levels to
+every registered driver configuration — sim round blocks (plain and
+robust), gossip-DP mixing, dist ring/plan/block/block-robust rounds, the
+dense oracle, certificate recorders (ring and plan), the gap recorder, and
+the block executor's retrace check. ``python -m repro.analysis --all``
+runs them all plus the AST lints; ``--selftest`` runs the
+seeded-violation fixtures (``selftest``) proving each pass fires.
+
+Registration: ``@register_pass`` / ``@register_rule`` / ``@register_driver``
+/ ``@register_selftest`` add entries to the respective registries; the CLI
+enumerates registries, so a new pass or driver config is picked up without
+touching ``__main__``.
+
+This module imports lazily (``__getattr__``) so ``python -m
+repro.analysis`` can pin ``XLA_FLAGS`` before anything touches jax.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    # contracts
+    "CommContract": "contracts",
+    "CommContractViolation": "contracts",
+    "check_comm": "contracts",
+    "ring_contract": "contracts",
+    "certificate_contract": "contracts",
+    "gather_contract": "contracts",
+    "FORBID_NEIGHBOR_ONLY": "contracts",
+    # passes
+    "Finding": "passes",
+    "PASS_REGISTRY": "passes",
+    "register_pass": "passes",
+    "dtype_drift": "passes",
+    "host_callback_in_scan": "passes",
+    "constant_capture": "passes",
+    "donation": "passes",
+    "RetraceMonitor": "passes",
+    "check_retrace": "passes",
+    "run_jaxpr_passes": "passes",
+    "walk_eqns": "passes",
+    # astlint
+    "RULES": "astlint",
+    "register_rule": "astlint",
+    "lint_source": "astlint",
+    "lint_paths": "astlint",
+    # drivers
+    "DRIVER_REGISTRY": "drivers",
+    "register_driver": "drivers",
+    "SkipDriver": "drivers",
+    # selftest
+    "SELFTESTS": "selftest",
+    "run_selftests": "selftest",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        import importlib
+        mod = importlib.import_module(f"repro.analysis.{_EXPORTS[name]}")
+        return getattr(mod, name)
+    raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -1,0 +1,128 @@
+"""CLI: verify every registered COLA driver configuration.
+
+``python -m repro.analysis --all``      AST lints + every registered driver
+``python -m repro.analysis --selftest`` seeded violations must all be caught
+``python -m repro.analysis --driver dist-plan``  one driver by name
+
+Exit status 0 = every contract holds (and, under ``--selftest``, every
+seeded violation was caught); 1 otherwise. XLA_FLAGS is pinned to an
+8-virtual-device CPU mesh before jax loads, so the dist/block drivers
+always lower for real meshes regardless of host hardware.
+"""
+import os
+
+# must precede any jax import: the dist drivers lower for multi-device
+# meshes, and xla reads this at backend init
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import pathlib
+import sys
+import traceback
+
+
+def _src_root() -> pathlib.Path:
+    # repro is a namespace package (no __file__); anchor on this module
+    return pathlib.Path(__file__).resolve().parent.parent
+
+
+def run_ast(paths=None) -> int:
+    from repro.analysis import astlint
+    paths = paths or [_src_root()]
+    findings = astlint.lint_paths(paths)
+    for f in findings:
+        print(f"FAIL ast: {f}")
+    print(f"ast-lint: {len(findings)} finding(s) over {len(paths)} root(s) "
+          f"[{len(astlint.RULES)} rule(s)]")
+    return len(findings)
+
+
+def run_drivers(names=None) -> int:
+    from repro.analysis import drivers
+    names = names or sorted(drivers.DRIVER_REGISTRY)
+    failures = 0
+    for name in names:
+        try:
+            check = drivers.DRIVER_REGISTRY[name]
+        except KeyError:
+            print(f"FAIL {name}: unknown driver (have: "
+                  f"{', '.join(sorted(drivers.DRIVER_REGISTRY))})")
+            failures += 1
+            continue
+        try:
+            findings = check()
+        except drivers.SkipDriver as e:
+            print(f"SKIP {name}: {e}")
+            continue
+        except Exception:
+            print(f"FAIL {name}: driver crashed")
+            traceback.print_exc()
+            failures += 1
+            continue
+        if findings:
+            failures += 1
+            print(f"FAIL {name}: {len(findings)} finding(s)")
+            for f in findings:
+                print(f"  {f}")
+        else:
+            print(f"PASS {name}")
+    return failures
+
+
+def run_selftest() -> int:
+    from repro.analysis import selftest
+    missed = 0
+    for name, caught, detail in selftest.run_selftests(skip_mesh=True):
+        if caught is None:
+            print(f"SKIP selftest {name}: {detail}")
+        elif caught:
+            first = detail.splitlines()[0]
+            print(f"CAUGHT {name}: {first}")
+        else:
+            missed += 1
+            print(f"MISSED {name}: {detail}")
+    return missed
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static contract verification for compiled COLA "
+                    "programs (see repro.analysis.__doc__)")
+    ap.add_argument("--all", action="store_true",
+                    help="AST lints + every registered driver (default)")
+    ap.add_argument("--ast", action="store_true", help="AST lints only")
+    ap.add_argument("--driver", action="append", metavar="NAME",
+                    help="run one registered driver (repeatable)")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the seeded-violation fixtures; fail unless "
+                         "every one is caught")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered drivers, passes and rules")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        from repro.analysis import astlint, drivers, passes, selftest
+        print("drivers: " + ", ".join(sorted(drivers.DRIVER_REGISTRY)))
+        print("passes:  " + ", ".join(sorted(passes.PASS_REGISTRY)))
+        print("rules:   " + ", ".join(sorted(astlint.RULES)))
+        print("selftests: " + ", ".join(sorted(selftest.SELFTESTS)))
+        return 0
+
+    failures = 0
+    if args.selftest:
+        failures += run_selftest()
+    if args.ast and not args.all:
+        failures += run_ast()
+    if args.driver:
+        failures += run_drivers(args.driver)
+    if args.all or not (args.selftest or args.ast or args.driver):
+        failures += run_ast()
+        failures += run_drivers()
+    print(f"repro.analysis: {'FAIL' if failures else 'OK'} "
+          f"({failures} failing check(s))")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

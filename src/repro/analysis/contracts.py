@@ -1,0 +1,190 @@
+"""Comm contracts: declared collective budgets checked against lowered HLO.
+
+A ``CommContract`` is the static half of the paper's communication model:
+what a compiled COLA program is ALLOWED to move per device. ``check_comm``
+holds a lowered program to it using the trip-count-aware
+``launch.hlo_analysis.analyze`` pass — the one place the "plan paths never
+gather, certificates exchange O(d)" guarantees are enforced, instead of
+regex walls copy-pasted into test files.
+
+Contracts are produced by the objects that know their own budget
+(``CommPlan.contract()`` / ``BlockPlan.contract()`` in ``repro.topo.plan``)
+or by the helpers below for the runtime paths that have no plan object
+(ring mixing, certificate recorders, gather oracles).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from repro.launch import hlo_analysis
+
+#: collective kinds a neighbor-only program must not issue at all
+FORBID_NEIGHBOR_ONLY: Tuple[str, ...] = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all")
+
+
+class CommContractViolation(AssertionError):
+    """A lowered program exceeded its declared collective budget."""
+
+
+@dataclasses.dataclass(frozen=True)
+class CommContract:
+    """Per-device collective budget of one lowered program.
+
+    All byte bounds are per-device totals over the whole program (trip-count
+    aware: a collective inside a scan counts once per trip), matching
+    ``hlo_analysis.analyze``'s accounting — all-reduce bytes count x2
+    (reduce + broadcast), async start/done pairs count once.
+
+    Attributes:
+      name: label for failure messages (e.g. ``plan-K4-c3``).
+      forbid: collective kinds that must move ZERO bytes.
+      max_collective_permute_bytes: per-device ppermute payload cap, or None.
+      max_collective_permute_count: executed ppermute op cap, or None.
+      require_collective_permute: the program must actually exchange
+        (count > 0 and bytes > 0) — guards against vacuously-passing
+        programs that lost their collectives to DCE.
+      max_all_reduce_bytes: scalar/O(d) psum allowance (certificate
+        recorders), or None. Only meaningful when "all-reduce" is not in
+        ``forbid``.
+      min_all_gather_bytes: floor for paths that MUST gather (the dense
+        oracle contrast assertions), or None.
+      min_total_bytes: floor on total collective bytes (gather-recorder
+        contrast), or None.
+    """
+
+    name: str
+    forbid: Tuple[str, ...] = FORBID_NEIGHBOR_ONLY
+    max_collective_permute_bytes: float | None = None
+    max_collective_permute_count: float | None = None
+    require_collective_permute: bool = False
+    max_all_reduce_bytes: float | None = None
+    min_all_gather_bytes: float | None = None
+    min_total_bytes: float | None = None
+
+    def describe(self) -> str:
+        """One-line budget summary (the ``dryrun --plan`` contract line)."""
+        parts = []
+        if self.max_collective_permute_count is not None:
+            parts.append(
+                f"<={int(self.max_collective_permute_count)} "
+                "collective-permute(s)")
+        if self.max_collective_permute_bytes is not None:
+            parts.append(
+                f"<={int(self.max_collective_permute_bytes):,} "
+                "ppermute bytes/device")
+        if self.max_all_reduce_bytes is not None:
+            parts.append(
+                f"all-reduce<={int(self.max_all_reduce_bytes):,}B")
+        if self.forbid:
+            parts.append("zero " + "/".join(self.forbid))
+        if self.min_all_gather_bytes is not None:
+            parts.append(f"all-gather>={int(self.min_all_gather_bytes):,}B")
+        if self.min_total_bytes is not None:
+            parts.append(f"total>={int(self.min_total_bytes):,}B")
+        return f"[contract {self.name}] " + ", ".join(parts)
+
+
+def _as_hlo_text(program) -> str:
+    """Accept HLO text, a jax ``Lowered``, or a compiled executable."""
+    if isinstance(program, str):
+        return program
+    if hasattr(program, "compile"):       # jax.stages.Lowered
+        program = program.compile()
+    if hasattr(program, "as_text"):       # jax.stages.Compiled
+        return program.as_text()
+    raise TypeError(
+        f"check_comm wants HLO text, a Lowered or a Compiled; got "
+        f"{type(program)!r}")
+
+
+def check_comm(program, contract: CommContract, *,
+               pod_size: int | None = None) -> dict:
+    """Verify a lowered program against its declared collective budget.
+
+    Returns the full ``hlo_analysis.analyze`` report on success; raises
+    ``CommContractViolation`` listing every violated clause (with the
+    per-kind byte/count tables) otherwise.
+    """
+    report = hlo_analysis.analyze(_as_hlo_text(program), pod_size=pod_size)
+    coll, counts = report["collectives"], report["collective_counts"]
+    bad = []
+    for kind in contract.forbid:
+        if coll.get(kind, 0) != 0:
+            bad.append(f"forbidden {kind}: {coll[kind]:,.0f} bytes "
+                       f"(must be 0)")
+    cp_bytes = coll["collective-permute"]
+    cp_count = counts["collective-permute"]
+    if contract.max_collective_permute_bytes is not None \
+            and cp_bytes > contract.max_collective_permute_bytes:
+        bad.append(
+            f"collective-permute moves {cp_bytes:,.0f} bytes/device > "
+            f"budget {contract.max_collective_permute_bytes:,.0f}")
+    if contract.max_collective_permute_count is not None \
+            and cp_count > contract.max_collective_permute_count:
+        bad.append(
+            f"{cp_count:.0f} collective-permutes executed > budget "
+            f"{contract.max_collective_permute_count:.0f}")
+    if contract.require_collective_permute and not (
+            cp_count > 0 and cp_bytes > 0):
+        bad.append("no collective-permute executed: the program lost its "
+                   "neighbor exchange (count "
+                   f"{cp_count:.0f}, bytes {cp_bytes:,.0f})")
+    if contract.max_all_reduce_bytes is not None \
+            and coll["all-reduce"] > contract.max_all_reduce_bytes:
+        bad.append(
+            f"all-reduce moves {coll['all-reduce']:,.0f} bytes > allowance "
+            f"{contract.max_all_reduce_bytes:,.0f}")
+    if contract.min_all_gather_bytes is not None \
+            and coll["all-gather"] < contract.min_all_gather_bytes:
+        bad.append(
+            f"all-gather moves {coll['all-gather']:,.0f} bytes < required "
+            f"{contract.min_all_gather_bytes:,.0f} (this path MUST gather)")
+    if contract.min_total_bytes is not None \
+            and coll["total"] < contract.min_total_bytes:
+        bad.append(
+            f"total collective bytes {coll['total']:,.0f} < required "
+            f"{contract.min_total_bytes:,.0f}")
+    if bad:
+        raise CommContractViolation(
+            f"{contract.describe()}\n  " + "\n  ".join(bad)
+            + f"\n  bytes={ {k: v for k, v in coll.items()} }"
+            + f"\n  counts={ {k: v for k, v in counts.items()} }")
+    return report
+
+
+# -- runtime paths without a plan object ------------------------------------
+
+def ring_contract(d: int, conn: int = 1, itemsize: int = 4, *,
+                  gossip_steps: int = 1) -> CommContract:
+    """Budget of the banded ppermute ring (``comm="ring"``): 2*conn
+    shifts of a (d,) payload per gossip step, nothing gathered."""
+    return CommContract(
+        name=f"ring-conn{conn}-d{d}",
+        max_collective_permute_count=gossip_steps * 2 * conn,
+        max_collective_permute_bytes=gossip_steps * 2 * conn * d * itemsize,
+        require_collective_permute=True)
+
+
+def certificate_contract(d: int, conn: int = 1,
+                         itemsize: int = 4) -> CommContract:
+    """The O(d) certificate-record budget (Prop. 1 exchange): neighbor
+    payloads over <= 2*conn ppermutes, scalar row reductions plus the
+    (2, d) invariant-sum psum (lowered twice by XLA across the early-stop
+    branch) — never a K*d gather."""
+    return CommContract(
+        name=f"certificate-conn{conn}-d{d}",
+        forbid=("all-gather", "reduce-scatter", "all-to-all"),
+        max_collective_permute_bytes=2 * conn * d * itemsize,
+        max_all_reduce_bytes=(4 * d + 64) * itemsize)
+
+
+def gather_contract(name: str, *, min_all_gather_bytes: float | None = None,
+                    min_total_bytes: float | None = None) -> CommContract:
+    """Contrast contract for paths that MUST move the stacks (the dense
+    oracle, the gather-``GapRecorder``) — proves the analyzer would see the
+    collectives a plan path is asserted not to have."""
+    return CommContract(name=name, forbid=(),
+                        min_all_gather_bytes=min_all_gather_bytes,
+                        min_total_bytes=min_total_bytes)

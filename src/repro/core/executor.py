@@ -224,6 +224,30 @@ def clear_driver_cache() -> None:
     _DRIVER_CACHE.clear()
 
 
+# Retrace accounting: every cached_driver resolution is counted (and
+# broadcast to listeners) so the analysis retrace detector and the bench
+# harness can tell "slow because the engine regressed" apart from "slow
+# because an unstable cache key forced a re-trace+re-compile every run".
+_CACHE_STATS = {"hits": 0, "misses": 0, "bypass": 0}
+_CACHE_LISTENERS: list = []
+
+
+def driver_cache_stats(reset: bool = False) -> dict:
+    """Snapshot of {hits, misses, bypass} cached_driver resolutions since
+    process start (or the last ``reset=True`` call)."""
+    out = dict(_CACHE_STATS)
+    if reset:
+        for k in _CACHE_STATS:
+            _CACHE_STATS[k] = 0
+    return out
+
+
+def _cache_event(key, kind: str) -> None:
+    _CACHE_STATS[kind] += 1
+    for listener in list(_CACHE_LISTENERS):
+        listener(key, kind)
+
+
 def cached_driver(key, build: Callable[[], Callable]) -> Callable:
     """Return (building on miss) the jitted driver for ``key``.
 
@@ -233,14 +257,17 @@ def cached_driver(key, build: Callable[[], Callable]) -> Callable:
     the wrong compiled driver). ``key=None`` bypasses the cache.
     """
     if key is None:
+        _cache_event(None, "bypass")
         return build()
     fn = _DRIVER_CACHE.get(key)
     if fn is None:
+        _cache_event(key, "misses")
         fn = build()
         _DRIVER_CACHE[key] = fn
         if len(_DRIVER_CACHE) > _DRIVER_CACHE_SIZE:
             _DRIVER_CACHE.popitem(last=False)
     else:
+        _cache_event(key, "hits")
         _DRIVER_CACHE.move_to_end(key)
     return fn
 

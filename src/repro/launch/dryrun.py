@@ -522,10 +522,17 @@ def main() -> None:
                 beta = cola_topo.beta(cola_topo.metropolis_weights(graph))
                 print(f"[topology program] {name.strip()} "
                       f"(graph={graph.name}, beta={beta:.4f})", flush=True)
+                # the same budget repro.analysis verifies against the
+                # compiled HLO — the render above is the plan's promise,
+                # this line is the enforced contract
+                print("  " + plan.contract(args.cola_d).describe(),
+                      flush=True)
                 print(plan.render(d=args.cola_d), flush=True)
                 if args.cola_m and args.cola_m < args.cola_k:
                     bplan = topo_programs.compile_block_plan(graph,
                                                              args.cola_m)
+                    print("  " + bplan.contract(args.cola_d).describe(),
+                          flush=True)
                     print(bplan.render(d=args.cola_d), flush=True)
         return
 

@@ -28,7 +28,14 @@ from typing import Dict, List
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4,
                 "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
-                "pred": 1, "c64": 8, "c128": 16}
+                "pred": 1, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+                "f8e4m3b11fnuz": 1}
+
+#: structural HLO types that carry no payload — counted as zero-byte
+#: entries (NOT silently dropped: an op whose only result is a token still
+#: parses, and a tuple mixing tokens with arrays keeps its array bytes)
+_ZERO_BYTE_TYPES = frozenset({"token", "opaque"})
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
@@ -38,10 +45,17 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 
 
 def _parse_shapes(text: str) -> List[tuple]:
-    """All (dtype, dims) array shapes in a type string (tuples flattened)."""
+    """All (dtype, dims) shapes in a type string (tuples flattened).
+
+    Zero-payload types (``token[]``, ``opaque[]``) are kept as zero-element
+    entries rather than dropped, so callers still see the op parsed; truly
+    unknown dtypes are skipped."""
     out = []
     for m in _SHAPE_RE.finditer(text):
         dt, dims = m.groups()
+        if dt in _ZERO_BYTE_TYPES:
+            out.append((dt, (0,)))
+            continue
         if dt not in _DTYPE_BYTES:
             continue
         shape = tuple(int(d) for d in dims.split(",") if d)
@@ -55,7 +69,7 @@ def _bytes_of(text: str) -> int:
         n = 1
         for d in shape:
             n *= d
-        total += n * _DTYPE_BYTES[dt]
+        total += n * _DTYPE_BYTES.get(dt, 0)
     return total
 
 

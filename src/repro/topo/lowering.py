@@ -248,3 +248,21 @@ def plan_neighborhood_stats(g_local, axis_name: str, plan: CommPlan,
         recv = lax.ppermute(g_local, axis_name, list(perm))
         nsum = nsum + mask_row[partners[c, i]] * recv
     return nsum, jnp.sum(mask_row)
+
+
+def comm_budget(plan, d: int, itemsize: int = 4, *,
+                gossip_steps: int = 1) -> dict:
+    """The collective budget this module's lowerings emit for ``plan``.
+
+    ``plan_mix_steps`` / ``block_mix_steps`` (and their wire/robust
+    variants) issue exactly ``num_colors`` ``lax.ppermute`` ops per gossip
+    step — one per color class — each carrying a (d,) vector (per-node
+    plan) or a (K/M, d) block payload. This is the single source of truth
+    behind ``CommPlan.contract`` / ``BlockPlan.contract``: the budget is a
+    property of HOW the plan lowers, so it lives next to the lowerings.
+    """
+    return {
+        "collective_permutes": gossip_steps * plan.num_colors,
+        "bytes_per_device":
+            gossip_steps * plan.bytes_per_device_per_step(d, itemsize),
+    }

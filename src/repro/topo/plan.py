@@ -127,6 +127,22 @@ class CommPlan:
         """Network-wide bytes of one gossip step: every edge, both ways."""
         return self.num_edges * self.bytes_per_link_per_step(d, itemsize)
 
+    def contract(self, d: int, itemsize: int = 4, *, gossip_steps: int = 1):
+        """The declared collective budget of this plan's lowered round
+        program (``repro.analysis.contracts.CommContract``): at most
+        ``gossip_steps * num_colors`` collective-permutes moving at most
+        ``bytes_per_device_per_step`` each step, zero
+        all-gathers/all-reduces — what ``analysis.check_comm`` holds the
+        compiled HLO to."""
+        from repro.analysis.contracts import CommContract
+        from repro.topo.lowering import comm_budget
+        budget = comm_budget(self, d, itemsize, gossip_steps=gossip_steps)
+        return CommContract(
+            name=f"plan-K{self.num_nodes}-c{self.num_colors}-d{d}",
+            max_collective_permute_count=budget["collective_permutes"],
+            max_collective_permute_bytes=budget["bytes_per_device"],
+            require_collective_permute=True)
+
     def render(self, d: int | None = None, itemsize: int = 4,
                max_edges: int = 8) -> str:
         """Human-readable plan (the ``dryrun --plan`` section)."""
@@ -290,6 +306,22 @@ class BlockPlan:
     def total_bytes_per_step(self, d: int, itemsize: int = 4) -> int:
         return self.block.num_edges * self.bytes_per_link_per_step(d,
                                                                    itemsize)
+
+    def contract(self, d: int, itemsize: int = 4, *, gossip_steps: int = 1):
+        """Block-mode collective budget (see ``CommPlan.contract``): at most
+        ``gossip_steps * num_colors`` block-level collective-permutes of
+        (K/M, d) payloads per step — ``num_colors <= Delta_block + 1`` by
+        the Misra-Gries bound, so this is at least as strict as the Vizing
+        budget the dist tests assert."""
+        from repro.analysis.contracts import CommContract
+        from repro.topo.lowering import comm_budget
+        budget = comm_budget(self, d, itemsize, gossip_steps=gossip_steps)
+        return CommContract(
+            name=f"block-K{self.num_nodes}-M{self.num_devices}-"
+                 f"c{self.num_colors}-d{d}",
+            max_collective_permute_count=budget["collective_permutes"],
+            max_collective_permute_bytes=budget["bytes_per_device"],
+            require_collective_permute=True)
 
     def render(self, d: int | None = None, itemsize: int = 4,
                max_edges: int = 8) -> str:

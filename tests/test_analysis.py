@@ -1,0 +1,282 @@
+"""repro.analysis: contract checking, lint passes, and seeded violations.
+
+Mesh-free coverage: ``check_comm`` clauses against synthetic HLO text,
+contract constructors against the lowering budget, jaxpr/AST passes on
+clean and seeded programs, and the whole-repo AST lint wall. The
+mesh-dependent drivers (and the injected-all-gather fixture) run in the
+slow subprocess test via ``python -m repro.analysis`` under 8 virtual
+devices — the same entry point CI's analysis job runs.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import astlint, contracts, passes, selftest
+from repro.core import topology as topo
+
+
+def _hlo(body: str, sig: str = "(p0: f32[64]) -> f32[64]") -> str:
+    return (f"HloModule m\n\nENTRY %main {sig} {{\n"
+            + textwrap.dedent(body).rstrip() + "\n}\n")
+
+
+PERMUTE_HLO = _hlo("""
+    %p0 = f32[64] parameter(0)
+    ROOT %cp = f32[64] collective-permute(%p0), source_target_pairs={{0,1},{1,0}}
+""")
+
+GATHER_HLO = _hlo("""
+    %p0 = f32[64] parameter(0)
+    ROOT %ag = f32[256] all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+""", "(p0: f32[64]) -> f32[256]")
+
+
+# --- check_comm clauses on synthetic HLO -----------------------------------
+
+def test_check_comm_passes_and_returns_report():
+    c = contracts.CommContract(name="t", max_collective_permute_bytes=256,
+                               max_collective_permute_count=1,
+                               require_collective_permute=True)
+    report = contracts.check_comm(PERMUTE_HLO, c)
+    assert report["collectives"]["collective-permute"] == 256
+    assert report["collective_counts"]["collective-permute"] == 1
+
+
+def test_check_comm_forbidden_kind():
+    with pytest.raises(contracts.CommContractViolation,
+                       match="forbidden all-gather"):
+        contracts.check_comm(GATHER_HLO, contracts.CommContract(name="t"))
+
+
+def test_check_comm_byte_and_count_caps():
+    with pytest.raises(contracts.CommContractViolation, match="bytes/device"):
+        contracts.check_comm(PERMUTE_HLO, contracts.CommContract(
+            name="t", max_collective_permute_bytes=255))
+    with pytest.raises(contracts.CommContractViolation,
+                       match="collective-permutes executed"):
+        contracts.check_comm(PERMUTE_HLO, contracts.CommContract(
+            name="t", max_collective_permute_count=0))
+
+
+def test_check_comm_require_collective_permute():
+    no_coll = _hlo("""
+        %p0 = f32[64] parameter(0)
+        ROOT %n = f32[64] negate(%p0)
+    """)
+    with pytest.raises(contracts.CommContractViolation,
+                       match="lost its neighbor exchange"):
+        contracts.check_comm(no_coll, contracts.CommContract(
+            name="t", require_collective_permute=True))
+
+
+def test_check_comm_all_reduce_allowance_and_floors():
+    ar = _hlo("""
+        %p0 = f32[64] parameter(0)
+        ROOT %ar = f32[64] all-reduce(%p0), replica_groups={{0,1}}
+    """)
+    ok = contracts.CommContract(
+        name="t", forbid=("all-gather",), max_all_reduce_bytes=2 * 64 * 4)
+    contracts.check_comm(ar, ok)
+    with pytest.raises(contracts.CommContractViolation, match="allowance"):
+        contracts.check_comm(ar, contracts.CommContract(
+            name="t", forbid=(), max_all_reduce_bytes=64))
+    with pytest.raises(contracts.CommContractViolation, match="MUST gather"):
+        contracts.check_comm(ar, contracts.gather_contract(
+            "t", min_all_gather_bytes=1))
+    contracts.check_comm(GATHER_HLO, contracts.gather_contract(
+        "t", min_all_gather_bytes=1024, min_total_bytes=1024))
+    with pytest.raises(contracts.CommContractViolation, match="total"):
+        contracts.check_comm(PERMUTE_HLO, contracts.gather_contract(
+            "t", min_total_bytes=10_000))
+
+
+def test_check_comm_violation_lists_every_clause():
+    c = contracts.CommContract(name="multi",
+                               max_collective_permute_count=0,
+                               min_total_bytes=10_000)
+    with pytest.raises(contracts.CommContractViolation) as ei:
+        contracts.check_comm(PERMUTE_HLO, c)
+    msg = str(ei.value)
+    assert "executed > budget" in msg and "total collective bytes" in msg
+    assert "[contract multi]" in msg
+
+
+# --- contract constructors vs the lowering budget --------------------------
+
+def test_plan_contract_matches_comm_budget():
+    from repro import topo as rtopo
+    from repro.topo.lowering import comm_budget
+
+    plan = rtopo.compile_plan(topo.torus_2d(2, 4))
+    d = 48
+    budget = comm_budget(plan, d, 4, gossip_steps=2)
+    c = plan.contract(d, 4, gossip_steps=2)
+    assert c.max_collective_permute_count == budget["collective_permutes"] \
+        == 2 * plan.num_colors
+    assert c.max_collective_permute_bytes == budget["bytes_per_device"] \
+        == 2 * plan.num_colors * d * 4
+    assert c.require_collective_permute
+    assert c.forbid == contracts.FORBID_NEIGHBOR_ONLY
+    assert "collective-permute" in c.describe()
+
+
+def test_block_plan_contract_within_vizing_budget():
+    from repro import topo as rtopo
+
+    k, m, d = 9, 3, 48
+    plan = rtopo.compile_block_plan(topo.complete(k), m)
+    delta_block = int(np.asarray(
+        [row.sum() for row in plan.block.support()]).max())
+    c = plan.contract(d)
+    assert c.max_collective_permute_count == plan.num_colors \
+        <= delta_block + 1
+    assert c.max_collective_permute_bytes == \
+        plan.num_colors * plan.local_nodes * d * 4
+
+
+def test_ring_and_certificate_contracts():
+    r = contracts.ring_contract(48, conn=2, gossip_steps=3)
+    assert r.max_collective_permute_count == 3 * 2 * 2
+    assert r.max_collective_permute_bytes == 3 * 2 * 2 * 48 * 4
+    cert = contracts.certificate_contract(48)
+    assert "all-reduce" not in cert.forbid
+    assert cert.max_all_reduce_bytes == (4 * 48 + 64) * 4
+
+
+# --- jaxpr passes: clean programs stay clean -------------------------------
+
+def test_jaxpr_passes_clean_program():
+    def fn(x, w):
+        def step(c, _):
+            return jnp.tanh(w @ c), None
+        from jax import lax
+        return lax.scan(step, x, None, length=3)[0]
+
+    findings = passes.run_jaxpr_passes(
+        fn, jnp.zeros((8,), jnp.float32), jnp.eye(8, dtype=jnp.float32))
+    assert findings == []
+
+
+def test_dtype_drift_flags_f16_roundtrip():
+    def fn(x):
+        return x.astype(jnp.float16).astype(jnp.float32)
+
+    closed = jax.make_jaxpr(fn)(jnp.zeros((4,), jnp.float32))
+    found = passes.dtype_drift(closed)
+    assert any("float16" in f.message for f in found)
+
+
+def test_donation_pass_accepts_working_donation():
+    def fn(x):
+        return x * 2.0
+
+    assert passes.donation(fn, (jnp.zeros((8,), jnp.float32),), (0,)) == []
+
+
+def test_retrace_monitor_clean_on_stable_key():
+    from repro.core import executor
+
+    executor.clear_driver_cache()
+
+    def run():
+        executor.cached_driver("stable-analysis-key",
+                               lambda: (lambda: None))
+
+    assert passes.check_retrace(run) == []
+    executor.clear_driver_cache()
+
+
+def test_walk_eqns_tracks_enclosing_primitives():
+    from jax import lax
+
+    def fn(x):
+        def step(c, _):
+            return jnp.sin(c), None
+        return lax.scan(step, x, None, length=2)[0]
+
+    closed = jax.make_jaxpr(fn)(jnp.float32(0.0))
+    paths = {eqn.primitive.name: path
+             for eqn, path in passes.walk_eqns(closed.jaxpr)}
+    assert paths["scan"] == ()
+    assert paths["sin"] == ("scan",)
+
+
+# --- seeded violations: every pass must fire -------------------------------
+
+@pytest.mark.parametrize("name", sorted(selftest.SELFTESTS))
+def test_seeded_violation_is_caught(name):
+    rows = {r[0]: r for r in selftest.run_selftests(skip_mesh=True)}
+    _, caught, detail = rows[name]
+    if caught is None:
+        pytest.skip(detail)
+    assert caught, detail
+
+
+# --- AST lint wall over the real source tree -------------------------------
+
+def test_repo_source_passes_ast_lints():
+    import pathlib
+
+    import repro.analysis as pkg
+    src_root = pathlib.Path(pkg.__file__).resolve().parent.parent
+    findings = astlint.lint_paths([src_root])
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_prng_rule_allows_rebinds_and_branches():
+    clean = textwrap.dedent("""
+        def sample(key):
+            a = jax.random.normal(key, (3,))
+            key, sub = jax.random.split(key)
+            b = jax.random.normal(key, (3,))
+            return a, b
+
+        def branchy(key, flag):
+            if flag:
+                x = jax.random.normal(key, (3,))
+            else:
+                x = jax.random.uniform(key, (3,))
+            return x
+
+        def two_fns_each_consume_own_param(key):
+            return jax.random.normal(key, ())
+
+        def second(key):
+            return jax.random.normal(key, ())
+    """)
+    assert astlint.lint_source(clean) == []
+
+
+def test_frozen_transform_rule_accepts_frozen():
+    ok = textwrap.dedent("""
+        @register_scenario("x")
+        @dataclasses.dataclass(frozen=True)
+        class Fine:
+            def apply(self, sched, ctx):
+                return None
+    """)
+    assert astlint.lint_source(ok) == []
+
+
+# --- the CLI end to end (the CI analysis job) ------------------------------
+
+@pytest.mark.slow
+def test_analysis_cli_all_and_selftest_subprocess():
+    env = dict(os.environ, PYTHONPATH="src:.")
+    env.pop("XLA_FLAGS", None)  # __main__ pins its own 8-device mesh
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--all", "--selftest"],
+        env=env, capture_output=True, text=True, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "repro.analysis: OK" in out.stdout
+    assert "MISSED" not in out.stdout
+    # every registered driver ran on the 8-device mesh (nothing skipped)
+    assert "SKIP " not in out.stdout.replace("SKIP selftest", ""), out.stdout
+    assert "CAUGHT comm-contract" in out.stdout

@@ -162,51 +162,26 @@ def test_certificate_record_hlo_is_o_d():
 
 def _assert_record_collectives_o_d():
     """Lower the dist certificate record program for a 4-device ring and
-    assert (via launch.hlo_analysis) it moves O(d) bytes per device: no
-    all-gather, collective-permute <= 2*conn*d*itemsize, scalar psums only
-    — while the gap recorder's program moves >= K*d bytes."""
-    from jax.sharding import NamedSharding
-    from repro.core import metrics as metrics_lib
-    from repro.core.cola import build_env, init_state
-    from repro.core.partition import make_partition
-    from repro.dist import runtime as rt
-    from repro.dist.sharding import cola_state_pspecs
-    from repro.launch import hlo_analysis
+    hold it to ``analysis.contracts.certificate_contract``: O(d) bytes per
+    device — no all-gather, collective-permute <= 2*conn*d*itemsize, and an
+    all-reduce allowance of (4d + 64)*itemsize covering the scalar row
+    reductions plus the (2, d) invariant-sum psum behind the
+    consensus_residual / certificate_violated metrics (lowered twice by XLA
+    across the early-stop branch) — while the gap recorder's program moves
+    >= K*d bytes. Programs come from ``analysis.drivers`` — byte-identical
+    to what ``python -m repro.analysis --all`` verifies in CI."""
+    from repro.analysis import contracts, drivers
 
     x, y, _ = synthetic.regression(150, 48, seed=2, sparsity_solution=0.2)
     prob = problems.lasso(jnp.asarray(x), jnp.asarray(y), 5e-2, box=5.0)
     k, conn, itemsize = jax.device_count(), 1, 4
-    graph = topo.ring(k)
-    part = make_partition(prob.n, k)
-    env = build_env(prob, part)
-    mesh = jax.make_mesh((k,), ("data",))
-    rec = metrics_lib.make_recorder("certificate", prob, part, env, graph,
-                                    topo.metropolis_weights(graph), 0.1)
-    rec = rt._place_recorder(rec, mesh, "data")
-    record = rt._certificate_dist_record(rec, mesh, "data", 1, "ring", conn)
-
-    state = init_state(prob, part)
-    sds = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
-                       state)
-    sh = NamedSharding(mesh, cola_state_pspecs("data"))
-    shardings = (jax.tree.map(lambda _: sh, sds),)
-    cert_hlo = jax.jit(record, in_shardings=shardings) \
-        .lower(sds).compile().as_text()
-    coll = hlo_analysis.analyze(cert_hlo)["collectives"]
-    assert coll["all-gather"] == 0, coll
-    assert coll["reduce-scatter"] == 0 and coll["all-to-all"] == 0, coll
-    assert coll["collective-permute"] <= 2 * conn * prob.d * itemsize, coll
-    # scalar row reductions + the (2, d) invariant-sum psum behind the
-    # consensus_residual / certificate_violated metrics (lowered twice by
-    # XLA across the early-stop branch) — still O(d), no K*d gather
-    assert coll["all-reduce"] <= (4 * prob.d + 64) * itemsize, coll
-
-    gap = metrics_lib.GapRecorder(prob, part)
-    gap_hlo = jax.jit(gap.record_fn, in_shardings=shardings) \
-        .lower(sds).compile().as_text()
-    gap_coll = hlo_analysis.analyze(gap_hlo)["collectives"]
+    cert_hlo = drivers.certificate_record_hlo(prob, topo.ring(k), k, conn)
+    contracts.check_comm(
+        cert_hlo, contracts.certificate_contract(prob.d, conn, itemsize))
     # the gather recorder moves the stacks: >= K*d bytes per device
-    assert gap_coll["total"] >= k * prob.d * itemsize, gap_coll
+    gap_hlo = drivers.gap_record_hlo(prob, k)
+    contracts.check_comm(gap_hlo, contracts.gather_contract(
+        "gap-recorder", min_total_bytes=k * prob.d * itemsize))
 
 
 # --- subprocess pin: 4-device ring parity + HLO from the 1-device suite ----

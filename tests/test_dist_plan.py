@@ -180,73 +180,24 @@ def test_plan_round_hlo_is_neighbor_only():
 
 
 def _assert_plan_round_neighbor_only():
-    """Lower the plan-executed round program for the device mesh and assert
-    (via launch.hlo_analysis) it moves NO all-gathered stacks: zero
-    all-gather/all-reduce bytes, collective-permute <= num_colors * d *
-    itemsize per gossip step — the paper's O(deg * d) communication model
-    in the actual HLO."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.core import mixing
-    from repro.core.cola import _round_body, build_env, init_state
-    from repro.core.partition import make_partition
-    from repro.dist import runtime as rt
-    from repro.dist.sharding import (cola_env_pspecs, cola_state_pspecs,
-                                     plan_payload_pspecs)
-    from repro.launch import hlo_analysis
-    from repro import topo as rtopo
+    """Lower the plan-executed round program for the device mesh and hold
+    it to the plan's declared ``CommContract`` (via ``analysis.check_comm``):
+    zero all-gather/all-reduce bytes, at most ``num_colors``
+    collective-permutes moving at most ``num_colors * d * itemsize`` per
+    gossip step — the paper's O(deg * d) communication model in the actual
+    HLO. The program is built by ``analysis.drivers`` — byte-identical to
+    what ``python -m repro.analysis --all`` verifies in CI."""
+    from repro.analysis import contracts, drivers
 
     x, y, _ = synthetic.regression(150, 48, seed=2, sparsity_solution=0.2)
     prob = problems.lasso(jnp.asarray(x), jnp.asarray(y), 5e-2, box=5.0)
     k, itemsize = jax.device_count(), 4
-    graph = _torus(k)
-    part = make_partition(prob.n, k)
-    env = build_env(prob, part)
-    mesh = jax.make_mesh((k,), ("data",))
-    plan = rtopo.compile_plan(graph)
-    cfg = ColaConfig(kappa=1.0)
-    mix_fn, grad_mix_fn = rt._dist_mixers("data", 1, 1, "plan",
-                                          cfg.gossip_steps, plan)
-    body = _round_body(prob, part, cfg, mix_fn=mix_fn,
-                       grad_mix_fn=grad_mix_fn)
-    state_spec, env_spec = cola_state_pspecs("data"), cola_env_pspecs("data")
-    shard_step = mixing.shard_map(
-        lambda st, e, pay, act: body(st, e, pay, act), mesh,
-        in_specs=(state_spec, env_spec, plan_payload_pspecs("data"),
-                  P("data")),
-        out_specs=state_spec)
-
-    w = topo.metropolis_weights(graph)
-    diag, coefs = rtopo.plan_coefficients(plan, w)
-    sds = lambda a: jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype)
-    args = (jax.tree.map(sds, init_state(prob, part)),
-            jax.tree.map(sds, env),
-            (sds(diag.astype(np.float32)), sds(coefs.astype(np.float32))),
-            sds(np.ones(k, np.float32)))
-    sh = lambda spec: NamedSharding(mesh, spec)
-    in_sh = (jax.tree.map(lambda _: sh(state_spec), args[0]),
-             jax.tree.map(lambda _: sh(env_spec), args[1]),
-             (sh(P("data")), sh(P(None, "data"))), sh(P("data")))
-    hlo = jax.jit(shard_step, in_shardings=in_sh) \
-        .lower(*args).compile().as_text()
-    coll = hlo_analysis.analyze(hlo)["collectives"]
-    assert coll["all-gather"] == 0, coll
-    assert coll["all-reduce"] == 0, coll
-    assert coll["reduce-scatter"] == 0 and coll["all-to-all"] == 0, coll
-    assert 0 < coll["collective-permute"] <= \
-        plan.num_colors * prob.d * itemsize, coll
+    hlo, plan = drivers.plan_round_hlo(prob, _torus(k), k)
+    contracts.check_comm(hlo, plan.contract(prob.d, itemsize))
     # the dense oracle on the same graph DOES gather the (K, d) stack
-    mix_d, grad_d = rt._dist_mixers("data", 1, 1, "dense", cfg.gossip_steps)
-    body_d = _round_body(prob, part, cfg, mix_fn=mix_d, grad_mix_fn=grad_d)
-    shard_d = mixing.shard_map(
-        lambda st, e, w_, act: body_d(st, e, w_, act), mesh,
-        in_specs=(state_spec, env_spec, P(), P("data")),
-        out_specs=state_spec)
-    w_sds = sds(w.astype(np.float32))
-    hlo_d = jax.jit(shard_d, in_shardings=(
-        in_sh[0], in_sh[1], sh(P()), sh(P("data")))) \
-        .lower(args[0], args[1], w_sds, args[3]).compile().as_text()
-    coll_d = hlo_analysis.analyze(hlo_d)["collectives"]
-    assert coll_d["all-gather"] >= k * prob.d * itemsize / k, coll_d
+    hlo_d = drivers.dense_round_hlo(prob, _torus(k), k)
+    contracts.check_comm(hlo_d, contracts.gather_contract(
+        "dense-oracle", min_all_gather_bytes=prob.d * itemsize))
 
 
 @pytest.mark.skipif(jax.device_count() < 3,
@@ -262,61 +213,22 @@ def _assert_block_round_neighbor_only():
     at most Delta_block + 1 collective-permutes (the block-level color
     count — NOT the 9 the per-node coloring would take), move at most
     colors * (K/M) * d * itemsize payload bytes per device, and contain
-    zero all-gathers/all-reduces."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.core import mixing
-    from repro.core.cola import _round_body, build_env, init_state
-    from repro.core.partition import make_partition
-    from repro.dist import runtime as rt
-    from repro.dist.sharding import (block_payload_pspec, cola_env_pspecs,
-                                     cola_state_pspecs)
-    from repro.launch import hlo_analysis
-    from repro import topo as rtopo
+    zero all-gathers/all-reduces — the ``BlockPlan.contract()`` budget,
+    checked via ``analysis.check_comm`` on the shared driver program."""
+    from repro.analysis import contracts, drivers
 
     k, m, itemsize = 9, 3, 4
     x, y, _ = synthetic.regression(153, 48, seed=2, sparsity_solution=0.2)
     prob = problems.lasso(jnp.asarray(x), jnp.asarray(y), 5e-2, box=5.0)
-    graph = topo.complete(k)
-    part = make_partition(prob.n, k)
-    env = build_env(prob, part)
-    mesh = jax.make_mesh((m,), ("data",))
-    plan = rtopo.compile_block_plan(graph, m)
+    hlo, plan = drivers.block_round_hlo(prob, topo.complete(k), k, m)
     delta_block = int(np.asarray(
         [row.sum() for row in plan.block.support()]).max())
-    assert plan.num_colors <= delta_block + 1  # Vizing bound on the quotient
-    cfg = ColaConfig(kappa=1.0)
-    mix_fn, grad_mix_fn = rt._dist_mixers("data", k // m, 1, "plan",
-                                          cfg.gossip_steps, plan)
-    body = _round_body(prob, part, cfg, mix_fn=mix_fn,
-                       grad_mix_fn=grad_mix_fn)
-    state_spec, env_spec = cola_state_pspecs("data"), cola_env_pspecs("data")
-    shard_step = mixing.shard_map(
-        lambda st, e, pay, act: body(st, e, pay, act), mesh,
-        in_specs=(state_spec, env_spec, block_payload_pspec("data"),
-                  P("data")),
-        out_specs=state_spec)
-
-    w = topo.metropolis_weights(graph).astype(np.float32)
-    sds = lambda a: jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype)
-    args = (jax.tree.map(sds, init_state(prob, part)),
-            jax.tree.map(sds, env), sds(w), sds(np.ones(k, np.float32)))
-    sh = lambda spec: NamedSharding(mesh, spec)
-    in_sh = (jax.tree.map(lambda _: sh(state_spec), args[0]),
-             jax.tree.map(lambda _: sh(env_spec), args[1]),
-             sh(block_payload_pspec("data")), sh(P("data")))
-    hlo = jax.jit(shard_step, in_shardings=in_sh) \
-        .lower(*args).compile().as_text()
-    rep = hlo_analysis.analyze(hlo)
-    coll, counts = rep["collectives"], rep["collective_counts"]
-    assert coll["all-gather"] == 0, coll
-    assert coll["all-reduce"] == 0, coll
-    assert coll["reduce-scatter"] == 0 and coll["all-to-all"] == 0, coll
-    # the acceptance budget: <= Delta_block + 1 collective-permutes of
-    # (K/M, d) block payloads — 3 on K_9-over-3-devices, not the 9+ the
-    # node-level coloring would cost
-    assert 0 < counts["collective-permute"] <= delta_block + 1, counts
-    assert coll["collective-permute"] <= \
-        plan.num_colors * plan.local_nodes * prob.d * itemsize, coll
+    # Vizing bound on the quotient: the contract's <= num_colors permute
+    # cap is therefore at least as strict as the <= Delta_block + 1
+    # acceptance budget (3 on K_9-over-3-devices, not the 9+ the
+    # node-level coloring would cost)
+    assert plan.num_colors <= delta_block + 1
+    contracts.check_comm(hlo, plan.contract(prob.d, itemsize))
 
 
 # --- subprocess pin: the full acceptance scenario from the 1-device suite --

@@ -152,3 +152,106 @@ def test_fingerprint_refuses_address_based_reprs():
 
     with pytest.raises(TypeError, match="content-hash"):
         exec_engine.fingerprint(Opaque())
+
+
+# --- fingerprint memoization (the digest cached on frozen dataclasses) -----
+
+def test_fingerprint_memoizes_on_frozen_dataclasses_only():
+    import dataclasses
+
+    @dataclasses.dataclass(frozen=True)
+    class Frozen:
+        v: float
+
+    @dataclasses.dataclass
+    class Mutable:
+        v: float
+
+    fz = Frozen(1.0)
+    fp = exec_engine.fingerprint(fz)
+    assert getattr(fz, exec_engine._FP_MEMO_ATTR) == fp
+    assert exec_engine.fingerprint(fz) == fp  # memo path, same digest
+
+    mu = Mutable(1.0)
+    exec_engine.fingerprint(mu)
+    assert not hasattr(mu, exec_engine._FP_MEMO_ATTR)
+    # and the mutable object correctly rehashes after mutation
+    before = exec_engine.fingerprint(mu)
+    mu.v = 2.0
+    assert exec_engine.fingerprint(mu) != before
+
+
+def test_fingerprint_memo_staleness_on_inplace_array_mutation():
+    """The documented soundness boundary: a frozen dataclass wrapping a
+    MUTABLE np array mutated in place returns the memoized (now stale)
+    digest — clearing the memo rehashes the real content. This pins the
+    contract so a future memo change can't silently widen it."""
+    import dataclasses
+
+    @dataclasses.dataclass(frozen=True)
+    class Holder:
+        a: np.ndarray
+
+    h = Holder(np.arange(4, dtype=np.float32))
+    fp0 = exec_engine.fingerprint(h)
+    h.a[0] = 99.0  # in-place: the frozen wrapper can't see it
+    assert exec_engine.fingerprint(h) == fp0  # stale memo, by design
+    object.__delattr__(h, exec_engine._FP_MEMO_ATTR)
+    fp1 = exec_engine.fingerprint(h)
+    assert fp1 != fp0  # rehash sees the mutation
+    assert fp1 == exec_engine.fingerprint(
+        Holder(np.asarray([99.0, 1.0, 2.0, 3.0], np.float32)))
+
+
+def test_fingerprint_memo_agrees_across_equal_problems():
+    """Memoized and fresh digests of distinct-but-equal Problems coincide
+    (the memo is an optimization, never a key change)."""
+    p1, p2 = _ridge(), _ridge()
+    fp1 = exec_engine.fingerprint(p1)   # memoizes on p1
+    assert exec_engine.fingerprint(p1) == fp1
+    assert exec_engine.fingerprint(p2) == fp1  # p2 hashed from scratch
+    assert getattr(p2, exec_engine._FP_MEMO_ATTR) == fp1
+    # multi-object calls never read or write memos
+    assert exec_engine.fingerprint(p1, p1) == exec_engine.fingerprint(p2, p2)
+
+
+def test_clear_driver_cache_releases_pinned_closures():
+    """A cached driver's closure pins its Problem; clear_driver_cache must
+    actually release it (the liveness half of the id()-key bugfix)."""
+    import weakref
+
+    exec_engine.clear_driver_cache()
+    graph, cfg = topo.ring(4), ColaConfig(kappa=1.0)
+    p = _ridge(y_shift=3.0)  # content unique to this test
+    run_cola(p, graph, cfg, 5)
+    assert len(exec_engine._DRIVER_CACHE) > 0
+    ref = weakref.ref(p)
+    del p
+    gc.collect()
+    assert ref() is not None, "cached driver should pin the Problem"
+    exec_engine.clear_driver_cache()
+    gc.collect()
+    assert ref() is None, "clear_driver_cache left the Problem pinned"
+
+
+def test_driver_cache_stats_and_listeners():
+    """The retrace-accounting API: stats count hits/misses/bypasses and
+    listeners observe every resolution (what analysis.RetraceMonitor and
+    round_bench --check consume)."""
+    exec_engine.clear_driver_cache()
+    exec_engine.driver_cache_stats(reset=True)
+    events = []
+    exec_engine._CACHE_LISTENERS.append(lambda k, kind: events.append(kind))
+    try:
+        exec_engine.cached_driver("stats-key", lambda: (lambda: 1))
+        exec_engine.cached_driver("stats-key", lambda: (lambda: 2))
+        exec_engine.cached_driver(None, lambda: (lambda: 3))
+    finally:
+        exec_engine._CACHE_LISTENERS.pop()
+    stats = exec_engine.driver_cache_stats()
+    assert stats["misses"] >= 1 and stats["hits"] >= 1 \
+        and stats["bypass"] >= 1
+    assert events == ["misses", "hits", "bypass"]
+    # the warmed key resolved to the SAME driver object
+    assert exec_engine.cached_driver("stats-key", lambda: (lambda: 4))() == 1
+    exec_engine.clear_driver_cache()

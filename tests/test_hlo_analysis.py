@@ -1,9 +1,12 @@
 """Trip-count-aware HLO analyzer vs hand-computed costs."""
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import pytest
 from jax import lax
 
+from repro.launch import hlo_analysis
 from repro.launch.hlo_analysis import analyze
 
 
@@ -84,3 +87,58 @@ def test_traffic_counts_dot_operands_not_sliced_stacks():
     # aliasing-aware model stays well under that while seeing real traffic
     assert r["bytes"] < L * stack_bytes * 0.7
     assert r["bytes"] >= L * per_trip * 0.5
+
+
+# --- shape-parser coverage: f8 dtypes and zero-payload types ---------------
+
+def test_parse_shapes_counts_f8_dtypes():
+    shapes = hlo_analysis._parse_shapes("(f8e4m3fn[8,16], f8e5m2[4], f32[4])")
+    assert ("f8e4m3fn", (8, 16)) in shapes
+    assert ("f8e5m2", (4,)) in shapes
+    assert hlo_analysis._bytes_of("f8e4m3fn[8,16]") == 8 * 16
+    assert hlo_analysis._bytes_of("f8e5m2fnuz[10]") == 10
+
+
+def test_parse_shapes_keeps_tokens_as_zero_bytes():
+    """token[]/opaque[] parse as zero-element entries instead of being
+    silently dropped — a tuple mixing them with arrays keeps array bytes."""
+    mixed = "(f32[8], token[], opaque[])"
+    shapes = hlo_analysis._parse_shapes(mixed)
+    assert ("token", (0,)) in shapes
+    assert ("opaque", (0,)) in shapes
+    assert hlo_analysis._bytes_of(mixed) == 8 * 4
+    assert hlo_analysis._bytes_of("token[]") == 0
+    assert hlo_analysis._elems_of("token[]") == 0
+
+
+def test_analyze_counts_f8_collective_permute():
+    """An f8 ppermute used to contribute ZERO bytes (dtype missing from the
+    table) — a quantized-payload gossip step would have passed any byte
+    budget vacuously."""
+    hlo = textwrap.dedent("""\
+        HloModule m
+
+        ENTRY %main (p0: f8e5m2[64]) -> f8e5m2[64] {
+          %p0 = f8e5m2[64] parameter(0)
+          ROOT %cp = f8e5m2[64] collective-permute(%p0), source_target_pairs={{0,1},{1,0}}
+        }
+    """)
+    r = analyze(hlo)
+    assert r["collectives"]["collective-permute"] == 64  # 1 byte/elem
+    assert r["collective_counts"]["collective-permute"] == 1
+
+
+def test_analyze_token_tuple_collective():
+    """A collective whose result tuple carries a token still counts its
+    array payload (and the token adds nothing)."""
+    hlo = textwrap.dedent("""\
+        HloModule m
+
+        ENTRY %main (p0: f32[16]) -> (f32[16], token[]) {
+          %p0 = f32[16] parameter(0)
+          ROOT %ar = (f32[16], token[]) all-reduce(%p0), replica_groups={{0,1}}
+        }
+    """)
+    r = analyze(hlo)
+    # all-reduce bytes count x2 (reduce + broadcast)
+    assert r["collectives"]["all-reduce"] == 2 * 16 * 4
