@@ -16,7 +16,13 @@ each graph reports:
 * a plan-vs-dense oracle check: one compiled-plan gossip step must equal
   ``dense_mix`` on the same W (the property the dist runtime's plan path
   relies on) and one block-plan step must equal it BITWISE, asserted here
-  for both the static W and a churn-reweighted round.
+  for both the static W and a churn-reweighted round;
+* convergence-vs-bytes (``fig3_wire`` rows): for each wire codec (fp32 /
+  fp8 / int8, error feedback on and off) the rounds to reach the fp32
+  run's final suboptimality and the total wire bytes per device spent
+  getting there — the trade the quantized wire buys: EF runs land near the
+  fp32 round count at a quarter of the bytes, while the no-EF runs hit
+  their quantization noise floor and may never certify ("-").
 """
 from __future__ import annotations
 
@@ -29,6 +35,11 @@ from benchmarks.common import csv_row, make_ridge
 
 SWEEP = ("ring", "cycle2", "cycle3", "grid", "torus2d", "expander",
          "complete")
+
+#: (wire, error_feedback) columns of the convergence-vs-bytes table;
+#: fp32 has no codec so EF is moot there
+WIRE_SWEEP = (("fp32", True), ("fp8", True), ("fp8", False),
+              ("int8", True), ("int8", False))
 
 
 def _check_plan_oracle(graph: topo.Topology, w: np.ndarray, seed: int = 0,
@@ -89,6 +100,38 @@ def run(fast: bool = True):
                          "block4_colors": bplan.num_colors,
                          "block4_bytes_per_device": blk_bytes_dev,
                          "subopt_static": sub_s, "subopt_churn": sub_c}
+
+    # -- convergence vs bytes: what the quantized wire actually buys ------
+    csv_row("fig", "topology", "wire", "eps", "rounds_to_eps",
+            "wire_bytes_per_dev_per_round", "wire_bytes_to_eps")
+    for name in SWEEP:
+        g = topo_programs.build(name, k)
+        plan = topo_programs.compile_plan(g)
+        subs = {}
+        for wire, ef in WIRE_SWEEP:
+            res = run_cola(prob, g,
+                           ColaConfig(kappa=1.0, wire=wire,
+                                      error_feedback=ef),
+                           rounds=rounds, record_every=1)
+            subs[(wire, ef)] = np.asarray(res.history["primal"]) - opt
+        # target: the fp32 run's final suboptimality (+5% slack) — the
+        # quality bar every codec column is racing to at its own byte rate
+        eps = 1.05 * max(float(subs[("fp32", True)][-1]), 1e-7)
+        wires = results[name]["wire"] = {}
+        for (wire, ef), sub in subs.items():
+            hit = np.nonzero(sub <= eps)[0]
+            r2e = int(hit[0]) + 1 if hit.size else None
+            per_round = plan.bytes_per_device_per_step(d, itemsize,
+                                                       wire=wire)
+            label = wire + ("" if wire == "fp32" else
+                            ("+ef" if ef else "-ef"))
+            csv_row("fig3_wire", name, label, f"{eps:.2e}",
+                    "-" if r2e is None else r2e, per_round,
+                    "-" if r2e is None else r2e * per_round)
+            wires[label] = {"rounds_to_eps": r2e,
+                            "bytes_per_round": per_round,
+                            "bytes_to_eps":
+                                None if r2e is None else r2e * per_round}
     return results
 
 

@@ -76,6 +76,21 @@ _GATED = ("block_rounds_per_sec", "dist_block_rounds_per_sec") \
 # of _GATED and out of the committed-baseline bookkeeping
 _ROBUST_KEY = "robust_gossip_rounds_per_sec"
 _ROBUST_MAX_OVERHEAD = 1.3
+# smoke's ~30ms runs are dispatch-bound and the same-run overhead ratios
+# jitter +-25% even interleaved (single-core CI boxes), so --smoke holds
+# looser SANITY bars; the tight claims above are enforced on the full run
+_ROBUST_SMOKE_MAX = 2.0
+_QUANT_SMOKE_MAX = 4.0
+# quantized (int8 + EF) plan gossip: same-run ratio against plain plan
+# gossip. The codec trades FLOPs for bytes, so on a CPU mesh — where bytes
+# are free and the encode is real work — it IS slower; the bar caps how
+# much. The pipelined variant double-buffers the payload so the wire work
+# can overlap the solve; CPU has no async collectives to overlap, so its
+# gate is no-regression against the unpipelined quantized run (the
+# overlap itself is asserted structurally: pipeline_order_ok).
+_QUANT_KEY = "quant_gossip_rounds_per_sec"
+_QUANT_MAX_OVERHEAD = 3.0
+_PIPE_KEY = "pipelined_gossip_rounds_per_sec"
 
 
 def _bench_case(runner, rounds, repeats: int = 3):
@@ -176,20 +191,57 @@ _PLAN_BENCH_SCRIPT = textwrap.dedent("""
             best = max(best, rounds / (time.perf_counter() - t0))
         return best, res
 
-    plan_rps, plan_res = bench("plan")
+    # the robust/plan and pipe/quant gates are RATIOS of two same-run
+    # measurements, so time each pair INTERLEAVED (a load spike hits both
+    # runs, not whichever happened to go second) and with more repeats than
+    # the absolute rows — at smoke's 50 rounds a single rep is ~30ms and
+    # best-of-3 back-to-back still carries +-20% jitter
+    def bench_pair(cfg_a, cfg_b, reps=8):
+        run = lambda c: run_dist_cola(prob, graph, c, mesh, rounds,
+                                      comm="plan", record_every=rounds - 1)
+        res_a, res_b = run(cfg_a), run(cfg_b)  # warmups own compilation
+        bests = [0.0, 0.0]
+        for _ in range(reps):
+            for i, c in enumerate((cfg_a, cfg_b)):
+                t0 = time.perf_counter()
+                jax.block_until_ready(run(c).state.x_parts)
+                bests[i] = max(bests[i], rounds / (time.perf_counter() - t0))
+        return bests[0], res_a, bests[1], res_b
+
+    plan_rps, plan_res, robust_rps, robust_res = bench_pair(
+        cfg, ColaConfig(kappa=1.0, robust="trim"))
     dense_rps, dense_res = bench("dense")
-    robust_rps, robust_res = bench("plan",
-                                   ColaConfig(kappa=1.0, robust="trim"))
     assert np.allclose(plan_res.history["primal"][-1],
                        dense_res.history["primal"][-1], rtol=1e-5), \\
         "plan gossip diverged from the dense oracle"
     assert np.allclose(robust_res.history["primal"][-1],
                        plan_res.history["primal"][-1], rtol=1e-5), \\
         "robust trim on a clean run diverged from plain plan gossip"
+
+    quant_rps, quant_res, pipe_rps, pipe_res = bench_pair(
+        ColaConfig(kappa=1.0, wire="int8"),
+        ColaConfig(kappa=1.0, wire="int8", pipeline=True))
+    assert np.array_equal(np.asarray(quant_res.state.x_parts),
+                          np.asarray(pipe_res.state.x_parts)), \\
+        "pipelined int8 run diverged from the unpipelined one"
+
+    # HLO structure: the pipelined body's first ppermute must consume the
+    # CARRIED double buffer (operand chain free of compute) — and the
+    # unpipelined body must fail the same check, or the checker is vacuous
+    from repro.analysis import drivers as an_drivers
+    hlo_p, _ = an_drivers.quant_round_hlo(prob, graph, 8, 4, "int8",
+                                          pipeline=True)
+    hlo_u, _ = an_drivers.quant_round_hlo(prob, graph, 8, 4, "int8")
+    order_ok = (not an_drivers.pipeline_order_findings(hlo_p, "bench")
+                and bool(an_drivers.pipeline_order_findings(hlo_u, "bench")))
+
     print("PLANBENCH " + json.dumps(
         {"plan_gossip_rounds_per_sec": round(plan_rps, 2),
          "dense_gossip_rounds_per_sec": round(dense_rps, 2),
-         "robust_gossip_rounds_per_sec": round(robust_rps, 2)}))
+         "robust_gossip_rounds_per_sec": round(robust_rps, 2),
+         "quant_gossip_rounds_per_sec": round(quant_rps, 2),
+         "pipelined_gossip_rounds_per_sec": round(pipe_rps, 2),
+         "pipeline_order_ok": order_ok}))
 """)
 
 
@@ -209,7 +261,8 @@ def bench_plan_gossip(smoke: bool = False) -> dict:
         if line.startswith("PLANBENCH "):
             vals = json.loads(line[len("PLANBENCH "):])
             for key, rps in vals.items():
-                csv_row("round_bench", key, f"K=8,T={rounds}", f"{rps:.1f}")
+                csv_row("round_bench", key, f"K=8,T={rounds}",
+                        str(rps) if isinstance(rps, bool) else f"{rps:.1f}")
             return vals
     raise RuntimeError("plan gossip bench subprocess failed:\n"
                        + out.stdout + "\n" + out.stderr)
@@ -298,7 +351,9 @@ def check_regression(result: dict, smoke: bool, tolerance: float) -> list[str]:
         csv_row("round_bench", "gate", key,
                 f"{got:.1f} vs bar {bar:.1f} (committed {base:.1f})")
     # robust-mixing overhead: same-run ratio against plain plan gossip, so
-    # no committed baseline and no drift correction is involved
+    # no committed baseline and no drift correction is involved (smoke
+    # holds the sanity bars — see _ROBUST_SMOKE_MAX)
+    robust_bar = _ROBUST_SMOKE_MAX if smoke else _ROBUST_MAX_OVERHEAD
     robust = result.get(_ROBUST_KEY)
     if not robust:
         failures.append(f"missing {_ROBUST_KEY} measurement")
@@ -306,11 +361,48 @@ def check_regression(result: dict, smoke: bool, tolerance: float) -> list[str]:
         overhead = result["plan_gossip_rounds_per_sec"] / robust
         csv_row("round_bench", "gate", _ROBUST_KEY,
                 f"{overhead:.2f}x overhead vs plain plan gossip "
-                f"(bar {_ROBUST_MAX_OVERHEAD:.1f}x)")
-        if overhead > _ROBUST_MAX_OVERHEAD:
+                f"(bar {robust_bar:.2f}x)")
+        if overhead > robust_bar:
             failures.append(
                 f"{_ROBUST_KEY}: robust trim costs {overhead:.2f}x over "
-                f"plain plan gossip (bar {_ROBUST_MAX_OVERHEAD:.1f}x)")
+                f"plain plan gossip (bar {robust_bar:.2f}x)")
+    # quantized-wire overhead and pipelining: same-run ratios too
+    quant_bar = _QUANT_SMOKE_MAX if smoke else _QUANT_MAX_OVERHEAD
+    quant = result.get(_QUANT_KEY)
+    if not quant:
+        failures.append(f"missing {_QUANT_KEY} measurement")
+    else:
+        overhead = result["plan_gossip_rounds_per_sec"] / quant
+        csv_row("round_bench", "gate", _QUANT_KEY,
+                f"{overhead:.2f}x overhead vs fp32 plan gossip "
+                f"(bar {quant_bar:.2f}x)")
+        if overhead > quant_bar:
+            failures.append(
+                f"{_QUANT_KEY}: the int8 codec costs {overhead:.2f}x over "
+                f"fp32 plan gossip (bar {quant_bar:.2f}x)")
+    pipe = result.get(_PIPE_KEY)
+    if not pipe or not quant:
+        failures.append(f"missing {_PIPE_KEY} measurement")
+    else:
+        ratio = pipe / quant
+        # smoke geometry is dispatch-bound (the ~30ms runs measure the
+        # extra buffer carry, not the round), so only the full-size run
+        # holds the >= 1.0x no-regression bar; smoke gets double slack
+        bar = 1.0 - (2 * tolerance if smoke else tolerance)
+        csv_row("round_bench", "gate", _PIPE_KEY,
+                f"{ratio:.2f}x vs unpipelined quantized "
+                f"(bar {bar:.2f}x)")
+        if ratio < bar:
+            failures.append(
+                f"{_PIPE_KEY}: pipelining costs {ratio:.2f}x of the "
+                f"unpipelined quantized run (bar {bar:.2f}x) — "
+                "the double buffer is adding work, not hiding it")
+    if not result.get("pipeline_order_ok"):
+        failures.append(
+            "pipeline_order_ok is false: the pipelined body's first "
+            "ppermute no longer consumes the carried double buffer (or the "
+            "order checker stopped discriminating against the unpipelined "
+            "body)")
     return failures
 
 

@@ -212,6 +212,141 @@ def block_round_hlo(prob, graph, k: int, m: int, *,
     return hlo, plan
 
 
+def quant_round_hlo(prob, graph, k: int, m: int, wire: str, *,
+                    pipeline: bool = False,
+                    inject_fp32_leak: bool = False):
+    """Compiled HLO of the quantized-wire round — the block program
+    ``run_dist_cola(comm="plan", wire=...)`` executes (quantized wires
+    always lower through the BlockPlan, even at one node per device) —
+    plus its ``BlockPlan``.
+
+    ``pipeline=True`` lowers the double-buffered body: round t's step-0
+    payload was encoded at the end of round t-1 and rides ``ColaState.buf``,
+    so the first ppermutes depend only on carried state, not on this
+    round's compute. ``inject_fp32_leak`` plants the seeded violation for
+    the verifier selftest: the raw fp32 dual block crossing the wire that
+    the codec exists to narrow — the claimed-int8 byte cap must catch it.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro import topo as rtopo
+    from repro.core import mixing, quant, topology as topo
+    from repro.core.cola import (ColaConfig, _arm_wire_state, _round_body,
+                                 build_env, init_state)
+    from repro.core.partition import make_partition
+    from repro.dist import runtime as rt
+    from repro.dist.sharding import (block_payload_pspec, cola_env_pspecs,
+                                     cola_state_pspecs)
+
+    _require_devices(m)
+    part = make_partition(prob.n, k)
+    env = build_env(prob, part)
+    mesh = jax.make_mesh((m,), ("data",))
+    plan = rtopo.compile_block_plan(graph, m)
+    cfg = ColaConfig(kappa=1.0, wire=wire, pipeline=pipeline)
+    mix_fn, grad_mix_fn = rt._dist_mixers("data", k // m, 1, "plan",
+                                          cfg.gossip_steps, plan)
+    qmix_fn, qencode_fn = rt._dist_qmixers("data", k // m, "plan", cfg,
+                                           plan)
+    body = _round_body(prob, part, cfg, mix_fn=mix_fn,
+                       grad_mix_fn=grad_mix_fn, qmix_fn=qmix_fn,
+                       qencode_fn=qencode_fn)
+
+    def round_fn(st, e, pay, act, qk, qk_next):
+        new = body(st, e, pay, act, None, None, qk,
+                   qk_next if pipeline else None)
+        if inject_fp32_leak:
+            # the seeded violation: a live fp32 (K/M, d) payload ppermuted
+            # around the mesh — exactly the wide wire the codec narrows
+            leak = lax.ppermute(st.v_stack, "data",
+                                [(i, (i + 1) % m) for i in range(m)])
+            new = new._replace(
+                v_stack=new.v_stack + leak * jnp.float32(1e-30))
+        return new
+
+    state = init_state(prob, part)
+    keys = np.asarray(quant.round_keys(0, 2))
+    state = _arm_wire_state(state, cfg, keys[0])
+    state_spec, env_spec = cola_state_pspecs("data"), cola_env_pspecs("data")
+    shard_step = mixing.shard_map(
+        round_fn, mesh,
+        in_specs=(state_spec, env_spec, block_payload_pspec("data"),
+                  P("data"), P(), P()),
+        out_specs=state_spec)
+    w = topo.metropolis_weights(graph).astype(np.float32)
+    sds = lambda a: jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype)
+    args = (jax.tree.map(sds, state), jax.tree.map(sds, env), sds(w),
+            sds(np.ones(k, np.float32)), sds(keys[0]), sds(keys[1]))
+    sh = lambda spec: NamedSharding(mesh, spec)
+    in_sh = (jax.tree.map(lambda _: sh(state_spec), args[0]),
+             jax.tree.map(lambda _: sh(env_spec), args[1]),
+             sh(block_payload_pspec("data")), sh(P("data")),
+             sh(P()), sh(P()))
+    hlo = jax.jit(shard_step, in_shardings=in_sh) \
+        .lower(*args).compile().as_text()
+    return hlo, plan
+
+
+def _param_only_chain(comp, start_ops, allowed=(
+        "get-tuple-element", "bitcast", "bitcast-convert", "reshape",
+        "copy", "convert", "transpose", "tuple", "constant",
+        "broadcast")) -> bool:
+    """True iff every transitive operand of ``start_ops`` resolves to a
+    computation parameter through shape-plumbing ops only — i.e. the value
+    was ready at computation entry, with no compute on the critical path."""
+    by_name = {op.name: op for op in comp.ops}
+    from repro.launch.hlo_analysis import _operands
+    stack = [by_name[sym] for op in start_ops
+             for sym in _operands(op) if sym in by_name]
+    seen = set()
+    while stack:
+        op = stack.pop()
+        if op.name in seen:
+            continue
+        seen.add(op.name)
+        if op.opcode == "parameter":
+            continue
+        if op.opcode not in allowed:
+            return False
+        for sym in _operands(op):
+            if sym in by_name:
+                stack.append(by_name[sym])
+    return True
+
+
+def pipeline_order_findings(hlo: str, where: str) -> List[Finding]:
+    """The pipelined round body must issue its first collective-permute
+    from the CARRIED double buffer: the payload's operand chain reaches
+    computation parameters without any compute (no quantize reduce, no CD
+    dot), which is what lets the exchange overlap this round's solve. The
+    unpipelined body fails this — its step-0 payload is quantized from the
+    round's own v, so the permute waits on an absmax reduction."""
+    from repro.launch import hlo_analysis
+    comps, _ = hlo_analysis.parse_module(hlo)
+    checked = 0
+    for comp in comps.values():
+        perms = [op for op in comp.ops
+                 if op.opcode.startswith("collective-permute")
+                 and not op.opcode.endswith("-done")]
+        if not perms:
+            continue
+        checked += 1
+        if _param_only_chain(comp, perms[:1]):
+            return []
+    if not checked:
+        return [Finding("pipeline-order",
+                        "no computation issues a collective-permute — the "
+                        "round body lost its neighbor exchange", where=where)]
+    return [Finding(
+        "pipeline-order",
+        "first collective-permute depends on this round's compute (its "
+        "operand chain does not resolve to carried parameters) — the "
+        "double-buffered payload is not overlapping the solve",
+        where=where)]
+
+
 def certificate_record_hlo(prob, graph, k: int, conn: int = 1,
                            comm: str = "ring") -> str:
     """Compiled HLO of the dist certificate record program (``comm`` in
@@ -437,6 +572,47 @@ def check_dist_block_robust() -> List[Finding]:
     return _check_comm_to_findings(
         lambda: contracts.check_comm(hlo, plan.contract(prob.d)),
         "dist-block-robust")
+
+
+@register_driver("dist-plan-int8")
+def check_dist_plan_int8() -> List[Finding]:
+    """The quantized wire's headline contract: the int8 round program
+    (what ``run_dist_cola(comm="plan", wire="int8")`` compiles) moves at
+    most the narrow-wire ppermute budget — itself required to be <= 0.3x
+    the fp32 budget — and gathers nothing."""
+    from repro.core import topology as topo
+    prob = _lasso()
+    k, m = 8, 4
+    hlo, plan = quant_round_hlo(prob, topo.torus_2d(2, 4), k, m, "int8")
+    contract = plan.contract(prob.d, wire="int8")
+    fp32_cap = plan.contract(prob.d).max_collective_permute_bytes
+    findings = []
+    if contract.max_collective_permute_bytes > 0.3 * fp32_cap:
+        findings.append(Finding(
+            "comm-contract",
+            f"int8 wire budget {contract.max_collective_permute_bytes:,.0f}"
+            f" B/device exceeds 0.3x the fp32 budget {fp32_cap:,.0f} — the"
+            " codec is not actually narrowing the wire",
+            where="dist-plan-int8"))
+    return findings + _check_comm_to_findings(
+        lambda: contracts.check_comm(hlo, contract), "dist-plan-int8")
+
+
+@register_driver("dist-plan-fp8-pipelined")
+def check_dist_plan_fp8_pipelined() -> List[Finding]:
+    """The double-buffered fp8 round: same narrow-wire comm contract, plus
+    the pipeline-structure check — the first ppermute must consume the
+    CARRIED payload buffer (no compute on its operand chain), which is the
+    HLO-visible form of 'comm overlaps the CD solve'."""
+    from repro.core import topology as topo
+    prob = _lasso()
+    k, m = 8, 4
+    hlo, plan = quant_round_hlo(prob, topo.torus_2d(2, 4), k, m, "fp8",
+                                pipeline=True)
+    findings = _check_comm_to_findings(
+        lambda: contracts.check_comm(hlo, plan.contract(prob.d, wire="fp8")),
+        "dist-plan-fp8-pipelined")
+    return findings + pipeline_order_findings(hlo, "dist-plan-fp8-pipelined")
 
 
 @register_driver("cert-ring")

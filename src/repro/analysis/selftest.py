@@ -133,6 +133,25 @@ def seeded_all_gather() -> List[Finding]:
     return []
 
 
+@register_selftest("comm-contract-wire")
+def seeded_fp32_leak() -> List[Finding]:
+    """An fp32 payload ppermuted across a claimed-int8 wire: the narrow
+    contract's byte cap must catch the wide leak. Needs a 4-device mesh
+    (raises ``drivers.SkipDriver`` otherwise)."""
+    from repro.analysis import contracts, drivers
+    from repro.core import topology as topo
+
+    prob = drivers._lasso()
+    hlo, plan = drivers.quant_round_hlo(prob, topo.torus_2d(2, 4), 8, 4,
+                                        "int8", inject_fp32_leak=True)
+    try:
+        contracts.check_comm(hlo, plan.contract(prob.d, wire="int8"))
+    except contracts.CommContractViolation as e:
+        return [Finding("comm-contract", str(e),
+                        where="selftest:fp32-on-int8-wire")]
+    return []
+
+
 _AST_VIOLATIONS = {
     "frozen-transform": """
         class Mutable:

@@ -39,7 +39,7 @@ import numpy as np
 from jax import lax
 
 from repro.core import executor as exec_engine, metrics as metrics_lib, \
-    mixing, topology as topo
+    mixing, quant, topology as topo
 from repro.core.duality import GapReport, gap_report
 from repro.core.partition import Partition, make_partition
 from repro.core.problems import Problem
@@ -68,6 +68,23 @@ class ColaConfig:
     #   steps apply sequentially (no W^B fold).
     robust_trim: int = 1            # extremes dropped per side ("trim" mode)
     robust_clip: float | None = None  # clip radius; None = median-adaptive
+    wire: str = "fp32"              # gossip payload codec (repro.core.quant):
+    #   "fp32" — the paper's full-precision wire; "int8" / "fp8" /
+    #   "fp8_e5m2" — per-node-row absmax quantization with stochastic
+    #   rounding keyed by fold_in(round, step, color): payloads cross every
+    #   link at 1 byte/elem plus a 4-byte fp32 scale sidecar per row.
+    error_feedback: bool = True     # EF-compressed gossip on quantized
+    #   wires: send Q(v + e), keep e' = (v + e) - deq. The residual rides
+    #   the scan carry (ColaState.ef) and telescopes across rounds, which
+    #   is what lets the narrow wire reach the fp32 fixed point; without it
+    #   the quantization error accumulates as a noise floor.
+    pipeline: bool = False          # software-pipeline comm against compute
+    #   (quantized wires only): round t+1's step-0 payload is encoded at
+    #   the END of round t and double-buffered in the scan carry
+    #   (ColaState.buf), so its ppermutes issue at the TOP of the next
+    #   round body BEFORE the local CD solve — bitwise identical to the
+    #   unpipelined schedule, structured so a Pallas async-remote-DMA
+    #   backend can overlap the transfer with the solve.
 
     def resolved_sigma(self, k: int) -> float:
         return self.gamma * k if self.sigma_prime is None else self.sigma_prime
@@ -86,6 +103,12 @@ class ColaConfig:
 class ColaState(NamedTuple):
     x_parts: jax.Array  # (K, n_k)
     v_stack: jax.Array  # (K, d)
+    # (K, d) error-feedback residual on quantized wires (None on fp32: the
+    # pytree — and every fp32 program — is unchanged by the new fields)
+    ef: jax.Array | None = None
+    # pre-encoded (payload, scale) for the NEXT round's step-0 gossip when
+    # cfg.pipeline — the double buffer the round body's ppermutes consume
+    buf: Any = None
 
 
 class ColaEnv(NamedTuple):
@@ -141,7 +164,9 @@ def _apply_payload_attack(v: jax.Array, atk: dict | None) -> jax.Array:
 
 def _round_body(problem: Problem, part: Partition, cfg: ColaConfig, *,
                 mix_fn: Callable | None = None,
-                grad_mix_fn: Callable | None = None) -> Callable:
+                grad_mix_fn: Callable | None = None,
+                qmix_fn: Callable | None = None,
+                qencode_fn: Callable | None = None) -> Callable:
     """The pure one-round function of Algorithm 1, shared verbatim by the
     per-round loop (``make_round``), the round-block scan executor, and the
     shard_map distributed runtime (``repro.dist.runtime``) — which is what
@@ -167,6 +192,16 @@ def _round_body(problem: Problem, part: Partition, cfg: ColaConfig, *,
     k = part.num_nodes
     sigma = cfg.resolved_sigma(k)
     spec = SubproblemSpec(sigma_over_tau=sigma / problem.tau, inv_k=1.0 / k)
+    quantized = quant.is_quantized(cfg.wire)
+    if quantized and qmix_fn is None:
+        # simulator oracle: quantize-dequantize every node's payload (own
+        # diagonal term included — the device-count-invariant wire view),
+        # then the dense W contraction on the dequantized stack
+        qmix_fn = lambda w, v, ef, qkey, payload: mixing.qmix_steps(
+            w, v, ef, cfg.gossip_steps, cfg.wire, qkey, payload=payload)
+    if quantized and qencode_fn is None:
+        qencode_fn = lambda v, ef, nkey: quant.encode(
+            v, cfg.wire, quant.step_key(nkey, 0), None, ef)
     if mix_fn is None:
         if cfg.robust is not None:
             mix_fn = lambda w, v_send, v_self: mixing.robust_mix_steps(
@@ -182,16 +217,26 @@ def _round_body(problem: Problem, part: Partition, cfg: ColaConfig, *,
     def one_round(state: ColaState, env: ColaEnv, w: jax.Array,
                   active: jax.Array,
                   budgets: jax.Array | None = None,
-                  atk: dict | None = None) -> ColaState:
+                  atk: dict | None = None,
+                  qkey: jax.Array | None = None,
+                  qkey_next: jax.Array | None = None) -> ColaState:
         # Step 4: gossip mixing of the local estimates (B steps, App. E.2).
         # A payload attack exists ONLY on the wire: receivers consume the
         # lie, but each node's own mixing term and its internal state stay
         # honest (a two-faced attacker — the stealthiest case for the
         # certificate layer to catch). v_self=None flags the honest fast
         # path, which is then bitwise the unattacked program.
-        v_send = _apply_payload_attack(state.v_stack, atk)
-        v_self = None if v_send is state.v_stack else state.v_stack
-        v_half = mix_fn(w, v_send, v_self)
+        if quantized:
+            # quantized wire: EF-compensated codec view of every payload;
+            # when pipelining, state.buf holds the step-0 payload encoded
+            # at the end of the previous round — the first ppermutes issue
+            # here, BEFORE this round's CD solve below
+            v_half, ef_new = qmix_fn(w, state.v_stack, state.ef, qkey,
+                                     state.buf)
+        else:
+            v_send = _apply_payload_attack(state.v_stack, atk)
+            v_self = None if v_send is state.v_stack else state.v_stack
+            v_half = mix_fn(w, v_send, v_self)
 
         # Gradient each node uses for its subproblem.
         grads = jax.vmap(problem.grad_f)(v_half)
@@ -221,7 +266,17 @@ def _round_body(problem: Problem, part: Partition, cfg: ColaConfig, *,
         x_new = state.x_parts + cfg.gamma * dx
         dv = jnp.einsum("kdn,kn->kd", env.a_parts, dx)
         v_new = v_half + cfg.gamma * k * dv
-        return ColaState(x_parts=x_new, v_stack=v_new)
+        if not quantized:
+            return ColaState(x_parts=x_new, v_stack=v_new)
+        buf_new = None
+        if cfg.pipeline:
+            # modulo schedule: encode the NEXT round's step-0 payload now,
+            # with the next round's codec key — bitwise what the next round
+            # would have encoded at its top, just issued one round early
+            q, s, _, ef_new = qencode_fn(v_new, ef_new, qkey_next)
+            buf_new = (q, s)
+        return ColaState(x_parts=x_new, v_stack=v_new, ef=ef_new,
+                         buf=buf_new)
 
     return one_round
 
@@ -310,6 +365,7 @@ def run_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
       block_size: rounds per dispatch for the block executor.
     """
     k = graph.num_nodes
+    _check_wire_config(cfg, attacks=attacks, leave_mode=leave_mode)
     part = make_partition(problem.n, k)
     # honor cfg.cd_mode: forced "gram" must materialize the blocks even when
     # the heuristic declines, forced "residual" must not pay for them
@@ -343,6 +399,50 @@ def run_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
     raise ValueError(f"unknown executor {executor!r} (want 'block' or 'loop')")
 
 
+def _check_wire_config(cfg: ColaConfig, *, attacks=None,
+                       leave_mode: str = "freeze") -> None:
+    """Reject config corners the quantized wire deliberately does not
+    support yet (scope control: each would silently change what crosses
+    the wire, so failing loudly beats a wrong byte budget)."""
+    if not quant.is_quantized(cfg.wire):
+        if cfg.pipeline:
+            raise ValueError(
+                "cfg.pipeline requires a quantized wire — the fp32 payload "
+                "has no encode step to hoist (set wire='int8'/'fp8')")
+        return
+    if attacks is not None:
+        raise NotImplementedError(
+            "attacks= with a quantized wire: the attack schedule transforms "
+            "fp32 payloads, which would leak onto the narrow wire")
+    if cfg.robust is not None:
+        raise NotImplementedError(
+            "cfg.robust with a quantized wire: the robust aggregators "
+            "consume raw neighbor stacks, not codec payloads")
+    if cfg.grad_mode == "mixed":
+        raise NotImplementedError(
+            "grad_mode='mixed' with a quantized wire: the gradient exchange "
+            "would cross in fp32 and break the declared byte budget")
+    if cfg.pipeline and leave_mode == "reset":
+        raise NotImplementedError(
+            "cfg.pipeline with leave_mode='reset': the pre-encoded payload "
+            "in flight would be stale after the leaver reset")
+
+
+def _arm_wire_state(state: ColaState, cfg: ColaConfig, key0) -> ColaState:
+    """Attach the quantized-wire carry to a fresh state: the EF residual
+    (zeros) and, when pipelining, round 0's pre-encoded payload."""
+    if not quant.is_quantized(cfg.wire):
+        return state
+    ef = quant.ef_init(state.v_stack, cfg.wire) if cfg.error_feedback else None
+    buf = None
+    if cfg.pipeline:
+        q, s, _, ef = quant.encode(state.v_stack, cfg.wire,
+                                   quant.step_key(jnp.asarray(key0), 0),
+                                   None, ef)
+        buf = (q, s)
+    return state._replace(ef=ef, buf=buf)
+
+
 def _run_cola_loop(problem, part, env, state, graph, cfg, rounds, record_every,
                    recorder, active_schedule, budget_schedule, leave_mode,
                    seed, base_w) -> RunResult:
@@ -358,6 +458,11 @@ def _run_cola_loop(problem, part, env, state, graph, cfg, rounds, record_every,
         ("cola-round", prob_fp, part, cfg),
         lambda: make_round(problem, part, cfg))
     rng = np.random.default_rng(seed)
+    qkeys = None
+    if quant.is_quantized(cfg.wire):
+        # one extra row: the pipelined body encodes round t+1's payload
+        qkeys = jnp.asarray(quant.round_keys(seed, rounds + 1))
+        state = _arm_wire_state(state, cfg, qkeys[0])
 
     dtype = problem.a.dtype
     w = jnp.asarray(base_w, dtype=dtype)
@@ -396,8 +501,13 @@ def _run_cola_loop(problem, part, env, state, graph, cfg, rounds, record_every,
         budgets = None
         if budget_schedule is not None:
             budgets = jnp.asarray(budget_schedule(t, rng), dtype=jnp.int32)
-        state = one_round(state, env, w_t,
-                          jnp.asarray(active, dtype=dtype), budgets)
+        if qkeys is None:
+            state = one_round(state, env, w_t,
+                              jnp.asarray(active, dtype=dtype), budgets)
+        else:
+            state = one_round(state, env, w_t,
+                              jnp.asarray(active, dtype=dtype), budgets,
+                              None, qkeys[t], qkeys[t + 1])
         due = (t >= next_rec) if cad else (t % record_every == 0)
         if due or t == rounds - 1:
             if uses_sched:
@@ -525,6 +635,15 @@ def _run_cola_block(problem, part, env, state, graph, cfg, rounds,
     tap_idx = jnp.asarray(tap_nodes, jnp.int32) if tap_nodes else None
     has_budget = "budgets" in sched
     has_reset = "leavers" in sched
+    quantized = quant.is_quantized(cfg.wire)
+    if quantized:
+        # per-round codec keys ride the schedule like every other input;
+        # the extra row feeds the pipelined body's encode of round t+1
+        keys = np.asarray(quant.round_keys(seed, rounds + 1))
+        sched["qkey"] = keys[:rounds]
+        if cfg.pipeline:
+            sched["qkey_next"] = keys[1:]
+        state = _arm_wire_state(state, cfg, keys[0])
     body = _round_body(problem, part, cfg)
 
     def step_fn(st, env_ctx, s_t):
@@ -542,7 +661,9 @@ def _run_cola_block(problem, part, env, state, graph, cfg, rounds,
             # wire transform the mix consumes — XLA shares the computation)
             aux = _apply_payload_attack(st.v_stack, atk)[tap_idx]
         st = body(st, env_ctx, s_t["w"], s_t["active"],
-                  s_t["budgets"] if has_budget else None, atk)
+                  s_t["budgets"] if has_budget else None, atk,
+                  s_t["qkey"] if quantized else None,
+                  s_t["qkey_next"] if quantized and cfg.pipeline else None)
         return st, aux
 
     cad = metrics_lib.as_cadence(record_every)
@@ -589,7 +710,12 @@ def _reset_leavers(state: ColaState, env: ColaEnv, part: Partition,
     total = total_fn(contrib)
     x_new = jnp.where(leave[:, None], 0.0, state.x_parts)
     v_new = state.v_stack - total[None, :]
-    return ColaState(x_parts=x_new, v_stack=v_new)
+    # a leaver's codec residual describes payload history that no longer
+    # exists — zero it with the rest of its local state (pipeline + reset
+    # is rejected up front, so state.buf is always None here)
+    ef_new = (None if state.ef is None
+              else jnp.where(leave[:, None], 0.0, state.ef))
+    return ColaState(x_parts=x_new, v_stack=v_new, ef=ef_new, buf=state.buf)
 
 
 def solve_reference(problem: Problem, rounds: int = 3000,

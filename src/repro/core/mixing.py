@@ -93,6 +93,40 @@ def mix_power_wire(w: jax.Array, v_send: jax.Array,
     return mix_power(w, first, steps - 1)
 
 
+def qmix_steps(w: jax.Array, v_stack: jax.Array, ef, steps: int, wire: str,
+               round_key, node_ids=None, payload=None):
+    """B gossip steps over a QUANTIZED wire (simulator / dense oracle).
+
+    Every step, each node encodes its current value once (EF-compensated
+    when ``ef`` is not None, stochastic rounding keyed per
+    (round, step, node) — ``quant.wire_view``) and the whole mix runs on
+    the dequantized stack: ``W @ deq``.  All contributions — including the
+    node's own diagonal term — go through the codec, so the function is
+    independent of how rows are later sharded; the plan and block
+    lowerings (``repro.topo.lowering.plan_qmix_steps`` /
+    ``block_qmix_steps``) reproduce it to the same tolerance contracts as
+    their fp32 counterparts (allclose / bitwise).
+
+    ``payload``: optional pre-encoded ``(q, scale)`` for the first step
+    (the pipelined executor's double buffer).  Returns ``(mixed, ef_new)``.
+    """
+    from repro.core import quant
+
+    out = v_stack
+    for s in range(steps):
+        if s == 0 and payload is not None:
+            deq = quant.dequantize(*payload)
+        else:
+            k = None if round_key is None else quant.step_key(round_key, s)
+            p = out if ef is None else out + ef
+            q, sc = quant.quantize_rows(p, wire, k, node_ids=node_ids)
+            deq = quant.dequantize(q, sc)
+            if ef is not None:
+                ef = p - deq
+        out = dense_mix(w, deq)
+    return out, ef
+
+
 def banded_weights(w: jax.Array, conn: int) -> jax.Array:
     """Extract (2*conn+1,) banded weights [w_-c..w_0..w_+c] from a circulant W.
 

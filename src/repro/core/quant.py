@@ -1,0 +1,269 @@
+"""Wire codecs for quantized gossip: int8 / fp8 payloads + error feedback.
+
+COLA's round traffic is the dual-estimate payload each node sends its
+neighbors.  This module models that WIRE: a payload is quantized once per
+(round, gossip step) on the sender, crosses every link as a narrow-dtype
+tensor plus a per-node-row fp32 absmax scale sidecar, and every receiver
+dequantizes the SAME values before the mixing contraction.  The semantics
+are deliberately device-count-invariant: a neighbor contribution goes
+through quantize-dequantize whether or not it physically crosses a device
+boundary (including the node's own diagonal term), so the simulator, the
+per-node plan lowering and the block lowering all compute one function and
+the existing sim<->plan<->block parity suites extend to ``wire=int8/fp8``
+unchanged.
+
+Codecs
+------
+``int8``   symmetric absmax: ``scale = absmax/127`` per row, payload in
+           ``[-127, 127]``.
+``fp8``    absmax-rescaled cast to ``float8_e4m3fn`` (``fp8_e5m2`` selects
+           the wide-exponent variant): ``scale = absmax/F8_MAX``.
+
+Rounding is stochastic when a PRNG key is supplied (unbiased:
+``E[dequantize(quantize(x))] = x``) and round-to-nearest otherwise.  Keys
+derive from ``wire_key(key, round, step, color)`` — ``fold_in`` chained in
+that order — then per node row via ``fold_in(key, node_id)``, so the draw
+a node makes is a function of (seed, round, step, color, node) alone and
+is bitwise identical no matter how rows are sharded across devices.
+
+Error feedback
+--------------
+``wire_view(v, ef, ...)`` implements EF-compressed gossip: the node sends
+``Q(v + ef)`` and keeps ``ef' = (v + ef) - dequantize(Q(v + ef))``.  The
+residual rides the executor scan carry (``ColaState.ef``); the quantization
+error then telescopes across rounds instead of accumulating as a noise
+floor, which is what lets an int8 wire reach the fp32 fixed point.
+
+Byte accounting
+---------------
+``wire_itemsize`` (1 for int8/fp8, 4 for fp32) and ``SCALE_BYTES`` (one
+fp32 scale per node row) feed ``CommPlan``/``BlockPlan`` byte budgets so
+rendered bytes, ``.contract()`` caps and ``comm_budget`` all describe the
+quantized wire.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: wire names accepted by ``ColaConfig.wire`` / ``GossipConfig.wire``
+WIRES = ("fp32", "fp8", "fp8_e5m2", "int8")
+
+#: bytes of the per-node-row fp32 absmax scale that rides beside every
+#: quantized payload (the "scale sidecar")
+SCALE_BYTES = 4
+
+_F8 = {"fp8": ("float8_e4m3fn", 448.0, 3),
+       "fp8_e5m2": ("float8_e5m2", 57344.0, 2)}
+
+
+def canonical_wire(wire: str | None) -> str:
+    w = wire or "fp32"
+    if w not in WIRES:
+        raise ValueError(f"wire={wire!r}: expected one of {WIRES}")
+    return w
+
+
+def is_quantized(wire: str | None) -> bool:
+    return canonical_wire(wire) != "fp32"
+
+
+def wire_dtype(wire: str):
+    w = canonical_wire(wire)
+    if w == "fp32":
+        return jnp.float32
+    if w == "int8":
+        return jnp.int8
+    return getattr(jnp, _F8[w][0])
+
+
+def wire_itemsize(wire: str | None) -> int:
+    """Bytes per payload element on this wire (1 for int8/fp8)."""
+    return 4 if canonical_wire(wire) == "fp32" else 1
+
+
+def wire_qmax(wire: str) -> float:
+    w = canonical_wire(wire)
+    if w == "int8":
+        return 127.0
+    if w == "fp32":
+        raise ValueError("fp32 wire has no quantization grid")
+    return _F8[w][1]
+
+
+#: fold slot decorrelating the codec PRNG stream from every other use of
+#: the run seed (the schedule rng, attack draws, ...) — ASCII "wire"
+_WIRE_STREAM = 0x77697265
+
+
+def wire_stream(key):
+    """Shift a key into the codec stream — decorrelates the stochastic-
+    rounding uniforms from any other draws folded off the same key (e.g.
+    the DP wire noise, which folds the same (round, step) indices)."""
+    return jax.random.fold_in(key, _WIRE_STREAM)
+
+
+def round_keys(seed: int, rounds: int):
+    """(rounds, 2) uint32 — raw per-round codec keys ``fold_in(base, t)``.
+
+    Both executors (and the shard_map runtime) slice the SAME stack, so the
+    stochastic-rounding draws are a function of (seed, round, step, color,
+    node) alone — bitwise identical across drivers and shardings.
+    """
+    base = wire_stream(jax.random.PRNGKey(seed))
+    return jax.vmap(lambda t: jax.random.fold_in(base, t))(
+        jnp.arange(rounds, dtype=jnp.int32))
+
+
+def step_key(round_key, step: int = 0, color: int = 0):
+    """Fold the (step, color) slots onto an already round-folded key."""
+    return jax.random.fold_in(jax.random.fold_in(round_key, step), color)
+
+
+def wire_key(key, round_: int, step: int = 0, color: int = 0):
+    """The codec PRNG stream: ``fold_in(round, step, color)`` in order.
+
+    The single-payload wire design quantizes once per (round, step) and
+    ppermutes the same tensor on every color, so the color slot is 0 on
+    the hot path; per-color callers fold their color index here.
+    """
+    return step_key(jax.random.fold_in(key, round_), step, color)
+
+
+def _sr_int_grid(y, u):
+    # stochastic rounding on the integer grid: floor(y + u), u ~ U[0, 1)
+    return jnp.floor(y + u)
+
+
+def _sr_f8_grid(y, u, mant_bits):
+    # stochastic rounding on the local power-of-two-aligned fp8 grid:
+    # floor |y| to the grid spanned by ulp = 2^(e - mant_bits), add the
+    # uniform before flooring.  Values land exactly on representable fp8
+    # points, so the final round-to-nearest cast is the identity.
+    a = jnp.abs(y)
+    e = jnp.floor(jnp.log2(jnp.maximum(a, jnp.float32(2.0) ** -24)))
+    ulp = jnp.exp2(e - mant_bits)
+    mag = jnp.floor(a / ulp + u) * ulp
+    return jnp.sign(y) * mag
+
+
+def quantize(x, wire: str, key=None):
+    """Quantize ``x`` rows (absmax over the LAST axis) onto the wire grid.
+
+    Returns ``(payload, scale)``: payload in the wire dtype with ``x``'s
+    shape, scale fp32 with shape ``x.shape[:-1] + (1,)``.  Stochastic
+    rounding when ``key`` is given (one uniform draw per element),
+    round-to-nearest otherwise.
+    """
+    w = canonical_wire(wire)
+    x = jnp.asarray(x, jnp.float32)
+    if w == "fp32":
+        return x, jnp.ones(x.shape[:-1] + (1,), jnp.float32)
+    qmax = wire_qmax(w)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    # multiply by the constant reciprocal instead of dividing by qmax: XLA
+    # strength-reduces constant divides to multiplies in SOME programs only,
+    # which would make the wire scale differ by 1 ulp between the simulator
+    # and the shard_map lowerings — spelling the multiply out keeps the
+    # (payload, scale) bits identical across every jitted program
+    scale = jnp.where(absmax > 0, absmax * jnp.float32(1.0 / qmax),
+                      jnp.float32(1.0))
+    y = x / scale
+    if w == "int8":
+        if key is not None:
+            y = _sr_int_grid(y, jax.random.uniform(key, x.shape))
+        else:
+            y = jnp.round(y)
+        q = jnp.clip(y, -qmax, qmax).astype(jnp.int8)
+    else:
+        if key is not None:
+            y = _sr_f8_grid(y, jax.random.uniform(key, x.shape), _F8[w][2])
+        q = jnp.clip(y, -qmax, qmax).astype(wire_dtype(w))
+    return q, scale
+
+
+def dequantize(q, scale):
+    """Inverse of :func:`quantize`: fp32 values every receiver sees."""
+    return q.astype(jnp.float32) * scale
+
+
+def node_keys(key, node_ids):
+    """Per-node codec keys: ``fold_in(key, node_id)`` for each row.
+
+    ``node_ids`` are GLOBAL node indices, so a (K, d) stack on one host,
+    one (d,) row per device, and a (K/M, d) block shard all draw the same
+    per-node randomness.
+    """
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.asarray(node_ids, jnp.int32))
+
+
+def quantize_rows(v, wire: str, key=None, node_ids=None):
+    """Quantize a stack of per-node rows ``v[..., d]`` (leading axis =
+    nodes) with per-node stochastic-rounding keys."""
+    if key is None:
+        return quantize(v, wire)
+    if node_ids is None:
+        node_ids = jnp.arange(v.shape[0])
+    keys = node_keys(key, node_ids)
+    return jax.vmap(lambda row, k: quantize(row, wire, k))(v, keys)
+
+
+def encode(v, wire: str, key=None, node_ids=None, ef=None):
+    """EF-compensated sender encode: payload/scale/receiver-view/residual.
+
+    Sends ``Q(v + ef)``; the new residual is ``(v + ef) - deq`` (zero when
+    error feedback is off, i.e. ``ef is None``).
+    Returns ``(payload, scale, deq, ef_new)``.
+    """
+    p = v if ef is None else v + ef
+    q, s = quantize_rows(p, wire, key, node_ids)
+    deq = dequantize(q, s)
+    ef_new = None if ef is None else p - deq
+    return q, s, deq, ef_new
+
+
+def wire_view(v, ef, wire: str, key=None, node_ids=None):
+    """The dequantized values the network sees for ``v`` + EF bookkeeping.
+
+    Returns ``(deq, ef_new)``.  ``wire='fp32'`` is the identity.
+    """
+    if not is_quantized(wire):
+        return v, ef
+    _, _, deq, ef_new = encode(v, wire, key, node_ids, ef)
+    return deq, ef_new
+
+
+def ef_init(v_stack, wire: str):
+    """Zero EF residual matching the dual-estimate stack (None on fp32)."""
+    if not is_quantized(wire):
+        return None
+    return jnp.zeros_like(v_stack)
+
+
+# --- pytree wire (gossip-SGD path) -----------------------------------------
+
+def wire_view_pytree(params, wire: str, key=None):
+    """Quantize-dequantize every leaf of a (K, ...)-stacked pytree.
+
+    Each leaf is flattened to (K, -1) rows (per-node absmax scales), keyed
+    per leaf via ``fold_in(key, leaf_index)``.  Stateless (no EF): the
+    gossip-SGD mixer re-quantizes fresh values every mix round.
+    """
+    if not is_quantized(wire):
+        return params
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    out = []
+    for i, leaf in enumerate(leaves):
+        k = None if key is None else jax.random.fold_in(key, i)
+        rows = leaf.reshape((leaf.shape[0], -1))
+        q, s = quantize_rows(rows, wire, k)
+        out.append(dequantize(q, s).reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def payload_bytes(d: int, wire: str, rows: int = 1) -> int:
+    """Wire bytes of one ``rows x d`` payload: quantized elements + the
+    fp32 scale sidecar (one scale per row; zero sidecar on fp32)."""
+    sidecar = 0 if not is_quantized(wire) else rows * SCALE_BYTES
+    return rows * d * wire_itemsize(wire) + sidecar

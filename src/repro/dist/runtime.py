@@ -62,10 +62,11 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import executor as exec_engine, metrics as metrics_lib, \
-    mixing, topology as topo
+    mixing, quant, topology as topo
 from repro.topo import lowering as topo_lowering, plan as topo_plan
 from repro.core.cola import (ColaConfig, RunResult,
-                             _as_schedule_fn,
+                             _arm_wire_state, _as_schedule_fn,
+                             _check_wire_config,
                              _materialize_schedule, _reset_leavers,
                              _round_body, build_env, init_state)
 from repro.core.duality import consensus_residual, neighborhood_mean
@@ -236,6 +237,109 @@ def _dist_mixers(axis: str, local_nodes: int, conn: int, comm: str,
     # dense_mix default even when the v aggregation is robust
     grad_mix_fn = lambda w, g: steps_mix(w, g, 1)
     return mix_fn, grad_mix_fn
+
+
+def _dist_qmixers(axis: str, local_nodes: int, comm: str, cfg: ColaConfig,
+                  plan) -> tuple[Callable, Callable]:
+    """(qmix_fn, qencode_fn) — the quantized-wire counterparts of
+    ``_dist_mixers`` for the shard_map round body.
+
+    ``qmix_fn(payload, v, ef, qkey, buf)`` runs the B EF-compensated gossip
+    steps on the codec wire view; ``buf`` is the pre-encoded (payload,
+    scale) double buffer when ``cfg.pipeline`` (consumed by step 0's
+    ppermutes at the TOP of the round body). ``qencode_fn(v, ef, nkey)``
+    encodes the NEXT round's step-0 payload at the end of the body.
+    Stochastic-rounding keys always derive from GLOBAL node ids
+    (``axis_index * K/M + row``), so the draws — and hence the wire bits —
+    are bitwise the simulator's regardless of the mesh layout.
+
+    ``plan`` (CommPlan): per-node lowering — the int8/fp8 payload AND its
+    fp32 scale sidecar each ppermute per edge color, receivers dequantize
+    before the coefficient contraction. ``plan`` (BlockPlan): the (K/M, d)
+    quantized block + (K/M, 1) scales ppermute per block color into the
+    dequantized neighborhood buffer, one dot against the W rows. ``dense``:
+    quantize locally, all-gather the NARROW payload + scales (the oracle
+    keeps the byte reduction), dequantize, dense mix, slice back.
+    """
+    wire, steps = cfg.wire, cfg.gossip_steps
+
+    def _row_ids():
+        return lax.axis_index(axis) * local_nodes + jnp.arange(local_nodes)
+
+    if comm == "plan" and not isinstance(plan, topo_plan.BlockPlan):
+        def qmix_fn(payload, v, ef, qkey, buf):
+            diag, coefs = payload
+            pb = None if buf is None else (buf[0][0], buf[1][0])
+            out, ef_new = topo_lowering.plan_qmix_steps(
+                v[0], None if ef is None else ef[0], axis, plan,
+                diag[0], coefs[:, 0], steps, wire, qkey, payload=pb)
+            return out[None], (None if ef_new is None else ef_new[None])
+
+        def qencode_fn(v, ef, nkey):
+            key = jax.random.fold_in(quant.step_key(nkey, 0),
+                                     lax.axis_index(axis))
+            p = v[0] if ef is None else v[0] + ef[0]
+            q, s = quant.quantize(p, wire, key)
+            deq = quant.dequantize(q, s)
+            ef_new = None if ef is None else (p - deq)[None]
+            return q[None], s[None], deq[None], ef_new
+    elif comm == "plan":
+        def qmix_fn(payload, v, ef, qkey, buf):
+            return topo_lowering.block_qmix_steps(
+                v, ef, axis, plan, payload, steps, wire, qkey, payload=buf)
+
+        def qencode_fn(v, ef, nkey):
+            p = v if ef is None else v + ef
+            q, s = quant.quantize_rows(p.reshape(local_nodes, -1), wire,
+                                       quant.step_key(nkey, 0),
+                                       node_ids=_row_ids())
+            deq = quant.dequantize(q, s)
+            ef_new = (None if ef is None
+                      else (p.reshape(local_nodes, -1) - deq).reshape(p.shape))
+            return q, s, deq.reshape(v.shape), ef_new
+    elif comm == "dense":
+        def qmix_fn(w, v, ef, qkey, buf):
+            out, ef_l = v.reshape(local_nodes, -1), ef
+            for s in range(steps):
+                if s == 0 and buf is not None:
+                    q, sc = buf
+                else:
+                    k = None if qkey is None else quant.step_key(qkey, s)
+                    p = out if ef_l is None else out + ef_l
+                    q, sc = quant.quantize_rows(p, wire, k,
+                                                node_ids=_row_ids())
+                    if ef_l is not None:
+                        ef_l = p - quant.dequantize(q, sc)
+                # the oracle's all-gather moves the NARROW payload + the
+                # fp32 sidecar — quantize-then-gather, never the reverse
+                # (gathered as raw bytes so no backend upcasts float8,
+                # see topo_lowering.ppermute_wire)
+                if q.dtype.itemsize == 1 and \
+                        jnp.issubdtype(q.dtype, jnp.floating):
+                    qf = lax.bitcast_convert_type(
+                        lax.all_gather(
+                            lax.bitcast_convert_type(q, jnp.uint8),
+                            axis, tiled=True), q.dtype)
+                else:
+                    qf = lax.all_gather(q, axis, tiled=True)
+                sf = lax.all_gather(sc, axis, tiled=True)
+                mixed = mixing.dense_mix(w, quant.dequantize(qf, sf))
+                out = lax.dynamic_slice_in_dim(
+                    mixed, lax.axis_index(axis) * local_nodes, local_nodes)
+            return out.reshape(v.shape), ef_l
+
+        def qencode_fn(v, ef, nkey):
+            p = (v if ef is None else v + ef).reshape(local_nodes, -1)
+            q, s = quant.quantize_rows(p, wire, quant.step_key(nkey, 0),
+                                       node_ids=_row_ids())
+            deq = quant.dequantize(q, s)
+            ef_new = None if ef is None else (p - deq).reshape(v.shape)
+            return q, s, deq.reshape(v.shape), ef_new
+    else:
+        raise ValueError(
+            f"quantized wire has no comm={comm!r} lowering (a 'ring' "
+            "request re-dispatches to 'plan' in run_dist_cola)")
+    return qmix_fn, qencode_fn
 
 
 # ---------------------------------------------------------------------------
@@ -447,7 +551,7 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
                   active_schedule=None, budget_schedule=None,
                   leave_mode: str = "freeze", seed: int = 0,
                   w_override: np.ndarray | None = None,
-                  attacks=None,
+                  attacks=None, wire: str | None = None,
                   block_size: int = 64) -> RunResult:
     """Run Algorithm 1 with the node axis sharded over ``mesh``.
 
@@ -473,6 +577,13 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         they transform the identical pre-materialized schedule, so a seeded
         attack corrupts the distributed run bitwise like the simulator.
         ``Eavesdropper`` taps are simulator-only (rejected here).
+      wire: shorthand overriding ``cfg.wire`` — the gossip payload codec
+        ("fp32" | "int8" | "fp8" | "fp8_e5m2", see ``repro.core.quant``).
+        On a quantized wire every gossip collective moves the 1-byte
+        payload plus the fp32 scale sidecar instead of the fp32 stack; a
+        "ring" request re-dispatches to "plan" (the band path has no codec
+        lowering), and the "dense" oracle quantizes BEFORE its all-gather
+        so even the oracle honors the byte budget.
 
     ``cfg.robust`` swaps the v aggregation for the Byzantine-resilient
     neighborhood statistic on every comm path: ``dense`` robust-mixes the
@@ -492,6 +603,10 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
     Returns ``RunResult(state, history)`` with the fully-stacked (K, ...)
     state, like the simulator.
     """
+    if wire is not None:
+        cfg = dataclasses.replace(cfg, wire=wire)
+    _check_wire_config(cfg, attacks=attacks, leave_mode=leave_mode)
+    quantized = quant.is_quantized(cfg.wire)
     axis = axis or mesh.axis_names[0]
     m = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
     k = graph.num_nodes
@@ -516,7 +631,7 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         # robust aggregation is nonlinear — it also needs the plan path's
         # assembled neighborhood buffer
         if (active_schedule is not None or local_nodes != 1
-                or cfg.robust is not None):
+                or cfg.robust is not None or quantized):
             comm = "plan"
         else:
             try:
@@ -539,9 +654,14 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         # Robust aggregation always takes the block form — the trimmed-mean
         # / median / clip statistic runs over the ppermute-assembled
         # neighborhood buffer, which only the BlockPlan materializes (a
-        # 1-node block is a valid BlockPlan)
+        # 1-node block is a valid BlockPlan). Quantized wires take it too:
+        # the block contraction (W rows against the dequantized buffer) is
+        # bitwise the simulator's dense mix, and bitwise matters here — a
+        # 1-ulp reassociation difference in v would flip stochastic-
+        # rounding draws next round and snowball through the codec, so the
+        # per-node coefficient-sum form cannot hold multi-round parity
         plan = (topo_plan.compile_plan(support)
-                if local_nodes == 1 and cfg.robust is None
+                if local_nodes == 1 and cfg.robust is None and not quantized
                 else topo_plan.compile_block_plan(support, m))
 
     part = make_partition(problem.n, k)
@@ -553,6 +673,15 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
     sched = _materialize_schedule(graph, rounds, active_schedule,
                                   budget_schedule, leave_mode, seed, base_w,
                                   dtype)
+    if quantized:
+        # the SAME per-round codec key stack both simulator drivers slice —
+        # the stochastic-rounding draws are a function of (seed, round,
+        # step, color, node), never of the mesh layout
+        qkeys = np.asarray(quant.round_keys(seed, rounds + 1))
+        sched["qkey"] = qkeys[:rounds]
+        if cfg.pipeline:
+            sched["qkey_next"] = qkeys[1:]
+        state = _arm_wire_state(state, cfg, qkeys[0])
     atk_info = None
     if attacks is not None:
         from repro import attack as attack_lib
@@ -598,11 +727,16 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
                                        robust=cfg.robust,
                                        robust_trim=cfg.robust_trim,
                                        robust_clip=cfg.robust_clip)
+    qmix_fn = qencode_fn = None
+    if quantized:
+        qmix_fn, qencode_fn = _dist_qmixers(axis, local_nodes, comm, cfg,
+                                            plan)
     body = _round_body(problem, part, cfg, mix_fn=mix_fn,
-                       grad_mix_fn=grad_mix_fn)
+                       grad_mix_fn=grad_mix_fn, qmix_fn=qmix_fn,
+                       qencode_fn=qencode_fn)
 
     def shard_round(st, env_l, w_t, active_l, budgets_l, leavers_l,
-                    reset_any, atk_l):
+                    reset_any, atk_l, qkey_t, qkey_next_t):
         if has_reset:
             # the simulator's reset, with the node-sum completed across
             # devices — shares the Lemma-1 invariant implementation
@@ -614,7 +748,9 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
                 lambda ss: ss, st)
         return body(st, env_l, w_t, active_l,
                     budgets_l if has_budget else None,
-                    atk_l if atk_names else None)
+                    atk_l if atk_names else None,
+                    qkey_t if quantized else None,
+                    qkey_next_t if quantized and cfg.pipeline else None)
 
     # node-axis operands shard over `axis`; the per-round scalars are
     # replicated. The comm payload is the replicated (K, K) W for
@@ -637,7 +773,7 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         in_specs=(state_spec, env_spec, payload_spec, node,
                   node if has_budget else repl,
                   node if has_reset else repl, repl,
-                  {n: node for n in atk_names}),
+                  {n: node for n in atk_names}, repl, repl),
         out_specs=state_spec)
 
     zeros_k = np.zeros((rounds,), dtype)
@@ -654,7 +790,10 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
                         s_t["budgets"] if has_budget else s_t["_pad"],
                         s_t["leavers"] if has_reset else s_t["_pad"],
                         s_t["reset_any"] if has_reset else s_t["_pad"],
-                        atk)
+                        atk,
+                        s_t["qkey"] if quantized else s_t["_pad"],
+                        (s_t["qkey_next"] if quantized and cfg.pipeline
+                         else s_t["_pad"]))
         return st, None
 
     sched = dict(sched)

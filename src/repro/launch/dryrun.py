@@ -465,6 +465,12 @@ def main() -> None:
                          "for K nodes quotiented onto M < K devices "
                          "(block-level colors, per-link block bytes, "
                          "intra- vs inter-block edge split)")
+    ap.add_argument("--wire", default=None,
+                    choices=["fp32", "fp8", "fp8_e5m2", "int8"],
+                    help="--plan: gossip wire codec — renders each "
+                         "topology's byte budget (and enforced contract "
+                         "line) for the quantized payload + fp32 scale "
+                         "sidecar instead of the fp32 wire")
     ap.add_argument("--topo", default="ring,torus2d,expander,complete",
                     help="--plan: comma-separated topology names "
                          "(repro.topo.GRAPHS) whose compiled comm plans to "
@@ -516,6 +522,7 @@ def main() -> None:
         if args.topo != "none":
             from repro.core import topology as cola_topo
             from repro import topo as topo_programs
+            wire = None if args.wire in (None, "fp32") else args.wire
             for name in args.topo.split(","):
                 graph = topo_programs.build(name.strip(), args.cola_k)
                 plan = topo_programs.compile_plan(graph)
@@ -524,16 +531,20 @@ def main() -> None:
                       f"(graph={graph.name}, beta={beta:.4f})", flush=True)
                 # the same budget repro.analysis verifies against the
                 # compiled HLO — the render above is the plan's promise,
-                # this line is the enforced contract
-                print("  " + plan.contract(args.cola_d).describe(),
+                # this line is the enforced contract (--wire swaps both to
+                # the quantized payload + scale-sidecar accounting)
+                print("  " + plan.contract(args.cola_d,
+                                           wire=wire).describe(),
                       flush=True)
-                print(plan.render(d=args.cola_d), flush=True)
+                print(plan.render(d=args.cola_d, wire=wire), flush=True)
                 if args.cola_m and args.cola_m < args.cola_k:
                     bplan = topo_programs.compile_block_plan(graph,
                                                              args.cola_m)
-                    print("  " + bplan.contract(args.cola_d).describe(),
+                    print("  " + bplan.contract(args.cola_d,
+                                                wire=wire).describe(),
                           flush=True)
-                    print(bplan.render(d=args.cola_d), flush=True)
+                    print(bplan.render(d=args.cola_d, wire=wire),
+                          flush=True)
         return
 
     os.makedirs(args.out, exist_ok=True)

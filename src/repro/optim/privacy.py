@@ -148,13 +148,31 @@ def clip_params(params_stack, clip: float):
         params_stack)
 
 
-def noisy_dense_mix(w, params_stack, dp: DPConfig, key, steps: int = 1):
+def noisy_dense_mix(w, params_stack, dp: DPConfig, key, steps: int = 1,
+                    wire_codec: str | None = None):
     """B gossip steps of the dense (K, K) mix with the DP wire mechanism:
     each step re-clips the circulating values (every emission is clipped)
     and adds Gaussian noise on the off-diagonal W support — per directed
     link (independent (K, K, ...) draws) or per sender ((K, ...) draws
     shared by the row), matching ``dp.per_link``.
+
+    ``wire_codec`` ("int8"/"fp8"/..., see ``repro.core.quant``) quantizes
+    the emission in CLIP-THEN-QUANTIZE order, the order the sensitivity
+    proof needs::
+
+        clip -> quantize-dequantize -> re-clip guard -> Gaussian noise
+
+    Quantizing AFTER the clip means what crosses the wire is the codec
+    view of a norm-bounded vector; because rounding can inflate the norm
+    by up to an ulp-scale factor, a second clip (a no-op unless the codec
+    pushed ``||p||`` over) restores ``||p|| <= clip`` EXACTLY, so the
+    released value keeps the ``2 * clip`` replace-one sensitivity and the
+    zCDP accounting is unchanged by quantization. (Quantize-then-clip
+    would instead release a post-clip value the codec never produced —
+    an fp32 payload leaking onto a claimed-narrow wire.)
     """
+    from repro.core import quant
+
     k = w.shape[0]
     wire = w * (1.0 - jnp.eye(k, dtype=w.dtype))   # off-diagonal: the links
     std = dp.noise_std
@@ -162,6 +180,10 @@ def noisy_dense_mix(w, params_stack, dp: DPConfig, key, steps: int = 1):
     for s in range(steps):
         out = clip_params(out, dp.clip)
         key_s = jax.random.fold_in(key, s)
+        if quant.is_quantized(wire_codec):
+            out = quant.wire_view_pytree(out, wire_codec,
+                                         quant.wire_stream(key_s))
+            out = clip_params(out, dp.clip)  # re-clip guard (see docstring)
         mixed = []
         flat, treedef = jax.tree.flatten(out)
         for i, p in enumerate(flat):

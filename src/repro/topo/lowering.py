@@ -32,10 +32,11 @@ Semantics contracts (pinned by the property/parity tests):
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import mixing
+from repro.core import mixing, quant
 from repro.topo.plan import BlockPlan, CommPlan
 
 
@@ -154,6 +155,125 @@ def block_mix_steps_wire(v_send, v_self, axis_name: str, plan: BlockPlan,
     return block_mix_steps(first, axis_name, plan, w_rows, steps - 1)
 
 
+# ---------------------------------------------------------------------------
+# quantized wire: ppermute int8/fp8 payloads + fp32 scale sidecars
+# ---------------------------------------------------------------------------
+
+def ppermute_wire(q, axis_name: str, perm):
+    """``lax.ppermute`` of a quantized payload as RAW BYTES.
+
+    Some backends legalize float8 collectives by upcasting the operand to
+    f16 — which would silently double the wire bytes the comm contracts
+    cap. Bitcasting the payload to uint8 for the permute (and back after)
+    keeps every quantized payload 1 byte/elem on every backend; the bit
+    pattern — and hence the dequantized value — is untouched.
+    """
+    if q.dtype.itemsize == 1 and jnp.issubdtype(q.dtype, jnp.floating):
+        raw = lax.ppermute(lax.bitcast_convert_type(q, jnp.uint8),
+                           axis_name, perm)
+        return lax.bitcast_convert_type(raw, q.dtype)
+    return lax.ppermute(q, axis_name, perm)
+
+
+def plan_qmix_steps(v_local, ef_local, axis_name: str, plan: CommPlan,
+                    diag, coefs, steps: int, wire: str, round_key,
+                    payload=None):
+    """B quantized gossip steps for THIS device's node (one node/device).
+
+    Each step the node encodes its value once (EF-compensated when
+    ``ef_local`` is not None, stochastic rounding keyed per
+    (round, step, node)), ppermutes the narrow payload PLUS its fp32
+    absmax scale sidecar on every color, and dequantizes what arrives
+    before the coefficient contraction.  The self term uses the node's own
+    dequantized payload — the device-count-invariant wire view
+    ``quant.wire_view`` defines, so this equals the simulator's
+    ``dense_mix(w, deq)`` rows to float summation order (the same
+    tolerance contract as the fp32 plan path).
+
+    ``payload``: optional pre-encoded ``(q, scale)`` for the FIRST step —
+    the pipelined executor's double buffer, encoded at the end of the
+    previous round with this round's key (EF already folded then).
+    Returns ``(mixed, ef_new)``.
+    """
+    i = lax.axis_index(axis_name)
+    out, ef = v_local, ef_local
+    for s in range(steps):
+        flat = out.reshape(-1)
+        if s == 0 and payload is not None:
+            q, sc = payload
+            deq = quant.dequantize(q, sc)
+        else:
+            k = None if round_key is None else \
+                jax.random.fold_in(quant.step_key(round_key, s), i)
+            p = flat if ef is None else flat + ef.reshape(-1)
+            q, sc = quant.quantize(p, wire, k)
+            deq = quant.dequantize(q, sc)
+            if ef is not None:
+                ef = (p - deq).reshape(ef.shape)
+        acc = diag * deq
+        for c, perm in enumerate(plan.perms):
+            rq = ppermute_wire(q, axis_name, list(perm))
+            rs = lax.ppermute(sc, axis_name, list(perm))
+            acc = acc + coefs[c] * quant.dequantize(rq, rs)
+        out = acc.reshape(out.shape)
+    return out, ef
+
+
+def block_gather_neighbors_q(q, scale, deq, axis_name: str, plan: BlockPlan):
+    """Quantized-wire ``block_gather_neighbors``: ppermute the (K/M, d)
+    narrow payload + (K/M, 1) scale sidecar per block color and dequantize
+    into the zero-filled (K, d) neighborhood buffer.  The device's own
+    rows hold its own DEQUANTIZED payload (``deq``) — every contribution,
+    local or remote, goes through the same codec, which is what keeps the
+    buffer dot bitwise-equal to ``dense_mix`` on the dequantized stack for
+    any mesh size."""
+    ln = plan.local_nodes
+    i = lax.axis_index(axis_name)
+    partners = jnp.asarray(plan.block.partner_arrays())     # (C, M) static
+    buf = jnp.zeros((plan.num_nodes, deq.shape[1]), deq.dtype)
+    buf = lax.dynamic_update_slice_in_dim(buf, deq, i * ln, 0)
+    for c, perm in enumerate(plan.block.perms):
+        rq = ppermute_wire(q, axis_name, list(perm))
+        rs = lax.ppermute(scale, axis_name, list(perm))
+        recv = quant.dequantize(rq, rs)
+        src = partners[c, i]
+        buf = lax.dynamic_update_slice_in_dim(
+            buf, jnp.where(src != i, recv, deq), src * ln, 0)
+    return buf
+
+
+def block_qmix_steps(v_block, ef_block, axis_name: str, plan: BlockPlan,
+                     w_rows, steps: int, wire: str, round_key,
+                     payload=None):
+    """B quantized block-mode gossip steps (see ``plan_qmix_steps``).
+
+    Per step: encode this device's (K/M, d) block once (per-node-row
+    absmax scales, per-node SR keys from the GLOBAL node ids, EF folded
+    when ``ef_block`` is not None), ppermute payload + sidecar per block
+    color, dequantize into the neighborhood buffer, contract against the
+    W rows in one dot — bitwise the simulator's
+    ``dense_mix(w, quant.wire_view(v))`` rows.  Returns
+    ``(mixed, ef_new)``.
+    """
+    ln = plan.local_nodes
+    row_ids = lax.axis_index(axis_name) * ln + jnp.arange(ln)
+    out, ef = v_block, ef_block
+    for s in range(steps):
+        flat = out.reshape(ln, -1)
+        if s == 0 and payload is not None:
+            q, sc = payload
+        else:
+            k = None if round_key is None else quant.step_key(round_key, s)
+            p = flat if ef is None else flat + ef.reshape(ln, -1)
+            q, sc = quant.quantize_rows(p, wire, k, node_ids=row_ids)
+            if ef is not None:
+                ef = (p - quant.dequantize(q, sc)).reshape(ef.shape)
+        deq = quant.dequantize(q, sc)
+        buf = block_gather_neighbors_q(q, sc, deq, axis_name, plan)
+        out = (w_rows.astype(deq.dtype) @ buf).reshape(out.shape)
+    return out, ef
+
+
 def block_robust_mix_step(v_block, axis_name: str, plan: BlockPlan, w_rows,
                           mode: str, *, trim: int = 1,
                           clip: float | None = None, v_self=None):
@@ -251,18 +371,24 @@ def plan_neighborhood_stats(g_local, axis_name: str, plan: CommPlan,
 
 
 def comm_budget(plan, d: int, itemsize: int = 4, *,
-                gossip_steps: int = 1) -> dict:
+                gossip_steps: int = 1, wire: str | None = None) -> dict:
     """The collective budget this module's lowerings emit for ``plan``.
 
     ``plan_mix_steps`` / ``block_mix_steps`` (and their wire/robust
     variants) issue exactly ``num_colors`` ``lax.ppermute`` ops per gossip
     step — one per color class — each carrying a (d,) vector (per-node
-    plan) or a (K/M, d) block payload. This is the single source of truth
+    plan) or a (K/M, d) block payload. On a quantized wire
+    (``plan_qmix_steps`` / ``block_qmix_steps``) each color ppermutes TWO
+    tensors — the narrow payload and its fp32 scale sidecar — so the count
+    doubles while the bytes drop ~4x. This is the single source of truth
     behind ``CommPlan.contract`` / ``BlockPlan.contract``: the budget is a
     property of HOW the plan lowers, so it lives next to the lowerings.
     """
+    from repro.topo.plan import _permutes_per_step
     return {
-        "collective_permutes": gossip_steps * plan.num_colors,
+        "collective_permutes":
+            gossip_steps * _permutes_per_step(plan.num_colors, wire),
         "bytes_per_device":
-            gossip_steps * plan.bytes_per_device_per_step(d, itemsize),
+            gossip_steps * plan.bytes_per_device_per_step(d, itemsize,
+                                                          wire=wire),
     }

@@ -54,6 +54,51 @@ from repro.topo import coloring
 Edge = coloring.Edge
 
 
+def _payload_bytes(d: int, itemsize: int, wire: str | None,
+                   rows: int = 1) -> int:
+    """Wire bytes of one ``rows x d`` ppermute payload.
+
+    With ``wire=None`` this is the legacy fp32 accounting (``rows * d *
+    itemsize``).  Naming a wire derives the REAL itemsize from the codec
+    (1 byte for int8/fp8) and adds the fp32 absmax scale sidecar (one
+    scale per node row) — the single source the rendered bytes,
+    ``.contract()`` caps and ``comm_budget`` all share, so they cannot
+    disagree with each other or with the quantized wire.
+    """
+    if wire is None:
+        return rows * d * itemsize
+    from repro.core import quant
+    return quant.payload_bytes(d, wire, rows)
+
+
+def _permutes_per_step(num_colors: int, wire: str | None) -> int:
+    """Collective-permutes one gossip step issues: one per color on the
+    fp32 wire, two per color on a quantized wire (the int8/fp8 payload and
+    its fp32 scale sidecar ppermute as separate collectives)."""
+    if wire is None:
+        return num_colors
+    from repro.core import quant
+    return num_colors * (2 if quant.is_quantized(wire) else 1)
+
+
+def _render_wire_line(plan, d: int, itemsize: int,
+                      wire: str | None) -> list:
+    """The quantized-wire bytes line ``render`` appends next to the fp32
+    figure (empty on fp32/None wires)."""
+    from repro.core import quant
+    if wire is None or not quant.is_quantized(wire):
+        return []
+    dev = plan.bytes_per_device_per_step(d, wire=wire)
+    dev32 = plan.bytes_per_device_per_step(d, itemsize)
+    return [
+        f"  wire={wire} (payload {quant.wire_itemsize(wire)} B/elem + "
+        f"{quant.SCALE_BYTES} B scale/row): "
+        f"per-device<={dev:,} "
+        f"per-link={plan.bytes_per_link_per_step(d, wire=wire):,} "
+        f"total={plan.total_bytes_per_step(d, wire=wire):,}  "
+        f"({dev / dev32:.2f}x fp32)"]
+
+
 @dataclasses.dataclass(frozen=True)
 class CommPlan:
     """A compiled topology program: matchings lowered to ppermute perms.
@@ -114,38 +159,52 @@ class CommPlan:
 
     # -- byte accounting (dryrun --plan, HLO budget assertions) -------------
 
-    def bytes_per_device_per_step(self, d: int, itemsize: int = 4) -> int:
+    def bytes_per_device_per_step(self, d: int, itemsize: int = 4,
+                                  wire: str | None = None) -> int:
         """Worst-case per-device ppermute payload of ONE gossip step: one
-        (d,)-vector sent per color the node is matched in (<= num_colors)."""
-        return self.num_colors * d * itemsize
+        (d,)-vector sent per color the node is matched in (<= num_colors).
+        ``wire=`` switches to the real wire dtype's accounting (quantized
+        elements + scale sidecar); ``itemsize`` is then ignored."""
+        return self.num_colors * _payload_bytes(d, itemsize, wire)
 
-    def bytes_per_link_per_step(self, d: int, itemsize: int = 4) -> int:
+    def bytes_per_link_per_step(self, d: int, itemsize: int = 4,
+                                wire: str | None = None) -> int:
         """Bytes crossing one graph edge (both directions) per gossip step."""
-        return 2 * d * itemsize
+        return 2 * _payload_bytes(d, itemsize, wire)
 
-    def total_bytes_per_step(self, d: int, itemsize: int = 4) -> int:
+    def total_bytes_per_step(self, d: int, itemsize: int = 4,
+                             wire: str | None = None) -> int:
         """Network-wide bytes of one gossip step: every edge, both ways."""
-        return self.num_edges * self.bytes_per_link_per_step(d, itemsize)
+        return self.num_edges * self.bytes_per_link_per_step(d, itemsize,
+                                                             wire)
 
-    def contract(self, d: int, itemsize: int = 4, *, gossip_steps: int = 1):
+    def contract(self, d: int, itemsize: int = 4, *, gossip_steps: int = 1,
+                 wire: str | None = None):
         """The declared collective budget of this plan's lowered round
         program (``repro.analysis.contracts.CommContract``): at most
-        ``gossip_steps * num_colors`` collective-permutes moving at most
+        ``gossip_steps * num_colors`` collective-permutes (twice that on a
+        quantized wire — payload + scale sidecar) moving at most
         ``bytes_per_device_per_step`` each step, zero
         all-gathers/all-reduces — what ``analysis.check_comm`` holds the
-        compiled HLO to."""
+        compiled HLO to. ``wire='int8'/'fp8'`` derives the cap from the
+        quantized payload, so an fp32 payload leaking onto a claimed
+        narrow wire overflows the byte clause."""
         from repro.analysis.contracts import CommContract
         from repro.topo.lowering import comm_budget
-        budget = comm_budget(self, d, itemsize, gossip_steps=gossip_steps)
+        budget = comm_budget(self, d, itemsize, gossip_steps=gossip_steps,
+                             wire=wire)
+        tag = f"-{wire}" if wire else ""
         return CommContract(
-            name=f"plan-K{self.num_nodes}-c{self.num_colors}-d{d}",
+            name=f"plan-K{self.num_nodes}-c{self.num_colors}-d{d}{tag}",
             max_collective_permute_count=budget["collective_permutes"],
             max_collective_permute_bytes=budget["bytes_per_device"],
             require_collective_permute=True)
 
     def render(self, d: int | None = None, itemsize: int = 4,
-               max_edges: int = 8) -> str:
-        """Human-readable plan (the ``dryrun --plan`` section)."""
+               max_edges: int = 8, wire: str | None = None) -> str:
+        """Human-readable plan (the ``dryrun --plan`` section). Naming a
+        quantized ``wire`` adds its per-link/per-device bytes next to the
+        fp32 figure."""
         lines = [f"[comm plan] K={self.num_nodes} edges={self.num_edges} "
                  f"colors={self.num_colors} max_degree={self.max_degree()}"]
         for c, cls in enumerate(self.colors):
@@ -161,6 +220,7 @@ class CommPlan:
                 f"total={self.total_bytes_per_step(d, itemsize):,}  "
                 f"(dense all-gather per-device="
                 f"{self.num_nodes * d * itemsize:,})")
+            lines.extend(_render_wire_line(self, d, itemsize, wire))
         return "\n".join(lines)
 
 
@@ -293,38 +353,48 @@ class BlockPlan:
 
     # -- byte accounting: per-LINK now means per block-level link -----------
 
-    def bytes_per_device_per_step(self, d: int, itemsize: int = 4) -> int:
+    def bytes_per_device_per_step(self, d: int, itemsize: int = 4,
+                                  wire: str | None = None) -> int:
         """Worst-case ppermute payload per device per gossip step: one
-        (K/M, d) block per block-level color."""
-        return self.num_colors * self.local_nodes * d * itemsize
+        (K/M, d) block per block-level color. ``wire=`` switches to the
+        real wire dtype's accounting (quantized elements + one scale per
+        node row); ``itemsize`` is then ignored."""
+        return self.num_colors * _payload_bytes(d, itemsize, wire,
+                                                rows=self.local_nodes)
 
-    def bytes_per_link_per_step(self, d: int, itemsize: int = 4) -> int:
+    def bytes_per_link_per_step(self, d: int, itemsize: int = 4,
+                                wire: str | None = None) -> int:
         """Bytes crossing one block-level (device-pair) link, both
         directions — covers ALL node-edges between the two blocks."""
-        return 2 * self.local_nodes * d * itemsize
+        return 2 * _payload_bytes(d, itemsize, wire, rows=self.local_nodes)
 
-    def total_bytes_per_step(self, d: int, itemsize: int = 4) -> int:
-        return self.block.num_edges * self.bytes_per_link_per_step(d,
-                                                                   itemsize)
+    def total_bytes_per_step(self, d: int, itemsize: int = 4,
+                             wire: str | None = None) -> int:
+        return self.block.num_edges * self.bytes_per_link_per_step(
+            d, itemsize, wire)
 
-    def contract(self, d: int, itemsize: int = 4, *, gossip_steps: int = 1):
+    def contract(self, d: int, itemsize: int = 4, *, gossip_steps: int = 1,
+                 wire: str | None = None):
         """Block-mode collective budget (see ``CommPlan.contract``): at most
         ``gossip_steps * num_colors`` block-level collective-permutes of
-        (K/M, d) payloads per step — ``num_colors <= Delta_block + 1`` by
+        (K/M, d) payloads per step (twice that on a quantized wire —
+        payload + scale sidecar) — ``num_colors <= Delta_block + 1`` by
         the Misra-Gries bound, so this is at least as strict as the Vizing
         budget the dist tests assert."""
         from repro.analysis.contracts import CommContract
         from repro.topo.lowering import comm_budget
-        budget = comm_budget(self, d, itemsize, gossip_steps=gossip_steps)
+        budget = comm_budget(self, d, itemsize, gossip_steps=gossip_steps,
+                             wire=wire)
+        tag = f"-{wire}" if wire else ""
         return CommContract(
             name=f"block-K{self.num_nodes}-M{self.num_devices}-"
-                 f"c{self.num_colors}-d{d}",
+                 f"c{self.num_colors}-d{d}{tag}",
             max_collective_permute_count=budget["collective_permutes"],
             max_collective_permute_bytes=budget["bytes_per_device"],
             require_collective_permute=True)
 
     def render(self, d: int | None = None, itemsize: int = 4,
-               max_edges: int = 8) -> str:
+               max_edges: int = 8, wire: str | None = None) -> str:
         """Human-readable block plan (the ``dryrun --plan --topo`` section
         when the mesh is smaller than the graph)."""
         ln = self.local_nodes
@@ -347,6 +417,7 @@ class BlockPlan:
                 f"total={self.total_bytes_per_step(d, itemsize):,}  "
                 f"(dense all-gather per-device="
                 f"{self.num_nodes * d * itemsize:,})")
+            lines.extend(_render_wire_line(self, d, itemsize, wire))
         return "\n".join(lines)
 
 

@@ -1,0 +1,532 @@
+"""The quantized gossip wire: codec properties, error feedback, parity.
+
+Four layers, mirroring the wire's contract:
+
+* **Codec properties** (``repro.core.quant``, hypothesis-style): the
+  quantize-dequantize roundtrip error is bounded by the grid step (absmax/127
+  per row for int8; a RELATIVE ulp bound for fp8, whose grid is
+  power-of-two-aligned), scales are exactly absmax/qmax, payload bits are
+  invariant to power-of-two rescaling, stochastic rounding is unbiased in
+  expectation and keyed-deterministic, and per-node keys depend on GLOBAL
+  node ids only — the property that makes the wire bits shard-invariant.
+* **Error feedback**: the residual update telescopes (sum of what the
+  network saw equals the sum of what the nodes meant to send, up to the
+  final residual) and the residual itself stays grid-step bounded.
+* **Executor + runtime parity**: ``wire=int8/fp8`` runs match between the
+  simulator and ``run_dist_cola`` BITWISE on 1-device meshes (both comm
+  modes, static + churn) and on 2/4-device block meshes (slow subprocess
+  pin); the software-pipelined executor is a bitwise no-op on the results.
+* **The acceptance pin**: on the fig3 ring and torus configs, EF int8/fp8
+  reaches the eps-certified stop within 2x the fp32 round count, while the
+  SAME wire without EF sits on its quantization noise floor ABOVE eps for
+  the whole budget — the observable fact that the residual carry, not the
+  codec, is what preserves convergence.
+
+Config corners the wire rejects (attacks / robust / mixed gradients /
+pipeline-on-fp32 / pipeline-under-reset) and the gossip-SGD + DP wire
+(stateless pytree codec, clip -> quantize -> re-clip order) are pinned at
+the bottom.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro import attack
+from repro.core import problems, quant, topology as topo
+from repro.core.cola import ColaConfig, run_cola
+from repro.data import synthetic
+from repro.dist.runtime import run_dist_cola
+from repro.optim import privacy
+from repro.optim.gossip import GossipConfig, _param_mixer, mix_pytree
+
+K = 8
+
+
+def _rows(seed: int, k: int = 4, d: int = 33, scale: float = 1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((k, d)) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# codec properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), d=st.integers(1, 64),
+       mag=st.floats(-6.0, 6.0))
+def test_int8_roundtrip_error_bound(seed, d, mag):
+    """Round-to-nearest: |deq - x| <= scale/2 per element, scale = absmax/127
+    per row exactly."""
+    x = _rows(seed, k=3, d=d, scale=10.0 ** mag)
+    q, s = quant.quantize(x, "int8")
+    absmax = np.max(np.abs(np.asarray(x)), axis=-1, keepdims=True)
+    want_scale = np.where(absmax > 0,
+                          absmax * np.float32(1.0 / 127.0), np.float32(1.0))
+    np.testing.assert_array_equal(np.asarray(s), want_scale)
+    assert q.dtype == jnp.int8
+    err = np.abs(np.asarray(quant.dequantize(q, s)) - np.asarray(x))
+    assert np.all(err <= 0.5 * np.asarray(s) * (1 + 1e-6))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), d=st.integers(1, 64))
+def test_int8_stochastic_roundtrip_error_bound(seed, d):
+    """Stochastic rounding moves at most ONE grid step: |deq - x| <= scale."""
+    x = _rows(seed, k=3, d=d)
+    q, s = quant.quantize(x, "int8", key=jax.random.PRNGKey(seed))
+    err = np.abs(np.asarray(quant.dequantize(q, s)) - np.asarray(x))
+    assert np.all(err <= np.asarray(s) * (1 + 1e-6))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), wire=st.sampled_from(["fp8", "fp8_e5m2"]),
+       stochastic=st.sampled_from([False, True]))
+def test_fp8_roundtrip_relative_ulp_bound(seed, wire, stochastic):
+    """The fp8 grid is power-of-two-aligned, so the error bound is RELATIVE:
+    one ulp = |x| * 2^-mant at each element (plus the 2^-24 subnormal floor
+    of the stochastic grid), NOT absmax/qmax."""
+    mant = {"fp8": 3, "fp8_e5m2": 2}[wire]
+    x = _rows(seed, k=3, d=48)
+    key = jax.random.PRNGKey(seed) if stochastic else None
+    q, s = quant.quantize(x, wire, key=key)
+    assert q.dtype == quant.wire_dtype(wire)
+    deq = np.asarray(quant.dequantize(q, s))
+    # RN error is ulp/2, SR error is one full ulp; the grid floor for
+    # near-zero elements is scale * 2^(-24 - mant)
+    factor = 2.0 ** -mant if stochastic else 2.0 ** -(mant + 1)
+    bound = (np.abs(np.asarray(x)) * factor * (1 + 1e-5)
+             + np.asarray(s) * 2.0 ** (-24 + 1))
+    assert np.all(np.abs(deq - np.asarray(x)) <= bound)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       wire=st.sampled_from(["int8", "fp8", "fp8_e5m2"]),
+       log2c=st.integers(-8, 8), stochastic=st.sampled_from([False, True]))
+def test_scale_invariance_power_of_two(seed, wire, log2c, stochastic):
+    """Rescaling the input by 2^c leaves the payload BITS untouched and
+    multiplies the scale sidecar exactly — absmax scaling is exact in fp32
+    for power-of-two factors, so x/scale is bitwise invariant."""
+    x = _rows(seed)
+    c = np.float32(2.0 ** log2c)
+    key = jax.random.PRNGKey(seed) if stochastic else None
+    q0, s0 = quant.quantize(x, wire, key=key)
+    q1, s1 = quant.quantize(x * c, wire, key=key)
+    np.testing.assert_array_equal(
+        np.asarray(q0).view(np.uint8), np.asarray(q1).view(np.uint8))
+    np.testing.assert_array_equal(np.asarray(s0) * c, np.asarray(s1))
+
+
+@pytest.mark.parametrize("wire", ["int8", "fp8"])
+def test_stochastic_rounding_unbiased(wire):
+    """E[dequantize(quantize(x, key))] = x: the empirical mean over many
+    keys lands within 5 sigma of x (sigma <= grid_step / (2 sqrt(n)))."""
+    x = _rows(7, k=1, d=16)
+    n = 4000
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(n, dtype=jnp.uint32))
+
+    def deq(key):
+        q, s = quant.quantize(x, wire, key=key)
+        return quant.dequantize(q, s)
+
+    mean = np.asarray(jnp.mean(jax.vmap(deq)(keys), axis=0))
+    if wire == "int8":
+        step = np.broadcast_to(
+            np.max(np.abs(np.asarray(x)), -1, keepdims=True) / 127.0, x.shape)
+    else:
+        step = np.abs(np.asarray(x)) * 2.0 ** -3 + 1e-6
+    assert np.all(np.abs(mean - np.asarray(x)) <= 5.0 * step / (2 * n ** 0.5))
+
+
+def test_keyed_determinism_and_sensitivity():
+    x = _rows(11)
+    k1, k2 = jax.random.PRNGKey(1), jax.random.PRNGKey(2)
+    for wire in ("int8", "fp8"):
+        qa, sa = quant.quantize(x, wire, key=k1)
+        qb, sb = quant.quantize(x, wire, key=k1)
+        np.testing.assert_array_equal(np.asarray(qa).view(np.uint8),
+                                      np.asarray(qb).view(np.uint8))
+        np.testing.assert_array_equal(np.asarray(sa), np.asarray(sb))
+        qc, _ = quant.quantize(x, wire, key=k2)
+        assert not np.array_equal(np.asarray(qa).view(np.uint8),
+                                  np.asarray(qc).view(np.uint8))
+
+
+def test_node_keys_global_row_ids_shard_invariant():
+    """A (K, d) stack quantized whole and a 2-row shard quantized with its
+    GLOBAL node ids produce the same wire bits for those rows — the property
+    that makes sim / per-node plan / block shards bitwise interchangeable."""
+    v = _rows(3, k=K, d=24)
+    key = quant.step_key(quant.round_keys(0, 1)[0])
+    q_full, s_full = quant.quantize_rows(v, "int8", key,
+                                         node_ids=jnp.arange(K))
+    shard = jnp.asarray([3, 5])
+    q_sh, s_sh = quant.quantize_rows(v[shard], "int8", key, node_ids=shard)
+    np.testing.assert_array_equal(np.asarray(q_full)[np.asarray(shard)],
+                                  np.asarray(q_sh))
+    np.testing.assert_array_equal(np.asarray(s_full)[np.asarray(shard)],
+                                  np.asarray(s_sh))
+
+
+def test_wire_names_bytes_and_rejections():
+    assert quant.canonical_wire(None) == "fp32"
+    assert not quant.is_quantized("fp32") and quant.is_quantized("int8")
+    with pytest.raises(ValueError, match="wire="):
+        quant.canonical_wire("int4")
+    with pytest.raises(ValueError, match="no quantization grid"):
+        quant.wire_qmax("fp32")
+    assert quant.wire_itemsize("fp32") == 4
+    for w in ("int8", "fp8", "fp8_e5m2"):
+        assert quant.wire_itemsize(w) == 1
+    d, rows = 100, 2
+    assert quant.payload_bytes(d, "fp32", rows) == rows * d * 4
+    assert quant.payload_bytes(d, "int8", rows) == rows * (d + 4)
+    # fp32 wire view is the identity (no codec, EF untouched)
+    v = _rows(0)
+    out, ef = quant.wire_view(v, None, "fp32")
+    assert out is v and ef is None
+    assert quant.ef_init(v, "fp32") is None
+
+
+# ---------------------------------------------------------------------------
+# error feedback
+# ---------------------------------------------------------------------------
+
+def test_ef_telescopes_and_residual_bounded():
+    """EF sends Q(v + ef) and keeps ef' = (v + ef) - deq, so over T rounds
+    sum(deq_t) = sum(v_t) - ef_T: the network's view of the traffic differs
+    from the intended traffic by ONE residual, not T accumulated errors —
+    and that residual is grid-step bounded at every round."""
+    rng = np.random.default_rng(5)
+    ef = quant.ef_init(jnp.zeros((3, 20)), "int8")
+    total_v = np.zeros((3, 20), np.float64)
+    total_deq = np.zeros((3, 20), np.float64)
+    for t in range(30):
+        v = jnp.asarray(rng.standard_normal((3, 20)), jnp.float32)
+        key = quant.step_key(quant.round_keys(0, 31)[t])
+        q, s, deq, ef = quant.encode(v, "int8", key, None, ef)
+        total_v += np.asarray(v, np.float64)
+        total_deq += np.asarray(deq, np.float64)
+        # stochastic rounding moves <= 1 step, so |ef| <= 2 * scale
+        assert np.all(np.abs(np.asarray(ef)) <= 2.0 * np.asarray(s) + 1e-6)
+    np.testing.assert_allclose(total_deq + np.asarray(ef), total_v,
+                               rtol=0, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# executor <-> dist runtime parity (1 device in-process; 2/4 dev subprocess)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def ridge():
+    x, y, _ = synthetic.regression(150, 48, seed=4)
+    return problems.ridge_primal(jnp.asarray(x), jnp.asarray(y), 1e-2)
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+def _drop(t, rng):
+    return rng.random(K) < 0.7
+
+
+def _assert_state_parity(a, b, case, bitwise=True):
+    eq = (np.testing.assert_array_equal if bitwise
+          else lambda x, y, err_msg: np.testing.assert_allclose(
+              x, y, rtol=1e-5, atol=1e-6, err_msg=err_msg))
+    eq(np.asarray(a.state.x_parts), np.asarray(b.state.x_parts),
+       err_msg=case)
+    eq(np.asarray(a.state.v_stack), np.asarray(b.state.v_stack),
+       err_msg=case)
+    assert a.history["round"] == b.history["round"]
+    for name in ("primal", "dual", "gap"):
+        np.testing.assert_allclose(a.history[name], b.history[name],
+                                   rtol=1e-5, atol=1e-6,
+                                   err_msg=f"{case}:{name}")
+
+
+@pytest.mark.parametrize("comm", ["plan", "dense"])
+@pytest.mark.parametrize("wire", ["int8", "fp8"])
+def test_quant_dist_bitwise_matches_sim_1dev(ridge, mesh1, wire, comm):
+    """wire=int8/fp8 through the real shard_map runtime on a 1-device mesh
+    reproduces the simulator bit for bit — the codec draws are a function
+    of (seed, round, step, color, node) alone, static AND under churn."""
+    cfg = ColaConfig(kappa=1.0, wire=wire)
+    for kwargs in ({}, dict(active_schedule=_drop)):
+        case = f"{wire}:{comm}:{sorted(kwargs)}"
+        sim = run_cola(ridge, topo.torus_2d(2, K // 2), cfg, 25,
+                       record_every=6, seed=3, **kwargs)
+        dist = run_dist_cola(ridge, topo.torus_2d(2, K // 2), cfg, mesh1, 25,
+                             comm=comm, record_every=6, seed=3, **kwargs)
+        _assert_state_parity(sim, dist, case)
+
+
+def test_wire_kwarg_overrides_cfg(ridge, mesh1):
+    a = run_dist_cola(ridge, topo.ring(K), ColaConfig(kappa=1.0, wire="int8"),
+                      mesh1, 12, comm="dense", record_every=6)
+    b = run_dist_cola(ridge, topo.ring(K), ColaConfig(kappa=1.0),
+                      mesh1, 12, comm="dense", record_every=6, wire="int8")
+    _assert_state_parity(a, b, "wire= kwarg")
+
+
+def test_pipeline_is_bitwise_noop(ridge, mesh1):
+    """Software pipelining only REORDERS the encode/exchange schedule (round
+    t+1's payload is encoded with round t+1's key, just one round early), so
+    results are bitwise identical — sim and dist."""
+    for wire in ("int8", "fp8"):
+        base = ColaConfig(kappa=1.0, wire=wire)
+        piped = ColaConfig(kappa=1.0, wire=wire, pipeline=True)
+        sim = run_cola(ridge, topo.torus_2d(2, K // 2), base, 25,
+                       record_every=6)
+        sim_p = run_cola(ridge, topo.torus_2d(2, K // 2), piped, 25,
+                         record_every=6)
+        _assert_state_parity(sim, sim_p, f"sim pipeline {wire}")
+        dist_p = run_dist_cola(ridge, topo.torus_2d(2, K // 2), piped, mesh1,
+                               25, comm="plan", record_every=6)
+        _assert_state_parity(sim, dist_p, f"dist pipeline {wire}")
+
+
+QUANT_BLOCK_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.data import synthetic
+    from repro.core import problems, topology as topo
+    from repro.core.cola import ColaConfig, run_cola
+    from repro.dist.runtime import run_dist_cola
+
+    assert jax.device_count() == 4
+    K = 8
+    graph = topo.torus_2d(2, 4)
+    x, y, _ = synthetic.regression(150, 48, seed=4)
+    prob = problems.ridge_primal(jnp.asarray(x), jnp.asarray(y), 1e-2)
+
+    def churn(t, rng):
+        return rng.random(K) < 0.7
+
+    for wire in ("int8", "fp8"):
+        cfg = ColaConfig(kappa=1.0, wire=wire)
+        for kwargs in ({}, dict(active_schedule=churn)):
+            sim = run_cola(prob, graph, cfg, 25, record_every=6, seed=3,
+                           **kwargs)
+            for m in (2, 4):
+                mesh = jax.make_mesh((m,), ("data",))
+                dist = run_dist_cola(prob, graph, cfg, mesh, 25, comm="plan",
+                                     record_every=6, seed=3, **kwargs)
+                np.testing.assert_array_equal(
+                    np.asarray(sim.state.x_parts),
+                    np.asarray(dist.state.x_parts))
+                np.testing.assert_array_equal(
+                    np.asarray(sim.state.v_stack),
+                    np.asarray(dist.state.v_stack))
+
+    # the pipelined executor is a bitwise no-op on a REAL 4-device mesh too
+    mesh = jax.make_mesh((4,), ("data",))
+    base = run_dist_cola(prob, graph, ColaConfig(kappa=1.0, wire="int8"),
+                         mesh, 25, comm="plan", record_every=6)
+    piped = run_dist_cola(prob, graph,
+                          ColaConfig(kappa=1.0, wire="int8", pipeline=True),
+                          mesh, 25, comm="plan", record_every=6)
+    np.testing.assert_array_equal(np.asarray(base.state.v_stack),
+                                  np.asarray(piped.state.v_stack))
+    print("QUANT_PARITY_OK")
+""")
+
+
+@pytest.mark.slow
+def test_quant_block_plan_4dev_subprocess():
+    """wire=int8/fp8 sim<->dist bitwise parity on REAL 2/4-device meshes
+    (the in-process suite above runs on whatever the session has)."""
+    env = dict(os.environ, PYTHONPATH="src:.")
+    out = subprocess.run([sys.executable, "-c", QUANT_BLOCK_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert "QUANT_PARITY_OK" in out.stdout, out.stdout + "\n" + out.stderr
+
+
+# ---------------------------------------------------------------------------
+# the acceptance pin: EF reaches the eps-certified stop, no-EF stalls
+# ---------------------------------------------------------------------------
+
+#: (graph builder, rounds budget, {wire: eps}) — eps sits between the EF
+#: noise floor (EF runs certify) and the no-EF floor (no-EF runs never do);
+#: measured floors on this fixture leave >= 2x margin on both sides
+_PIN_CONFIGS = (
+    ("ring", lambda: topo.ring(16), 800, {"int8": 30.0, "fp8": 100.0}),
+    ("torus", lambda: topo.torus_2d(4, 4), 520, {"int8": 8.0, "fp8": 50.0}),
+)
+
+
+def _first_crossing(history, eps):
+    gaps = np.asarray(history["gap"])
+    hit = np.nonzero(gaps <= eps)[0]
+    return None if hit.size == 0 else int(history["round"][hit[0]])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name,build,rounds,eps_by_wire", _PIN_CONFIGS,
+                         ids=[c[0] for c in _PIN_CONFIGS])
+def test_ef_certifies_within_2x_fp32_and_no_ef_stalls(name, build, rounds,
+                                                      eps_by_wire):
+    """The fig3 ring/torus acceptance pin: for each quantized wire there is
+    an eps that (a) fp32 certifies, (b) EF certifies within 2x the fp32
+    round count, and (c) the SAME wire without EF never reaches in the whole
+    budget — its gap noise floor sits above eps. Deterministic: the SR draws
+    are a pure function of (seed, round, step, node)."""
+    from benchmarks.common import make_ridge  # the fig3 fixture
+
+    prob, _ = make_ridge(lam=1e-5, seed=2)
+    graph = build()
+
+    def gap_history(wire, ef):
+        cfg = ColaConfig(kappa=1.0, wire=wire, error_feedback=ef)
+        return run_cola(prob, graph, cfg, rounds, record_every=2,
+                        recorder="gap").history
+
+    h_fp32 = gap_history("fp32", True)
+    for wire, eps in eps_by_wire.items():
+        r_fp32 = _first_crossing(h_fp32, eps)
+        assert r_fp32 is not None, f"{name}: fp32 never reached eps={eps}"
+        r_ef = _first_crossing(gap_history(wire, True), eps)
+        assert r_ef is not None and r_ef <= 2 * r_fp32, \
+            f"{name} {wire}+ef: crossed at {r_ef}, fp32 at {r_fp32}"
+        r_no_ef = _first_crossing(gap_history(wire, False), eps)
+        assert r_no_ef is None, \
+            f"{name} {wire}-ef: quantization noise floor should hold the " \
+            f"gap above eps={eps} forever, but it crossed at {r_no_ef}"
+
+
+@pytest.mark.slow
+def test_eps_certified_stop_fires_under_quantization():
+    """eps= early stopping itself runs ON the quantized exchange: the int8+EF
+    run stops, at the gap-recorder crossing, within 2x the fp32 stop."""
+    from benchmarks.common import make_ridge
+
+    prob, _ = make_ridge(lam=1e-5, seed=2)
+    graph = topo.torus_2d(4, 4)
+    eps, rounds = 8.0, 520
+    stops = {}
+    for wire in ("fp32", "int8"):
+        cfg = ColaConfig(kappa=1.0, wire=wire)
+        res = run_cola(prob, graph, cfg, rounds, record_every=2,
+                       recorder="gap", eps=eps)
+        stops[wire] = res.history["stop_round"]
+        assert stops[wire] is not None, f"{wire} never certified eps={eps}"
+        assert res.history["gap"][-1] <= eps
+    assert stops["int8"] <= 2 * stops["fp32"]
+
+
+# ---------------------------------------------------------------------------
+# config corners the wire rejects
+# ---------------------------------------------------------------------------
+
+def test_wire_config_rejections(ridge):
+    graph = topo.ring(K)
+    with pytest.raises(ValueError, match="pipeline requires a quantized"):
+        run_cola(ridge, graph, ColaConfig(kappa=1.0, pipeline=True), 4)
+    byz = attack.Byzantine(nodes=(0,), mode="sign_flip", scale=10.0, start=1)
+    with pytest.raises(NotImplementedError, match="attacks="):
+        run_cola(ridge, graph, ColaConfig(kappa=1.0, wire="int8"), 4,
+                 attacks=[byz])
+    with pytest.raises(NotImplementedError, match="robust"):
+        run_cola(ridge, graph,
+                 ColaConfig(kappa=1.0, wire="int8", robust="trim"), 4)
+    with pytest.raises(NotImplementedError, match="grad_mode"):
+        run_cola(ridge, graph,
+                 ColaConfig(kappa=1.0, wire="int8", grad_mode="mixed"), 4)
+    with pytest.raises(NotImplementedError, match="reset"):
+        run_cola(ridge, graph,
+                 ColaConfig(kappa=1.0, wire="int8", pipeline=True), 4,
+                 active_schedule=_drop, leave_mode="reset")
+    with pytest.raises(ValueError, match="wire="):
+        run_cola(ridge, graph, ColaConfig(kappa=1.0, wire="int4"), 4)
+
+
+# ---------------------------------------------------------------------------
+# gossip-SGD + DP wire (the stateless pytree codec)
+# ---------------------------------------------------------------------------
+
+def _param_stack(seed: int = 0, k: int = 6):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.standard_normal((k, 4, 3)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((k, 3)), jnp.float32)}
+
+
+def test_gossip_wire_dense_path_and_rejections():
+    params = _param_stack()
+    k = len(params["b"])
+    w = jnp.asarray(topo.metropolis_weights(topo.ring(k)), jnp.float32)
+    mix = _param_mixer(GossipConfig(num_nodes=k, wire="int8"),
+                       None, None, None)
+    got = mix(w, params)
+    want = mix_pytree(w, params, 1)
+    for leaf in ("w", "b"):
+        # mixing the codec view: within one int8 grid step of the fp32 mix
+        assert np.max(np.abs(np.asarray(got[leaf] - want[leaf]))) < 0.05
+        assert not np.array_equal(np.asarray(got[leaf]),
+                                  np.asarray(want[leaf]))
+    with pytest.raises(ValueError, match="dense path"):
+        _param_mixer(GossipConfig(num_nodes=k, wire="int8"),
+                     jax.make_mesh((1,), ("data",)), "data", 1)
+    with pytest.raises(ValueError, match="robust"):
+        _param_mixer(GossipConfig(num_nodes=k, wire="int8", robust="trim"),
+                     None, None, None)
+
+
+def test_wire_view_pytree_stateless_keyed():
+    params = _param_stack(3)
+    assert quant.wire_view_pytree(params, "fp32") is params
+    key = quant.wire_stream(jax.random.PRNGKey(9))
+    a = quant.wire_view_pytree(params, "int8", key)
+    b = quant.wire_view_pytree(params, "int8", key)
+    for leaf in ("w", "b"):
+        assert a[leaf].shape == params[leaf].shape
+        np.testing.assert_array_equal(np.asarray(a[leaf]),
+                                      np.asarray(b[leaf]))
+
+
+def test_dp_wire_reclip_guard_restores_sensitivity():
+    """Codec rounding can INFLATE a clipped emission's norm; the DP path's
+    re-clip guard must restore ||p|| <= clip exactly, keeping the 2*clip
+    replace-one sensitivity the accountant assumes."""
+    clip = 1.0
+    params = privacy.clip_params(_param_stack(11), clip)
+    wv = quant.wire_view_pytree(params, "int8",
+                                quant.wire_stream(jax.random.PRNGKey(0)))
+
+    def norms(p):
+        leaves = jax.tree_util.tree_leaves(p)
+        sq = sum(np.sum(np.asarray(x, np.float64).reshape(x.shape[0], -1)
+                        ** 2, axis=1) for x in leaves)
+        return np.sqrt(sq)
+
+    assert np.any(norms(wv) > clip), \
+        "fixture should exercise the guard (codec inflated no norm)"
+    guarded = privacy.clip_params(wv, clip)
+    assert np.all(norms(guarded) <= clip * (1 + 1e-5))
+
+
+def test_noisy_dense_mix_wire_codec_keyed_deterministic():
+    params = _param_stack(4)
+    k = len(params["b"])
+    w = jnp.asarray(topo.metropolis_weights(topo.ring(k)), jnp.float32)
+    dp = privacy.DPConfig(clip=1.0, sigma=0.5)
+    key = jax.random.PRNGKey(12)
+    a = privacy.noisy_dense_mix(w, params, dp, key, wire_codec="int8")
+    b = privacy.noisy_dense_mix(w, params, dp, key, wire_codec="int8")
+    plain = privacy.noisy_dense_mix(w, params, dp, key)
+    for leaf in ("w", "b"):
+        np.testing.assert_array_equal(np.asarray(a[leaf]),
+                                      np.asarray(b[leaf]))
+        assert not np.array_equal(np.asarray(a[leaf]),
+                                  np.asarray(plain[leaf]))
