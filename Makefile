@@ -1,7 +1,7 @@
 # repo root on the path too: benchmarks/ imports `benchmarks.common`
 PY := PYTHONPATH=src:. python
 
-.PHONY: verify test quick bench bench-smoke analysis
+.PHONY: verify test quick bench bench-smoke analysis obs-smoke
 
 # tier-1 gate: the full suite + the round-executor benchmark in smoke mode,
 # checked against the committed BENCH_cola.json trajectory (>20% slowdown
@@ -29,3 +29,10 @@ bench-smoke:
 # seeded-violation smoke proving each pass still fires
 analysis:
 	$(PY) -m repro.analysis --all --selftest
+
+# observability smoke: two telemetry runs (clean fp32 + int8/trim under a
+# seeded Byzantine pair) land in a throwaway registry, then every
+# repro.obs subcommand runs over them — list, show, diff (which must come
+# back telemetry-only against the clean twin's config delta), timeline
+obs-smoke:
+	$(PY) -m repro.obs --dir $$(mktemp -d) smoke

@@ -32,13 +32,12 @@ import pathlib
 import subprocess
 import sys
 import textwrap
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row
+from benchmarks.common import csv_row, timeit_rounds
 from repro.core import executor as exec_engine
 from repro.core import metrics as metrics_lib, problems, topology as topo
 from repro.core.cola import ColaConfig, build_env, run_cola
@@ -93,20 +92,6 @@ _QUANT_MAX_OVERHEAD = 3.0
 _PIPE_KEY = "pipelined_gossip_rounds_per_sec"
 
 
-def _bench_case(runner, rounds, repeats: int = 3):
-    """Best-of-``repeats`` wall-clock (after a warmup run that owns
-    compilation) — scheduler noise slows individual runs, never speeds them,
-    so max rounds/sec is the stable statistic for the regression gate."""
-    runner()
-    best = 0.0
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        res = runner()
-        jax.block_until_ready(res.state.x_parts)
-        best = max(best, rounds / (time.perf_counter() - t0))
-    return best, res
-
-
 def bench_config(smoke: bool = False) -> dict:
     rounds = 50 if smoke else 200
     k = 16
@@ -120,18 +105,19 @@ def bench_config(smoke: bool = False) -> dict:
     tag = f"K={k},T={rounds}"
 
     csv_row("fig", "executor", "case", "rounds_per_sec")
-    loop_rps, loop_res = _bench_case(
+    loop_rps, loop_res = timeit_rounds(
         lambda: run_cola(prob, graph, cfg, rounds, record_every=record_every,
-                         executor="loop"), rounds)
+                         executor="loop"), rounds, label="loop")
     csv_row("round_bench", "loop", tag, f"{loop_rps:.1f}")
-    block_rps, block_res = _bench_case(
+    block_rps, block_res = timeit_rounds(
         lambda: run_cola(prob, graph, cfg, rounds, record_every=record_every,
-                         executor="block", block_size=64), rounds)
+                         executor="block", block_size=64), rounds,
+        label="block")
     csv_row("round_bench", "block", tag, f"{block_rps:.1f}")
-    dist_rps, dist_res = _bench_case(
+    dist_rps, dist_res = timeit_rounds(
         lambda: run_dist_cola(prob, graph, cfg, mesh, rounds,
                               record_every=record_every, comm="dense",
-                              block_size=64), rounds)
+                              block_size=64), rounds, label="dist")
     csv_row("round_bench", "dist_block", tag, f"{dist_rps:.1f}")
     speedup = block_rps / loop_rps
     csv_row("round_bench", "speedup", tag, f"{speedup:.2f}x")
@@ -165,8 +151,9 @@ def bench_config(smoke: bool = False) -> dict:
 _PLAN_BENCH_SCRIPT = textwrap.dedent("""
     import os, sys
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import json, time
+    import json
     import jax, jax.numpy as jnp, numpy as np
+    from benchmarks.common import timeit_rounds
     from repro.core import problems, topology as topo
     from repro.core.cola import ColaConfig
     from repro.data import synthetic
@@ -180,33 +167,24 @@ _PLAN_BENCH_SCRIPT = textwrap.dedent("""
     mesh = jax.make_mesh((8,), ("data",))
 
     def bench(comm, run_cfg=cfg):
-        runner = lambda: run_dist_cola(prob, graph, run_cfg, mesh, rounds,
-                                       comm=comm, record_every=rounds - 1)
-        runner()  # warmup owns compilation
-        best = 0.0
-        for _ in range(3):
-            t0 = time.perf_counter()
-            res = runner()
-            jax.block_until_ready(res.state.x_parts)
-            best = max(best, rounds / (time.perf_counter() - t0))
-        return best, res
+        return timeit_rounds(
+            lambda: run_dist_cola(prob, graph, run_cfg, mesh, rounds,
+                                  comm=comm, record_every=rounds - 1),
+            rounds, label="plan_" + comm)
 
     # the robust/plan and pipe/quant gates are RATIOS of two same-run
-    # measurements, so time each pair INTERLEAVED (a load spike hits both
-    # runs, not whichever happened to go second) and with more repeats than
-    # the absolute rows — at smoke's 50 rounds a single rep is ~30ms and
-    # best-of-3 back-to-back still carries +-20% jitter
+    # measurements, so time each pair INTERLEAVED (timeit_rounds with two
+    # runners: a load spike hits both runs, not whichever happened to go
+    # second) and with more repeats than the absolute rows — at smoke's 50
+    # rounds a single rep is ~30ms and best-of-3 back-to-back still carries
+    # +-20% jitter
     def bench_pair(cfg_a, cfg_b, reps=8):
         run = lambda c: run_dist_cola(prob, graph, c, mesh, rounds,
                                       comm="plan", record_every=rounds - 1)
-        res_a, res_b = run(cfg_a), run(cfg_b)  # warmups own compilation
-        bests = [0.0, 0.0]
-        for _ in range(reps):
-            for i, c in enumerate((cfg_a, cfg_b)):
-                t0 = time.perf_counter()
-                jax.block_until_ready(run(c).state.x_parts)
-                bests[i] = max(bests[i], rounds / (time.perf_counter() - t0))
-        return bests[0], res_a, bests[1], res_b
+        bests, results = timeit_rounds(
+            [lambda: run(cfg_a), lambda: run(cfg_b)], rounds, repeats=reps,
+            label="plan_pair")
+        return bests[0], results[0], bests[1], results[1]
 
     plan_rps, plan_res, robust_rps, robust_res = bench_pair(
         cfg, ColaConfig(kappa=1.0, robust="trim"))
@@ -297,23 +275,58 @@ def bench_recording(smoke: bool = False) -> dict:
     for rec_name, rec in recorders.items():
         for every_name in _REC_EVERY:
             every = rounds if every_name == "inf" else int(every_name)
-            sim_rps, _ = _bench_case(
+            sim_rps, _ = timeit_rounds(
                 lambda: run_cola(prob, graph, cfg, rounds,
                                  record_every=every, recorder=rec,
-                                 block_size=64), rounds, repeats=2)
+                                 block_size=64), rounds, repeats=2,
+                label=f"rec_sim_{rec_name}_e{every_name}")
             out[f"rec_sim_{rec_name}_e{every_name}_rounds_per_sec"] = \
                 round(sim_rps, 2)
-            dist_rps, _ = _bench_case(
+            dist_rps, _ = timeit_rounds(
                 lambda: run_dist_cola(prob, graph, cfg, mesh, rounds,
                                       record_every=every, recorder=rec,
                                       comm="dense", block_size=64),
-                rounds, repeats=2)
+                rounds, repeats=2,
+                label=f"rec_dist_{rec_name}_e{every_name}")
             out[f"rec_dist_{rec_name}_e{every_name}_rounds_per_sec"] = \
                 round(dist_rps, 2)
             csv_row("round_bench", f"rec_{rec_name}_e{every_name}",
                     f"K={k},T={rounds}",
                     f"sim {sim_rps:.1f} / dist {dist_rps:.1f}")
     return out
+
+
+def delta_table(result: dict, smoke: bool) -> dict | None:
+    """Per-row percent delta of every measured rounds/sec key against the
+    committed BENCH_cola.json (positive = faster than committed). Returns
+    ``{key: {"committed", "measured", "delta_pct"}}`` — the human-readable
+    companion to the pass/fail gate, so a CI log shows HOW FAR each row
+    moved, not just whether it crossed the bar. None when no committed
+    baseline (or section) exists; the gate itself reports that failure."""
+    if not BENCH_PATH.exists():
+        return None
+    committed = json.loads(BENCH_PATH.read_text())
+    baseline = committed.get("smoke_baseline") if smoke else committed
+    if not baseline:
+        return None
+    table = {}
+    for key in (_CONTROL,) + _GATED + (_ROBUST_KEY, _QUANT_KEY, _PIPE_KEY):
+        base, got = baseline.get(key), result.get(key)
+        if not base or got is None:
+            continue
+        table[key] = {"committed": base, "measured": got,
+                      "delta_pct": round(100.0 * (got - base) / base, 1)}
+    return table
+
+
+def print_delta_table(table: dict) -> None:
+    width = max(len(k) for k in table)
+    print(f"{'key':<{width}}  {'committed':>10}  {'measured':>10}  "
+          f"{'delta':>8}", flush=True)
+    for key, row in table.items():
+        print(f"{key:<{width}}  {row['committed']:>10.1f}  "
+              f"{row['measured']:>10.1f}  {row['delta_pct']:>+7.1f}%",
+              flush=True)
 
 
 def check_regression(result: dict, smoke: bool, tolerance: float) -> list[str]:
@@ -428,6 +441,10 @@ def run(smoke: bool = False, check: bool = False,
             sys.exit(1)
         # gate against the COMMITTED numbers before any rewrite below —
         # checking after the write would compare the measurement to itself
+        table = delta_table(result, smoke)
+        if table:
+            result["delta_vs_committed"] = table
+            print_delta_table(table)
         failures = check_regression(result, smoke, tolerance)
         if failures:
             for msg in failures:

@@ -32,14 +32,24 @@ With ``--wire fp8`` (or ``int8``) the gossip payloads cross the wire as
 error feedback carries the rounding residual across rounds, so the run
 still certifies the SAME eps; ``--no-error-feedback`` shows the contrast
 (the quantization noise floor can hold the gap above a tight eps
-forever). The codec composes with churn, but not (yet) with ``--byzantine``
-or ``--robust``.
+forever). The codec composes with churn AND with ``--byzantine`` /
+``--robust``: attacked payloads are re-encoded onto the same wire, the
+outlier gate judges the decoded rows, and error feedback rides the honest
+stream only.
+
+With ``--telemetry`` the run carries the ``repro.obs`` counters through the
+round scan — wire bytes vs the printed plan's contract, robust-gate
+rejections per sender, quantizer saturation, EF residual norm — and prints
+the totals; ``--report`` additionally appends a ``RunReport`` to the run
+registry (``.repro_runs/`` or ``$REPRO_RUNS_DIR``) for
+``python -m repro.obs show/diff/timeline``.
 
   PYTHONPATH=src python examples/elastic_lasso.py [--topo torus2d]
       [--p-stay 0.8] [--eps 3.0] [--byzantine 0,10] [--robust trim]
-      [--wire fp8] [--no-error-feedback]
+      [--wire fp8] [--no-error-feedback] [--telemetry] [--report]
 """
 import argparse
+import os
 
 import jax.numpy as jnp
 import numpy as np
@@ -73,12 +83,19 @@ def main() -> None:
     ap.add_argument("--no-error-feedback", action="store_true",
                     help="disable the EF residual carry — shows the raw "
                          "quantization noise floor")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="carry the repro.obs counters through the round "
+                         "scan and print the totals")
+    ap.add_argument("--report", action="store_true",
+                    help="also append a RunReport to the run registry "
+                         "(implies --telemetry)")
     args = ap.parse_args()
     quantized = args.wire != "fp32"
-    if quantized and (args.byzantine or args.robust):
-        ap.error("--wire quantization does not compose with --byzantine/"
-                 "--robust yet (the robust statistic needs the fp32 "
-                 "neighborhood buffer)")
+    telemetry = args.telemetry or args.report
+    if telemetry and not args.report:
+        # counters only: keep the registry untouched unless the user
+        # already pointed REPRO_RUNS_DIR somewhere
+        os.environ.setdefault("REPRO_RUNS_DIR", "off")
 
     x, y, _ = synthetic.regression(1500, 300, seed=1, sparsity_solution=0.1)
     prob = problems.lasso(jnp.asarray(x), jnp.asarray(y), lam=1e-3)
@@ -112,7 +129,8 @@ def main() -> None:
                                           near=2.0)
     res = run_cola(prob, graph,
                    ColaConfig(kappa=2.0, robust=args.robust, wire=args.wire,
-                              error_feedback=not args.no_error_feedback),
+                              error_feedback=not args.no_error_feedback,
+                              telemetry=telemetry),
                    rounds=args.rounds,
                    record_every=cadence, recorder="gap+certificate",
                    eps=args.eps, active_schedule=churn, leave_mode="freeze",
@@ -143,6 +161,25 @@ def main() -> None:
     x_final = res.state.x_parts.reshape(-1)[: prob.n]
     nnz = int(np.sum(np.abs(np.asarray(x_final)) > 1e-6))
     print(f"solution sparsity: {nnz}/{prob.n} nonzeros")
+
+    if telemetry:
+        tel = h["telemetry"]
+        print(f"telemetry: {tel['rounds']} rounds moved "
+              f"{tel['wire_bytes']:.0f} wire bytes "
+              f"({tel['permutes']} ppermutes) — contract: {tel['contract']}")
+        if args.robust:
+            msg = f"  robust gate: {tel['gate_total']} payload rejections"
+            if "gate_dishonest" in tel:
+                msg += (f" (honest senders {tel['gate_honest']}, "
+                        f"dishonest {tel['gate_dishonest']})")
+            print(msg)
+        if quantized:
+            print(f"  codec: mean saturation {tel['saturation_mean']:.4f}, "
+                  f"final EF residual norm {tel['ef_norm']:.4f}")
+        if args.report:
+            from repro.obs import report as obs_report
+            print(f"report appended to {obs_report.runs_file()} — inspect "
+                  "with: python -m repro.obs show -1 (or diff/timeline)")
 
 
 if __name__ == "__main__":

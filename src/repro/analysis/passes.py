@@ -208,6 +208,11 @@ def donation(fn: Callable, args: tuple, donate_argnums: tuple, *,
 class RetraceMonitor:
     """Record every ``executor.cached_driver`` resolution in a scope.
 
+    Built on ``executor.cache_listener``, so nesting two monitors (or a
+    monitor inside an ``obs.trace`` tracer) registers two independent
+    callbacks and each exit removes exactly its own — no double counting,
+    no leaked listener after an exception.
+
     >>> with RetraceMonitor() as mon:
     ...     run()
     >>> mon.misses   # (key, kind) events that re-built a driver
@@ -215,13 +220,17 @@ class RetraceMonitor:
 
     def __init__(self):
         self.events: list = []
+        self._cm = None
 
     def __enter__(self):
-        executor._CACHE_LISTENERS.append(self._on)
+        self._cm = executor.cache_listener(self._on)
+        self._cm.__enter__()
         return self
 
     def __exit__(self, *exc):
-        executor._CACHE_LISTENERS.remove(self._on)
+        cm, self._cm = self._cm, None
+        if cm is not None:
+            cm.__exit__(*exc)
         return False
 
     def _on(self, key, kind: str) -> None:
@@ -252,6 +261,42 @@ def check_retrace(run_fn: Callable, *, warmups: int = 1,
             f"{what}: the driver re-traced after an identical warm run — "
             "unstable cache key", where))
     return out
+
+
+@register_pass("telemetry-carry")
+def telemetry_carry(closed_off: jcore.ClosedJaxpr,
+                    closed_on: jcore.ClosedJaxpr, *,
+                    where: str = "") -> List[Finding]:
+    """Verify telemetry counters ride the round scan's CARRY.
+
+    Takes the telemetry-off and telemetry-on builds of one round-block
+    program. The on-device ``obs.counters`` accumulate per round, so
+    enabling telemetry must GROW the carry of (at least) the round scan;
+    if no scan in the telemetry-on jaxpr carries more state than the
+    largest scan of its off twin, the counters were captured as trace-time
+    constants (computed outside the scan, or summed host-side from a baked
+    array) and the recorded totals silently freeze at their trace values.
+    """
+    def max_carry(closed):
+        carries = [eqn.params.get("num_carry", 0)
+                   for eqn, _ in walk_eqns(closed.jaxpr)
+                   if eqn.primitive.name == "scan"]
+        return max(carries, default=None)
+
+    off, on = max_carry(closed_off), max_carry(closed_on)
+    if on is None:
+        return [Finding(
+            "telemetry-carry",
+            "telemetry-on program contains no scan: counters cannot be "
+            "carried per round at all", where)]
+    if off is not None and on <= off:
+        return [Finding(
+            "telemetry-carry",
+            f"telemetry-on round scan carries {on} values, no more than "
+            f"the telemetry-off twin's {off}: the counters are captured "
+            "as constants instead of accumulated in the scan carry",
+            where)]
+    return []
 
 
 def run_jaxpr_passes(jaxpr_or_fn, *args, where: str = "",

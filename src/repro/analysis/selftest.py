@@ -152,6 +152,35 @@ def seeded_fp32_leak() -> List[Finding]:
     return []
 
 
+@register_selftest("telemetry-carry")
+def seeded_telemetry_constant() -> List[Finding]:
+    """Telemetry counters captured as a trace-time constant instead of
+    extending the round scan's carry: the "on" build's scan carries no more
+    state than its off twin, so every counter update is dead code and the
+    recorded totals freeze at their trace values."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    def run_off(x):
+        def step(carry, _):
+            return carry + 1.0, None
+        return lax.scan(step, x, None, length=4)[0]
+
+    wire_bytes = jnp.zeros(())  # the seeded bug: counter not in the carry
+
+    def run_on_broken(x):
+        def step(carry, _):
+            _ = wire_bytes + 64.0  # "update" that never re-enters the scan
+            return carry + 1.0, None
+        return lax.scan(step, x, None, length=4)[0]
+
+    off = jax.make_jaxpr(run_off)(jnp.float32(0.0))
+    on = jax.make_jaxpr(run_on_broken)(jnp.float32(0.0))
+    return passes.telemetry_carry(off, on,
+                                  where="selftest:constant-counter")
+
+
 _AST_VIOLATIONS = {
     "frozen-transform": """
         class Mutable:

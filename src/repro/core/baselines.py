@@ -122,15 +122,42 @@ class BaselineResult(NamedTuple):
     history: dict
 
 
+def _telemetry_info(driver: str, prob: ConsensusProblem, graph, *,
+                    mixes_per_round: int, config: dict) -> dict:
+    """Static per-round wire model for a baseline's telemetry entry.
+
+    The baselines mix with a dense (K, K) contraction — the all-gather
+    oracle's wire: each device receives the full (K, d) replica stack per
+    mixing application, so the modeled budget is ``mixes_per_round x K x d``
+    payload bytes per device per round (DIGing mixes both the iterate and
+    the tracker). Rounds never early-stop here, so the static host product
+    is exact — no on-device counter carry is needed.
+    """
+    k, d = prob.num_nodes, prob.dim
+    itemsize = np.dtype(prob.x_parts.dtype).itemsize
+    per = mixes_per_round * k * d * itemsize
+    return {"driver": driver,
+            "graph": {"kind": getattr(graph, "name", type(graph).__name__),
+                      "num_nodes": k},
+            "config": config,
+            "bytes_per_round": per,
+            "permutes_per_round": 0,
+            "contract": f"dense all-gather x{mixes_per_round}: "
+                        f"{per:,}B/device/round"}
+
+
 def _run(prob: ConsensusProblem, round_fn: Callable, state, rounds: int,
          record_every: int, extract_w: Callable, executor: str = "block",
-         block_size: int = 64) -> BaselineResult:
+         block_size: int = 64, telemetry: dict | None = None
+         ) -> BaselineResult:
     """Drive ``round_fn`` for ``rounds`` rounds.
 
     ``executor="block"`` scans ``block_size`` rounds per device dispatch with
     on-device metric recording (see ``repro.core.executor``); "loop" is the
     retained one-dispatch-per-round reference path. ``round_fn`` must be an
-    unjitted pure ``carry -> carry`` body.
+    unjitted pure ``carry -> carry`` body. ``telemetry`` (a
+    ``_telemetry_info`` dict) surfaces the run's wire counters in
+    ``history["telemetry"]`` and emits a ``repro.obs`` RunReport.
     """
     def obj_fn(ws):
         return prob.objective(jnp.mean(ws, axis=0))
@@ -148,15 +175,41 @@ def _run(prob: ConsensusProblem, round_fn: Callable, state, rounds: int,
             return round_fn(carry), None
 
         rec = exec_engine.record_flags(rounds, record_every)
-        res = exec_engine.run_round_blocks(
-            step_fn, state, {}, recorder=recorder, record_mask=rec,
-            block_size=block_size, num_rounds=rounds)
-        return BaselineResult(w_stack=extract_w(res.state),
-                              history=metrics_lib.history_from(recorder, res))
+        run_tr = None
+        if telemetry is not None:
+            from repro.obs import trace as obs_trace
+            with obs_trace.use(obs_trace.Tracer()) as run_tr, \
+                    run_tr.attach():
+                res = exec_engine.run_round_blocks(
+                    step_fn, state, {}, recorder=recorder, record_mask=rec,
+                    block_size=block_size, num_rounds=rounds)
+        else:
+            res = exec_engine.run_round_blocks(
+                step_fn, state, {}, recorder=recorder, record_mask=rec,
+                block_size=block_size, num_rounds=rounds)
+        history = metrics_lib.history_from(recorder, res)
+        if telemetry is not None:
+            from repro.obs import report as obs_report
+            history["telemetry"] = {
+                "rounds": rounds,
+                "wire_bytes": rounds * telemetry["bytes_per_round"],
+                "permutes": rounds * telemetry["permutes_per_round"],
+                "contract": telemetry["contract"],
+                "stop_round": res.stop_round}
+            obs_report.auto_emit(obs_report.make_report(
+                driver=telemetry["driver"],
+                problem_fp=exec_engine.fingerprint(prob),
+                config=telemetry["config"], graph=telemetry["graph"],
+                rounds=rounds, history=history,
+                contract=telemetry["contract"],
+                spans=run_tr.summary()))
+        return BaselineResult(w_stack=extract_w(res.state), history=history)
 
     if executor != "loop":
         raise ValueError(f"unknown executor {executor!r} "
                          "(want 'block' or 'loop')")
+    if telemetry is not None:
+        raise ValueError("telemetry requires executor='block'")
     history: dict = {"round": [], "objective": [], "consensus": [],
                      "stop_round": None}
     step = jax.jit(round_fn)
@@ -179,10 +232,15 @@ def run_dgd(prob: ConsensusProblem, graph: topo.Topology, *, step: float,
             rounds: int, record_every: int = 1, diminishing: bool = False,
             robust: str | None = None, robust_trim: int = 1,
             robust_clip: float | None = None,
-            executor: str = "block", block_size: int = 64) -> BaselineResult:
+            executor: str = "block", block_size: int = 64,
+            telemetry: bool = False) -> BaselineResult:
     w_mix = jnp.asarray(topo.metropolis_weights(graph), dtype=prob.x_parts.dtype)
     k, d = prob.num_nodes, prob.dim
     mix = _baseline_mixer(w_mix, robust, robust_trim, robust_clip)
+    tel = _telemetry_info(
+        "dgd", prob, graph, mixes_per_round=1,
+        config={"step": step, "diminishing": diminishing, "robust": robust,
+                "rounds": rounds}) if telemetry else None
 
     def one_round(carry):
         ws, t = carry
@@ -194,7 +252,7 @@ def run_dgd(prob: ConsensusProblem, graph: topo.Topology, *, step: float,
 
     state = (jnp.zeros((k, d), dtype=prob.x_parts.dtype), jnp.asarray(0.0))
     return _run(prob, one_round, state, rounds, record_every, lambda s: s[0],
-                executor, block_size)
+                executor, block_size, tel)
 
 
 # ---------------------------------------------------------------------------
@@ -205,7 +263,8 @@ def run_diging(prob: ConsensusProblem, graph: topo.Topology, *, step: float,
                rounds: int, record_every: int = 1,
                robust: str | None = None, robust_trim: int = 1,
                robust_clip: float | None = None, executor: str = "block",
-               block_size: int = 64) -> BaselineResult:
+               block_size: int = 64, telemetry: bool = False
+               ) -> BaselineResult:
     w_mix = jnp.asarray(topo.metropolis_weights(graph), dtype=prob.x_parts.dtype)
     k, d = prob.num_nodes, prob.dim
     # both contractions (the iterate mix and the tracker mix) go through the
@@ -229,8 +288,12 @@ def run_diging(prob: ConsensusProblem, graph: topo.Topology, *, step: float,
     # g0 appears twice in the carry; copy so state donation sees distinct
     # buffers (donating the same buffer twice is an error)
     state = (ws0, g0, jnp.array(g0))
+    tel = _telemetry_info(
+        "diging", prob, graph, mixes_per_round=2,
+        config={"step": step, "robust": robust,
+                "rounds": rounds}) if telemetry else None
     return _run(prob, one_round, state, rounds, record_every, lambda s: s[0],
-                executor, block_size)
+                executor, block_size, tel)
 
 
 # ---------------------------------------------------------------------------
@@ -240,7 +303,8 @@ def run_diging(prob: ConsensusProblem, graph: topo.Topology, *, step: float,
 def run_dadmm(prob: ConsensusProblem, graph: topo.Topology, *, rho: float,
               rounds: int, inner_steps: int = 10, inner_lr: float | None = None,
               record_every: int = 1, executor: str = "block",
-              block_size: int = 64) -> BaselineResult:
+              block_size: int = 64, telemetry: bool = False
+              ) -> BaselineResult:
     """Consensus ADMM [Shi et al. 2014]:
 
       x_k^{t+1} = argmin F_k(x) + <a_k^t, x> + rho * d_k ||x - m_k^t||^2
@@ -274,5 +338,10 @@ def run_dadmm(prob: ConsensusProblem, graph: topo.Topology, *, rho: float,
 
     xs0 = jnp.zeros((k, d), dtype=prob.x_parts.dtype)
     state = (xs0, jnp.zeros_like(xs0))
+    # two neighbor-sum contractions per round (the x and dual updates)
+    tel = _telemetry_info(
+        "dadmm", prob, graph, mixes_per_round=2,
+        config={"rho": rho, "inner_steps": inner_steps,
+                "rounds": rounds}) if telemetry else None
     return _run(prob, one_round, state, rounds, record_every, lambda s: s[0],
-                executor, block_size)
+                executor, block_size, tel)

@@ -29,6 +29,7 @@ The local CD solve picks between the residual and Gram-cached formulations
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from functools import partial
 from typing import Any, Callable, NamedTuple
@@ -85,6 +86,12 @@ class ColaConfig:
     #   round body BEFORE the local CD solve — bitwise identical to the
     #   unpipelined schedule, structured so a Pallas async-remote-DMA
     #   backend can overlap the transfer with the solve.
+    telemetry: bool = False         # carry repro.obs.Counters through the
+    #   round scan (block executor only): per-round wire bytes/ppermutes,
+    #   quant saturation + EF norm, robust-gate rejection counts. Totals
+    #   land in history["telemetry"] and a RunReport is appended to the
+    #   .repro_runs registry. Off: the program is bitwise the untelemetered
+    #   one (the counters field stays None and traces away).
 
     def resolved_sigma(self, k: int) -> float:
         return self.gamma * k if self.sigma_prime is None else self.sigma_prime
@@ -109,6 +116,9 @@ class ColaState(NamedTuple):
     # pre-encoded (payload, scale) for the NEXT round's step-0 gossip when
     # cfg.pipeline — the double buffer the round body's ppermutes consume
     buf: Any = None
+    # repro.obs.Counters telemetry accumulators when cfg.telemetry (None
+    # otherwise — the pytree, and every untelemetered program, unchanged)
+    counters: Any = None
 
 
 class ColaEnv(NamedTuple):
@@ -226,7 +236,34 @@ def _round_body(problem: Problem, part: Partition, cfg: ColaConfig, *,
         # honest (a two-faced attacker — the stealthiest case for the
         # certificate layer to catch). v_self=None flags the honest fast
         # path, which is then bitwise the unattacked program.
-        if quantized:
+        if quantized and (cfg.robust is not None or atk):
+            # quantized wire composed with attacks and/or a robust defense
+            # (simulator only — _check_wire_config scopes it to the dense
+            # path, gossip_steps=1, no pipeline): the lie transforms the
+            # fp32 value and is then ENCODED, so only codec payloads ever
+            # cross the narrow wire; each node's own slot (and its EF
+            # residual) tracks the codec view of its HONEST value, making
+            # honest nodes' draws — and a clean defended run — bitwise the
+            # undefended quantized program's.
+            key0 = None if qkey is None else quant.step_key(qkey, 0)
+            _, _, deq_self, ef_new = quant.encode(state.v_stack, cfg.wire,
+                                                  key0, None, state.ef)
+            v_send = _apply_payload_attack(state.v_stack, atk)
+            if v_send is state.v_stack:
+                deq_send, self_stack = deq_self, None
+            else:
+                p_atk = v_send if state.ef is None else v_send + state.ef
+                qa, sa = quant.quantize_rows(p_atk, cfg.wire, key0)
+                deq_send, self_stack = quant.dequantize(qa, sa), deq_self
+            if cfg.robust is not None:
+                v_half = mixing.robust_mix_steps(
+                    w, deq_send, cfg.robust, trim=cfg.robust_trim,
+                    clip=cfg.robust_clip, steps=cfg.gossip_steps,
+                    self_stack=self_stack)
+            else:
+                v_half = mixing.mix_power_wire(w, deq_send, self_stack,
+                                               cfg.gossip_steps)
+        elif quantized:
             # quantized wire: EF-compensated codec view of every payload;
             # when pipelining, state.buf holds the step-0 payload encoded
             # at the end of the previous round — the first ppermutes issue
@@ -395,12 +432,16 @@ def run_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
                 "attacks= requires executor='block' — attack scenarios are "
                 "schedule transforms over the pre-materialized (T, ...) "
                 "schedules the loop driver does not build")
+        if cfg.telemetry:
+            raise ValueError(
+                "cfg.telemetry requires executor='block' — the obs "
+                "counters ride the round-block scan carry")
         return _run_cola_loop(*args)
     raise ValueError(f"unknown executor {executor!r} (want 'block' or 'loop')")
 
 
 def _check_wire_config(cfg: ColaConfig, *, attacks=None,
-                       leave_mode: str = "freeze") -> None:
+                       leave_mode: str = "freeze", dist: bool = False) -> None:
     """Reject config corners the quantized wire deliberately does not
     support yet (scope control: each would silently change what crosses
     the wire, so failing loudly beats a wrong byte budget)."""
@@ -410,14 +451,27 @@ def _check_wire_config(cfg: ColaConfig, *, attacks=None,
                 "cfg.pipeline requires a quantized wire — the fp32 payload "
                 "has no encode step to hoist (set wire='int8'/'fp8')")
         return
-    if attacks is not None:
+    composed = attacks is not None or cfg.robust is not None
+    if dist and attacks is not None:
         raise NotImplementedError(
-            "attacks= with a quantized wire: the attack schedule transforms "
-            "fp32 payloads, which would leak onto the narrow wire")
-    if cfg.robust is not None:
+            "attacks= with a quantized wire on the distributed runtime: "
+            "the shard_map qmix lowerings have no attacked-encode path yet "
+            "(the simulator supports this composition)")
+    if dist and cfg.robust is not None:
         raise NotImplementedError(
-            "cfg.robust with a quantized wire: the robust aggregators "
-            "consume raw neighbor stacks, not codec payloads")
+            "cfg.robust with a quantized wire on the distributed runtime: "
+            "the block qmix lowering has no robust aggregation path yet "
+            "(the simulator supports this composition)")
+    if composed and cfg.pipeline:
+        raise NotImplementedError(
+            "cfg.pipeline with attacks=/cfg.robust on a quantized wire: "
+            "the double-buffered payload is encoded a round early, before "
+            "the attack transform / gate decision for its round exists")
+    if composed and cfg.gossip_steps != 1:
+        raise NotImplementedError(
+            "attacks=/cfg.robust on a quantized wire require "
+            "gossip_steps=1: steps 2..B would have to re-encode mixed "
+            "values, which the composed path does not model yet")
     if cfg.grad_mode == "mixed":
         raise NotImplementedError(
             "grad_mode='mixed' with a quantized wire: the gradient exchange "
@@ -644,6 +698,14 @@ def _run_cola_block(problem, part, env, state, graph, cfg, rounds,
         if cfg.pipeline:
             sched["qkey_next"] = keys[1:]
         state = _arm_wire_state(state, cfg, keys[0])
+    obs_upd = obs_inc = None
+    if cfg.telemetry:
+        from repro.obs import counters as obs_counters
+        obs_inc = obs_counters.round_increments(graph, problem.d, cfg,
+                                                dtype.itemsize)
+        obs_upd = obs_counters.make_update(cfg, part.num_nodes, obs_inc)
+        state = state._replace(
+            counters=obs_counters.init_counters(part.num_nodes))
     body = _round_body(problem, part, cfg)
 
     def step_fn(st, env_ctx, s_t):
@@ -655,15 +717,25 @@ def _run_cola_block(problem, part, env, state, graph, cfg, rounds,
                 lambda ss: _reset_leavers(ss, env_ctx, part, s_t["leavers"]),
                 lambda ss: ss, st)
         atk = {n: s_t["atk_" + n] for n in atk_names} or None
-        aux = None
+        tap = None
         if tap_idx is not None:
             # what the tapped nodes emit THIS round (post-reset state, same
             # wire transform the mix consumes — XLA shares the computation)
-            aux = _apply_payload_attack(st.v_stack, atk)[tap_idx]
+            tap = _apply_payload_attack(st.v_stack, atk)[tap_idx]
+        st_pre = st
         st = body(st, env_ctx, s_t["w"], s_t["active"],
                   s_t["budgets"] if has_budget else None, atk,
                   s_t["qkey"] if quantized else None,
                   s_t["qkey_next"] if quantized and cfg.pipeline else None)
+        if obs_upd is None:
+            return st, tap
+        # the round body rebuilds the state pytree, so reattach the
+        # updated counters — they stay leaves of the scan carry
+        cts, obs_row = obs_upd(st_pre, st, s_t, atk, s_t["w"])
+        st = st._replace(counters=cts)
+        aux = {"obs": obs_row}
+        if tap is not None:
+            aux["taps"] = tap
         return st, aux
 
     cad = metrics_lib.as_cadence(record_every)
@@ -679,16 +751,43 @@ def _run_cola_block(problem, part, env, state, graph, cfg, rounds,
         sched.update(metrics_lib.certificate_schedule(
             recorder, sched["w"], sched["active"],
             np.ones((rounds,), dtype=bool) if cad else rec))
-    res = exec_engine.run_round_blocks(
-        step_fn, state, sched, context=env, recorder=recorder,
-        record_mask=rec, block_size=block_size, cadence=cad,
-        num_rounds=rounds,
-        cache_key=("cola-block", exec_engine.fingerprint(problem), part, cfg,
-                   has_budget, has_reset, recorder.cache_token(),
-                   atk_info.token if atk_info else None))
-    return RunResult(state=res.state,
-                     history=metrics_lib.history_from(recorder, res),
-                     taps=res.aux if tap_nodes else None)
+    with contextlib.ExitStack() as stack:
+        run_tr = None
+        if cfg.telemetry:
+            # scope a fresh tracer (+ its cache listener) to this run so the
+            # report's span timings cover exactly these block dispatches
+            from repro.obs import trace as obs_trace
+            run_tr = stack.enter_context(obs_trace.use(obs_trace.Tracer()))
+            stack.enter_context(run_tr.attach())
+        res = exec_engine.run_round_blocks(
+            step_fn, state, sched, context=env, recorder=recorder,
+            record_mask=rec, block_size=block_size, cadence=cad,
+            num_rounds=rounds,
+            cache_key=("cola-block", exec_engine.fingerprint(problem), part,
+                       cfg, has_budget, has_reset, recorder.cache_token(),
+                       atk_info.token if atk_info else None))
+    history = metrics_lib.history_from(recorder, res)
+    taps = res.aux if tap_nodes else None
+    if cfg.telemetry:
+        from repro.obs import counters as obs_counters, report as obs_report
+        obs_series = res.aux.get("obs") if isinstance(res.aux, dict) else None
+        taps = res.aux.get("taps") if isinstance(res.aux, dict) else None
+        history["telemetry"] = obs_counters.summarize(
+            res.state.counters, obs_inc, series=obs_series,
+            stop_round=res.stop_round,
+            dishonest=sched.get("atk_dishonest"))
+        obs_report.auto_emit(obs_report.make_report(
+            driver="run_cola",
+            problem_fp=exec_engine.fingerprint(problem),
+            config=dataclasses.asdict(cfg),
+            graph={"kind": getattr(graph, "name", type(graph).__name__),
+                   "num_nodes": part.num_nodes},
+            rounds=(rounds if res.stop_round is None
+                    else res.stop_round + 1),
+            history=history,
+            contract=obs_inc["contract"],
+            spans=run_tr.summary() if run_tr is not None else None))
+    return RunResult(state=res.state, history=history, taps=taps)
 
 
 def _reset_leavers(state: ColaState, env: ColaEnv, part: Partition,
@@ -715,7 +814,8 @@ def _reset_leavers(state: ColaState, env: ColaEnv, part: Partition,
     # is rejected up front, so state.buf is always None here)
     ef_new = (None if state.ef is None
               else jnp.where(leave[:, None], 0.0, state.ef))
-    return ColaState(x_parts=x_new, v_stack=v_new, ef=ef_new, buf=state.buf)
+    return ColaState(x_parts=x_new, v_stack=v_new, ef=ef_new, buf=state.buf,
+                     counters=state.counters)
 
 
 def solve_reference(problem: Problem, rounds: int = 3000,

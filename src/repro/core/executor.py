@@ -32,6 +32,7 @@ The engine is shared by all four drivers: the CoLA simulator
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import hashlib
@@ -246,6 +247,28 @@ def _cache_event(key, kind: str) -> None:
     _CACHE_STATS[kind] += 1
     for listener in list(_CACHE_LISTENERS):
         listener(key, kind)
+
+
+@contextlib.contextmanager
+def cache_listener(fn: Callable[[Any, str], None]):
+    """Register ``fn(key, kind)`` for cache events, removably.
+
+    The one sanctioned way to observe ``cached_driver`` resolutions:
+    the listener is appended on entry and removed on exit even if the body
+    raises, so nested monitors (``analysis.RetraceMonitor``, ``obs.trace``
+    tracers) never double-count or leak a stale callback across tests. The
+    same function object may be registered by nested scopes — each exit
+    removes exactly one registration (list.remove drops the first match,
+    which is equivalent for identical callbacks).
+    """
+    _CACHE_LISTENERS.append(fn)
+    try:
+        yield fn
+    finally:
+        try:
+            _CACHE_LISTENERS.remove(fn)
+        except ValueError:  # already removed (e.g. test cleared the list)
+            pass
 
 
 def cached_driver(key, build: Callable[[], Callable]) -> Callable:
@@ -463,11 +486,24 @@ def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
 
         return run_block_stop
 
-    run_block = cached_driver(cache_key, build)
+    # phase tracing (repro.obs.trace): the active tracer records the driver
+    # build (trace time — runs only on a cache miss/bypass) and every block
+    # dispatch. The first dispatch span absorbs the XLA compile; steady
+    # blocks measure dispatch (+ the per-block stop-flag sync when early
+    # exit is armed). Lazy import: obs.trace imports this module.
+    from repro.obs import trace as obs_trace
+    tracer = obs_trace.current()
+
+    def timed_build():
+        with tracer.span("driver-build", key=cache_key is not None):
+            return build()
+
+    run_block = cached_driver(cache_key, timed_build)
 
     rows, valids, auxes = [], [], []
     start = 0
     executed = 0
+    n_dispatch = 0
     stopped_early = False
     with warnings.catch_warnings():
         if jax.default_backend() == "cpu":
@@ -481,36 +517,40 @@ def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
                  jnp.int32(cadence.base)) if has_cadence else None
         while start < t_total:
             stop = min(start + block_size, t_total)
-            sched_b = jax.tree.map(lambda x: jnp.asarray(x[start:stop]),
-                                   schedule)
-            if has_cadence:
-                t_b = jnp.arange(start, stop, dtype=jnp.int32)
-                force_b = jnp.asarray(
-                    np.arange(start, stop) == t_total - 1)
-                carry, (aux_b, rows_b, valid_b) = run_block(
-                    carry, context, sched_b, t_b, force_b)
-                state, stop_flag = carry[0], carry[1]
-                valids.append(valid_b)
-            elif has_stop:
-                (state, stop_flag), (aux_b, rows_b, valid_b) = run_block(
-                    (state, stop_flag), context, sched_b,
-                    jnp.asarray(rec_all[start:stop]))
-                valids.append(valid_b)
-            else:
-                state, (aux_b, rows_b) = run_block(
-                    state, context, sched_b,
-                    jnp.asarray(rec_all[start:stop]))
-            if rows_b is not None:
-                rows.append(rows_b)
-            if aux_b is not None and jax.tree.leaves(aux_b):
-                auxes.append(aux_b)
-            start = stop
-            executed = stop
-            # the host-side short-circuit: one scalar sync per block, only
-            # when early exit is armed
-            if has_stop and bool(stop_flag):
-                stopped_early = True
-                break
+            span_name = ("block-first-dispatch" if n_dispatch == 0
+                         else "block-dispatch")
+            n_dispatch += 1
+            with tracer.span(span_name, start=start, rounds=stop - start):
+                sched_b = jax.tree.map(lambda x: jnp.asarray(x[start:stop]),
+                                       schedule)
+                if has_cadence:
+                    t_b = jnp.arange(start, stop, dtype=jnp.int32)
+                    force_b = jnp.asarray(
+                        np.arange(start, stop) == t_total - 1)
+                    carry, (aux_b, rows_b, valid_b) = run_block(
+                        carry, context, sched_b, t_b, force_b)
+                    state, stop_flag = carry[0], carry[1]
+                    valids.append(valid_b)
+                elif has_stop:
+                    (state, stop_flag), (aux_b, rows_b, valid_b) = run_block(
+                        (state, stop_flag), context, sched_b,
+                        jnp.asarray(rec_all[start:stop]))
+                    valids.append(valid_b)
+                else:
+                    state, (aux_b, rows_b) = run_block(
+                        state, context, sched_b,
+                        jnp.asarray(rec_all[start:stop]))
+                if rows_b is not None:
+                    rows.append(rows_b)
+                if aux_b is not None and jax.tree.leaves(aux_b):
+                    auxes.append(aux_b)
+                start = stop
+                executed = stop
+                # the host-side short-circuit: one scalar sync per block,
+                # only when early exit is armed
+                if has_stop and bool(stop_flag):
+                    stopped_early = True
+                    break
 
     metrics = rounds = None
     stop_round = None

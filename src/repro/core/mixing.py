@@ -255,6 +255,164 @@ def _masked_trimmed_mean(vals, mask, b_counts, counts):
     return kept / denom[:, None]
 
 
+def _neighborhood_setup(w_rows, buf, row_ids, self_override):
+    """Shared masking/value setup of the robust aggregation and its gate.
+
+    Returns ``(flat, w_rows, self_hot, mask, counts, self_vals, vals)`` —
+    exactly the quantities ``robust_neighborhood_mix`` computes before
+    branching on the mode, factored out so :func:`gate_flags` sees the SAME
+    operations (XLA CSEs the two when both are traced into one program,
+    which is what makes the telemetry gate counter free on defended runs).
+    """
+    k = buf.shape[0]
+    flat = buf.reshape(k, -1)
+    w_rows = jnp.asarray(w_rows, dtype=flat.dtype)
+    row_ids = jnp.asarray(row_ids)
+    r = row_ids.shape[0]
+    self_hot = jnp.arange(k)[None, :] == row_ids[:, None]        # (R, K)
+    mask = (w_rows != 0) | self_hot
+    counts = jnp.sum(mask.astype(jnp.int32), axis=1)             # (R,)
+
+    self_vals = (flat[row_ids] if self_override is None
+                 else self_override.reshape(r, -1).astype(flat.dtype))
+    vals = jnp.broadcast_to(flat[None, :, :], (r, k, flat.shape[1]))
+    if self_override is not None:
+        # wire-only attacks: the receiver's own slot carries its honest
+        # state, not the payload it emitted to everyone else
+        vals = jnp.where(self_hot[:, :, None], self_vals[:, None, :], vals)
+    return flat, w_rows, self_hot, mask, counts, self_vals, vals
+
+
+def _gate_center_flags(vals, mask, self_hot, counts, trim):
+    """Robust center + per-neighbor outlier gate for trim/median modes.
+
+    Returns ``(center, flagged)``: the coordinate-median neighborhood
+    center (R, d) and the (R, K) flag mask (True = this receiver rejects
+    that sender's edge this step; self slots never flag).
+    """
+    r, k, dflat = vals.shape
+    # coordinate-wise neighborhood order statistics: masked-out slots
+    # sort past every real value (sentinel), so positions 0..counts-1
+    # are exactly the neighborhood — identical in sim (true values at
+    # never-exchanged slots) and block (zeros there) buffers, which is
+    # what keeps the two paths bitwise equal
+    big = jnp.asarray(jnp.finfo(vals.dtype).max, vals.dtype)
+    guarded = jnp.where(mask[:, :, None], vals, big)
+    target = (counts - 1) // 2
+    if k <= 32:
+        # rank selection: the (counts-1)//2-th order statistic via an
+        # O(K^2) comparison count instead of a sort — XLA's CPU sort
+        # custom-call costs ~4x more than these fused elementwise
+        # reductions at gossip-neighborhood sizes, and the robust mix
+        # runs every round of every defended run. Index tie-breaking
+        # gives each slot a unique rank, and tied slots carry equal
+        # values, so the selected VALUE is bitwise the sorted one's.
+        lt = guarded[:, :, None, :] < guarded[:, None, :, :]
+        eq = guarded[:, :, None, :] == guarded[:, None, :, :]
+        ilt = (jnp.arange(k)[:, None]
+               < jnp.arange(k)[None, :])[None, :, :, None]
+        rank = jnp.sum(lt | (eq & ilt), axis=1)              # (R, K, d)
+        sel = rank == target[:, None, None]
+        center = jnp.sum(jnp.where(sel, guarded, 0.0), axis=1)
+    else:
+        # large neighborhoods: the (R, K^2, d) comparison tensor stops
+        # paying for itself — fall back to the sort
+        srt = jnp.sort(guarded, axis=1)
+        center = jnp.take_along_axis(
+            srt, jnp.broadcast_to(target[:, None, None],
+                                  (r, 1, dflat)), axis=1)[:, 0]
+    # per-NEIGHBOR outlier gate on whole-vector geometry (see the
+    # robust_neighborhood_mix docstring): anti-correlation with the robust
+    # center, or norm inflation vs the (trim+1)-th largest neighbor norm —
+    # a reference that `trim` colluding inflated payloads cannot raise.
+    # Neither statistic fires on honest payloads, so the unflagged path is
+    # the linear mix bit-for-bit.
+    norms = jnp.sqrt(jnp.sum(vals * vals, axis=-1))          # (R, K)
+    cnorm = jnp.sqrt(jnp.sum(center * center, axis=-1))      # (R,)
+    dots = jnp.einsum("rkd,rd->rk", vals, center)
+    cos = dots / (norms * cnorm[:, None] + 1e-30)
+    nb_mask = mask & ~self_hot
+    m_nb = jnp.sum(nb_mask.astype(jnp.int32), axis=1)
+    nb_norms = jnp.where(nb_mask, norms, -jnp.inf)
+    depth = jnp.minimum(trim, jnp.maximum(m_nb - 1, 0))      # (R,)
+    # the (k-1-depth)-th order statistic by rank selection (same
+    # sort-free trick as the center, one comparison matrix per row)
+    n_lt = nb_norms[:, :, None] < nb_norms[:, None, :]
+    n_eq = nb_norms[:, :, None] == nb_norms[:, None, :]
+    n_ilt = (jnp.arange(k)[:, None] < jnp.arange(k)[None, :])[None]
+    n_rank = jnp.sum(n_lt | (n_eq & n_ilt), axis=1)          # (R, K)
+    n_sel = n_rank == (k - 1 - depth)[:, None]
+    ref = jnp.sum(jnp.where(n_sel, nb_norms, 0.0), axis=1,
+                  keepdims=True)
+    ref = jnp.where(jnp.isfinite(ref), ref, 0.0)             # (R, 1)
+    # the norm gate needs a positive reference (in early sparse rounds a
+    # row may see <= trim+1 active neighbors and "3 x 0" would flag the
+    # lone honest one) AND a non-aligned payload against a nonzero
+    # center (see _TRIM_NORM_ARM_COS) — either false drop would
+    # permanently drift the cohort's Lemma-1 invariant
+    norm_armed = (ref > 0) & (cnorm[:, None] > 0) \
+        & (cos < _TRIM_NORM_ARM_COS)
+    flagged = (cos < _TRIM_COS_GATE) | \
+              ((norms > _TRIM_NORM_GATE * ref) & norm_armed)  # (R, K)
+    flagged = flagged & nb_mask
+    return center, flagged
+
+
+def _clip_scale(vals, mask, self_hot, self_vals, row_ids, clip, dtype):
+    """Per-neighbor deviation clipping factors for mode="clip".
+
+    Returns ``(dev, scale, nb_mask)``: the (R, K, d) deviations from self,
+    the (R, K) clip factors (``< 1`` exactly where a deviation was actually
+    clipped) and the non-self neighborhood mask.
+    """
+    dev = vals - self_vals[:, None, :]                           # (R, K, d)
+    norms = jnp.sqrt(jnp.sum(dev * dev, axis=-1))                # (R, K)
+    nb_mask = mask & ~self_hot
+    if clip is not None:
+        tau = jnp.full(row_ids.shape, clip, dtype)
+    else:
+        # adaptive threshold: a multiple of the median NEIGHBOR (non-self)
+        # deviation norm — same masked-sort machinery on the (R, K) norm
+        # rows. The factor leaves typical honest neighbors UNclipped (the
+        # aggregation stays exactly linear near consensus, so the Lemma-1
+        # invariant drift stops) while a sign-flip payload's ~2||v||
+        # deviation still lands far outside it
+        m_nb = jnp.sum(nb_mask.astype(jnp.int32), axis=1)
+        tau = _masked_trimmed_mean(norms[:, :, None], nb_mask,
+                                   (jnp.maximum(m_nb, 1) - 1) // 2,
+                                   jnp.maximum(m_nb, 1))[:, 0]
+        tau = jnp.where(m_nb > 0, _CLIP_TAU_FACTOR * tau, 0.0)
+    scale = jnp.minimum(1.0, tau[:, None] / (norms + 1e-30))     # (R, K)
+    return dev, scale, nb_mask
+
+
+def gate_flags(w_rows: jax.Array, buf: jax.Array, row_ids: jax.Array,
+               mode: str, *, trim: int = 1, clip: float | None = None,
+               self_override: jax.Array | None = None) -> jax.Array:
+    """The (R, K) per-edge rejection mask the robust aggregation applies.
+
+    Same arguments and setup as :func:`robust_neighborhood_mix`; returns
+    only the boolean gate decision — True where receiver row r rejects
+    sender column k's edge this step (trim/median: the outlier gate fired;
+    clip: the deviation was actually clipped). Self slots are never
+    flagged. Because every operation mirrors the mix exactly (shared
+    helpers), tracing this next to the mix in one jitted program costs
+    nothing: XLA CSEs the duplicate subexpressions. This is what the
+    ``repro.obs`` telemetry counters sum per sender.
+    """
+    if mode not in ROBUST_MODES:
+        raise ValueError(f"unknown robust mode {mode!r} "
+                         f"(want one of {ROBUST_MODES})")
+    flat, w_rows, self_hot, mask, counts, self_vals, vals = \
+        _neighborhood_setup(w_rows, buf, row_ids, self_override)
+    if mode in ("trim", "median"):
+        _, flagged = _gate_center_flags(vals, mask, self_hot, counts, trim)
+        return flagged
+    _, scale, nb_mask = _clip_scale(vals, mask, self_hot, self_vals,
+                                    jnp.asarray(row_ids), clip, flat.dtype)
+    return (scale < 1.0) & nb_mask
+
+
 def robust_neighborhood_mix(w_rows: jax.Array, buf: jax.Array,
                             row_ids: jax.Array, mode: str, *,
                             trim: int = 1,
@@ -331,91 +489,17 @@ def robust_neighborhood_mix(w_rows: jax.Array, buf: jax.Array,
     if mode not in ROBUST_MODES:
         raise ValueError(f"unknown robust mode {mode!r} "
                          f"(want one of {ROBUST_MODES})")
-    k = buf.shape[0]
-    flat = buf.reshape(k, -1)
-    w_rows = jnp.asarray(w_rows, dtype=flat.dtype)
-    row_ids = jnp.asarray(row_ids)
-    r = row_ids.shape[0]
-    self_hot = jnp.arange(k)[None, :] == row_ids[:, None]        # (R, K)
-    mask = (w_rows != 0) | self_hot
-    counts = jnp.sum(mask.astype(jnp.int32), axis=1)             # (R,)
-
-    self_vals = (flat[row_ids] if self_override is None
-                 else self_override.reshape(r, -1).astype(flat.dtype))
-    vals = jnp.broadcast_to(flat[None, :, :], (r, k, flat.shape[1]))
-    if self_override is not None:
-        # wire-only attacks: the receiver's own slot carries its honest
-        # state, not the payload it emitted to everyone else
-        vals = jnp.where(self_hot[:, :, None], self_vals[:, None, :], vals)
+    flat, w_rows, self_hot, mask, counts, self_vals, vals = \
+        _neighborhood_setup(w_rows, buf, row_ids, self_override)
+    r = vals.shape[0]
 
     if mode in ("trim", "median"):
-        # coordinate-wise neighborhood order statistics: masked-out slots
-        # sort past every real value (sentinel), so positions 0..counts-1
-        # are exactly the neighborhood — identical in sim (true values at
-        # never-exchanged slots) and block (zeros there) buffers, which is
-        # what keeps the two paths bitwise equal
-        big = jnp.asarray(jnp.finfo(flat.dtype).max, flat.dtype)
-        guarded = jnp.where(mask[:, :, None], vals, big)
-        target = (counts - 1) // 2
-        if k <= 32:
-            # rank selection: the (counts-1)//2-th order statistic via an
-            # O(K^2) comparison count instead of a sort — XLA's CPU sort
-            # custom-call costs ~4x more than these fused elementwise
-            # reductions at gossip-neighborhood sizes, and the robust mix
-            # runs every round of every defended run. Index tie-breaking
-            # gives each slot a unique rank, and tied slots carry equal
-            # values, so the selected VALUE is bitwise the sorted one's.
-            lt = guarded[:, :, None, :] < guarded[:, None, :, :]
-            eq = guarded[:, :, None, :] == guarded[:, None, :, :]
-            ilt = (jnp.arange(k)[:, None]
-                   < jnp.arange(k)[None, :])[None, :, :, None]
-            rank = jnp.sum(lt | (eq & ilt), axis=1)              # (R, K, d)
-            sel = rank == target[:, None, None]
-            center = jnp.sum(jnp.where(sel, guarded, 0.0), axis=1)
-        else:
-            # large neighborhoods: the (R, K^2, d) comparison tensor stops
-            # paying for itself — fall back to the sort
-            srt = jnp.sort(guarded, axis=1)
-            center = jnp.take_along_axis(
-                srt, jnp.broadcast_to(target[:, None, None],
-                                      (r, 1, flat.shape[1])), axis=1)[:, 0]
-        # per-NEIGHBOR outlier gate on whole-vector geometry (see above):
-        # anti-correlation with the robust center, or norm inflation vs
-        # the (trim+1)-th largest neighbor norm — a reference that `trim`
-        # colluding inflated payloads cannot raise. Neither statistic
-        # fires on honest payloads, so the unflagged path is the linear
-        # mix bit-for-bit.
-        norms = jnp.sqrt(jnp.sum(vals * vals, axis=-1))          # (R, K)
-        cnorm = jnp.sqrt(jnp.sum(center * center, axis=-1))      # (R,)
-        dots = jnp.einsum("rkd,rd->rk", vals, center)
-        cos = dots / (norms * cnorm[:, None] + 1e-30)
-        nb_mask = mask & ~self_hot
-        m_nb = jnp.sum(nb_mask.astype(jnp.int32), axis=1)
-        nb_norms = jnp.where(nb_mask, norms, -jnp.inf)
-        depth = jnp.minimum(trim, jnp.maximum(m_nb - 1, 0))      # (R,)
-        # the (k-1-depth)-th order statistic by rank selection (same
-        # sort-free trick as the center, one comparison matrix per row)
-        n_lt = nb_norms[:, :, None] < nb_norms[:, None, :]
-        n_eq = nb_norms[:, :, None] == nb_norms[:, None, :]
-        n_ilt = (jnp.arange(k)[:, None] < jnp.arange(k)[None, :])[None]
-        n_rank = jnp.sum(n_lt | (n_eq & n_ilt), axis=1)          # (R, K)
-        n_sel = n_rank == (k - 1 - depth)[:, None]
-        ref = jnp.sum(jnp.where(n_sel, nb_norms, 0.0), axis=1,
-                      keepdims=True)
-        ref = jnp.where(jnp.isfinite(ref), ref, 0.0)             # (R, 1)
-        # the norm gate needs a positive reference (in early sparse rounds a
-        # row may see <= trim+1 active neighbors and "3 x 0" would flag the
-        # lone honest one) AND a non-aligned payload against a nonzero
-        # center (see _TRIM_NORM_ARM_COS) — either false drop would
-        # permanently drift the cohort's Lemma-1 invariant
-        norm_armed = (ref > 0) & (cnorm[:, None] > 0) \
-            & (cos < _TRIM_NORM_ARM_COS)
-        flagged = (cos < _TRIM_COS_GATE) | \
-                  ((norms > _TRIM_NORM_GATE * ref) & norm_armed)  # (R, K)
-        flagged = flagged & nb_mask
-        # NOTE: ``vals`` already carries the self_override substitution (top
-        # of the function) and ``flagged`` already excludes the self slot
-        # (& nb_mask), so neither branch needs a second self-slot where()
+        center, flagged = _gate_center_flags(vals, mask, self_hot, counts,
+                                             trim)
+        # NOTE: ``vals`` already carries the self_override substitution
+        # (_neighborhood_setup) and ``flagged`` already excludes the self
+        # slot (& nb_mask), so neither branch needs a second self-slot
+        # where()
         if mode == "median":
             # flagged payloads are replaced outright by the robust center
             clamped = jnp.where(flagged[:, :, None],
@@ -435,28 +519,12 @@ def robust_neighborhood_mix(w_rows: jax.Array, buf: jax.Array,
         return out.reshape((r,) + buf.shape[1:])
 
     # mode == "clip": norm-clip each neighbor's deviation from self
-    dev = vals - self_vals[:, None, :]                           # (R, K, d)
-    norms = jnp.sqrt(jnp.sum(dev * dev, axis=-1))                # (R, K)
-    if clip is not None:
-        tau = jnp.full(row_ids.shape, clip, flat.dtype)
-    else:
-        # adaptive threshold: a multiple of the median NEIGHBOR (non-self)
-        # deviation norm — same masked-sort machinery on the (R, K) norm
-        # rows. The factor leaves typical honest neighbors UNclipped (the
-        # aggregation stays exactly linear near consensus, so the Lemma-1
-        # invariant drift stops) while a sign-flip payload's ~2||v||
-        # deviation still lands far outside it
-        nb_mask = mask & ~self_hot
-        m_nb = jnp.sum(nb_mask.astype(jnp.int32), axis=1)
-        tau = _masked_trimmed_mean(norms[:, :, None], nb_mask,
-                                   (jnp.maximum(m_nb, 1) - 1) // 2,
-                                   jnp.maximum(m_nb, 1))[:, 0]
-        tau = jnp.where(m_nb > 0, _CLIP_TAU_FACTOR * tau, 0.0)
-    scale = jnp.minimum(1.0, tau[:, None] / (norms + 1e-30))     # (R, K)
+    dev, scale, _ = _clip_scale(vals, mask, self_hot, self_vals,
+                                jnp.asarray(row_ids), clip, flat.dtype)
     clipped = self_vals[:, None, :] + dev * scale[:, :, None]
     clipped = jnp.where(mask[:, :, None], clipped, 0.0)
     out = jnp.einsum("rk,rkd->rd", w_rows, clipped)
-    return out.reshape((row_ids.shape[0],) + buf.shape[1:])
+    return out.reshape((r,) + buf.shape[1:])
 
 
 def robust_mix_dense(w: jax.Array, v_stack: jax.Array, mode: str, *,

@@ -187,6 +187,19 @@ def dequantize(q, scale):
     return q.astype(jnp.float32) * scale
 
 
+def saturation_frac(q, wire: str):
+    """Fraction of payload elements pinned at the wire grid's extreme
+    (|q| == qmax) — the on-device saturation signal ``repro.obs`` counters
+    accumulate. A persistently high fraction means the absmax scale is
+    dominated by outlier coordinates and most of the grid is unused."""
+    w = canonical_wire(wire)
+    if w == "fp32":
+        return jnp.float32(0.0)
+    qmax = jnp.float32(wire_qmax(w))
+    at_max = jnp.abs(q.astype(jnp.float32)) >= qmax
+    return jnp.mean(at_max.astype(jnp.float32))
+
+
 def node_keys(key, node_ids):
     """Per-node codec keys: ``fold_in(key, node_id)`` for each row.
 

@@ -52,6 +52,7 @@ remaining rounds exactly as in the simulator.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Callable
 
@@ -72,9 +73,9 @@ from repro.core.cola import (ColaConfig, RunResult,
 from repro.core.duality import consensus_residual, neighborhood_mean
 from repro.core.partition import make_partition
 from repro.core.problems import Problem
-from repro.dist.sharding import (block_payload_pspec, cola_env_pspecs,
-                                 cola_recorder_pspecs, cola_state_pspecs,
-                                 plan_payload_pspecs)
+from repro.dist.sharding import (block_payload_pspec, cola_counters_pspecs,
+                                 cola_env_pspecs, cola_recorder_pspecs,
+                                 cola_state_pspecs, plan_payload_pspecs)
 
 
 def _dist_mixers(axis: str, local_nodes: int, conn: int, comm: str,
@@ -605,7 +606,8 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
     """
     if wire is not None:
         cfg = dataclasses.replace(cfg, wire=wire)
-    _check_wire_config(cfg, attacks=attacks, leave_mode=leave_mode)
+    _check_wire_config(cfg, attacks=attacks, leave_mode=leave_mode,
+                       dist=True)
     quantized = quant.is_quantized(cfg.wire)
     axis = axis or mesh.axis_names[0]
     m = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
@@ -717,6 +719,24 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         lambda x: jax.device_put(x, NamedSharding(mesh, state_spec)), state)
     env = jax.tree.map(
         lambda x: jax.device_put(x, NamedSharding(mesh, env_spec)), env)
+    obs_upd = obs_inc = None
+    if cfg.telemetry:
+        # counters attach AFTER the state placement with their OWN specs
+        # (scalars replicate, the per-sender gate row shards): the P(axis)
+        # prefix spec above must never see them, and the shard_map round
+        # program never does either — step_fn strips the counters off the
+        # carry, runs the sharded round on the core state, then updates
+        # them from the global (before, after, schedule) triple outside
+        # shard_map, where GSPMD lays the recompute out over the mesh
+        from repro.obs import counters as obs_counters
+        obs_inc = obs_counters.dist_round_increments(
+            cfg, problem.d, comm=comm, plan=plan, conn=conn, k=k,
+            itemsize=dtype.itemsize)
+        obs_upd = obs_counters.make_update(cfg, k, obs_inc)
+        cts = jax.tree.map(
+            lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+            obs_counters.init_counters(k), cola_counters_pspecs(axis))
+        state = state._replace(counters=cts)
     rec = _place_recorder(rec, mesh, axis)
     dist_rec = _DistRecorder(
         rec, _dist_record_fn(rec, mesh, axis, local_nodes, comm, conn, plan),
@@ -786,15 +806,22 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         else:
             payload = (s_t["plan_diag"], s_t["plan_coefs"])
         atk = {n: s_t["atk_" + n] for n in atk_names}
-        st = shard_step(st, env_ctx, payload, s_t["active"],
-                        s_t["budgets"] if has_budget else s_t["_pad"],
-                        s_t["leavers"] if has_reset else s_t["_pad"],
-                        s_t["reset_any"] if has_reset else s_t["_pad"],
-                        atk,
-                        s_t["qkey"] if quantized else s_t["_pad"],
-                        (s_t["qkey_next"] if quantized and cfg.pipeline
-                         else s_t["_pad"]))
-        return st, None
+        core = st if obs_upd is None else st._replace(counters=None)
+        core = shard_step(core, env_ctx, payload, s_t["active"],
+                          s_t["budgets"] if has_budget else s_t["_pad"],
+                          s_t["leavers"] if has_reset else s_t["_pad"],
+                          s_t["reset_any"] if has_reset else s_t["_pad"],
+                          atk,
+                          s_t["qkey"] if quantized else s_t["_pad"],
+                          (s_t["qkey_next"] if quantized and cfg.pipeline
+                           else s_t["_pad"]))
+        if obs_upd is None:
+            return core, None
+        # robust gating only exists on the dense / block-plan paths, both
+        # of which carry the full (K, K) round W in the schedule slice
+        w = s_t.get("plan_w", s_t.get("w"))
+        cts, obs_row = obs_upd(st, core, s_t, atk if atk_names else None, w)
+        return core._replace(counters=cts), {"obs": obs_row}
 
     sched = dict(sched)
     sched["_pad"] = zeros_k  # scalar per-round filler for unused operands
@@ -823,13 +850,36 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
         sched.update(sched_cls.from_w_stack(
             plan, sched["w"], static=w_static).entries())
         del sched["w"]
-    res = exec_engine.run_round_blocks(
-        step_fn, state, sched, context=env, recorder=dist_rec,
-        record_mask=rec_mask, block_size=block_size, cadence=cad,
-        num_rounds=rounds,
-        cache_key=("cola-dist", exec_engine.fingerprint(problem), part, cfg,
-                   mesh, axis, comm, conn, has_budget, has_reset,
-                   dist_rec.cache_token(),
-                   atk_info.token if atk_info else None))
-    return RunResult(state=res.state,
-                     history=metrics_lib.history_from(dist_rec, res))
+    with contextlib.ExitStack() as stack:
+        run_tr = None
+        if cfg.telemetry:
+            from repro.obs import trace as obs_trace
+            run_tr = stack.enter_context(obs_trace.use(obs_trace.Tracer()))
+            stack.enter_context(run_tr.attach())
+        res = exec_engine.run_round_blocks(
+            step_fn, state, sched, context=env, recorder=dist_rec,
+            record_mask=rec_mask, block_size=block_size, cadence=cad,
+            num_rounds=rounds,
+            cache_key=("cola-dist", exec_engine.fingerprint(problem), part,
+                       cfg, mesh, axis, comm, conn, has_budget, has_reset,
+                       dist_rec.cache_token(),
+                       atk_info.token if atk_info else None))
+    history = metrics_lib.history_from(dist_rec, res)
+    if cfg.telemetry:
+        from repro.obs import counters as obs_counters, report as obs_report
+        obs_series = res.aux.get("obs") if isinstance(res.aux, dict) else None
+        history["telemetry"] = obs_counters.summarize(
+            res.state.counters, obs_inc, series=obs_series,
+            stop_round=res.stop_round, dishonest=sched.get("atk_dishonest"))
+        obs_report.auto_emit(obs_report.make_report(
+            driver="run_dist_cola",
+            problem_fp=exec_engine.fingerprint(problem),
+            config=dataclasses.asdict(cfg),
+            graph={"kind": getattr(graph, "name", type(graph).__name__),
+                   "num_nodes": k},
+            rounds=(rounds if res.stop_round is None
+                    else res.stop_round + 1),
+            history=history,
+            contract=obs_inc["contract"],
+            spans=run_tr.summary() if run_tr is not None else None))
+    return RunResult(state=res.state, history=history)

@@ -221,6 +221,21 @@ def block_payload_pspec(axis: str) -> P:
     return P(axis)
 
 
+def cola_counters_pspecs(axis: str) -> Any:
+    """Specs for the telemetry ``obs.counters.Counters`` carry
+    (``ColaState.counters`` when ``ColaConfig.telemetry=True``): the scalar
+    accumulators (round/byte/permute/saturation/EF totals) replicate — they
+    are the same number on every device by construction — and the per-sender
+    ``gate`` (K,) rejection counter shards its node axis over ``axis`` like
+    every other per-node row. Returned as a ``Counters`` of specs so
+    ``jax.tree.map`` pairs leaves one-to-one with ``init_counters``."""
+    from repro.obs.counters import Counters
+
+    rep = P()
+    return Counters(rounds=rep, wire_bytes=rep, permutes=rep,
+                    sat_sum=rep, ef_sq=rep, gate=P(axis))
+
+
 def cola_recorder_pspecs(axis: str, rec_state: Any) -> Any:
     """Specs for a recorder's per-run state (``Recorder.init_spec``): every
     array with a leading node dimension — the ``sigma_k`` spectral-norm

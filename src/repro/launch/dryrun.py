@@ -510,6 +510,11 @@ def main() -> None:
         print(cola_metrics.render_footprints(k=k_nodes, d=args.cola_d,
                                              n_k=args.cola_n // k_nodes),
               flush=True)
+        # the telemetry counter carry (ColaConfig(telemetry=True)) rides the
+        # same round scan: a handful of replicated scalars plus one
+        # node-sharded gate vector — budget it next to the recorders
+        from repro.obs import counters as obs_counters
+        print(obs_counters.render_footprint(k_nodes), flush=True)
         # compiled comm plans for arbitrary gossip topologies: color count,
         # the ppermute matchings, and per-link / per-device bytes per round
         # — the neighbor-only communication budget the topology-program

@@ -1,0 +1,3 @@
+from repro.obs.cli import main
+
+raise SystemExit(main())

@@ -228,7 +228,8 @@ def make_gossip_block_runner(local_step: Callable, gcfg: GossipConfig, *,
                              mesh=None, axis: str | None = None,
                              conn: int | None = None,
                              recorder=None,
-                             dp: privacy.DPConfig | None = None) -> Callable:
+                             dp: privacy.DPConfig | None = None,
+                             telemetry: bool = False) -> Callable:
     """Round-block gossip-DP: many local-step+mix rounds per device dispatch.
 
     The per-round ``make_gossip_step`` path dispatches one jitted program per
@@ -267,6 +268,9 @@ def make_gossip_block_runner(local_step: Callable, gcfg: GossipConfig, *,
     """
     mix_params = _param_mixer(gcfg, mesh, axis, conn, dp)
     base_key = None if dp is None else jax.random.PRNGKey(dp.seed)
+    if telemetry and recorder is None:
+        raise ValueError("telemetry=True needs a recorder (the history "
+                         "carries the counters and the dp_epsilon series)")
 
     def step_fn(states, _ctx, sched_t):
         new_states, metrics = jax.vmap(local_step)(states, sched_t["batch"])
@@ -290,10 +294,39 @@ def make_gossip_block_runner(local_step: Callable, gcfg: GossipConfig, *,
             # per-round key index: noise draws are a function of the round,
             # not of block boundaries or early stopping
             sched["dp_round"] = np.arange(len(np.asarray(mix)))
-        res = exec_engine.run_round_blocks(step_fn, states, sched,
-                                           recorder=recorder,
-                                           record_mask=record_mask,
-                                           block_size=block_size)
+        run_tr = None
+        if telemetry:
+            # per-replica parameter payload: the gossip wire moves whole
+            # replicas, so the modeled budget is params x codec bytes per
+            # emission — K emissions per mixed round on the dense path
+            # (the all-gather oracle view), 2*conn ppermutes on the ring
+            pcount = int(sum(np.prod(leaf.shape[1:])
+                             for leaf in jax.tree.leaves(states.params)))
+            pb = quant.payload_bytes(pcount, gcfg.wire)
+            if mesh is None:
+                per_mix = gcfg.gossip_steps * gcfg.num_nodes * pb
+                permutes_mix = 0
+                contract = (f"gossip dense x{gcfg.gossip_steps}: "
+                            f"{per_mix:,}B/device/mixed-round "
+                            f"({pcount:,} params, wire={gcfg.wire})")
+            else:
+                c = conn or 1
+                per_mix = gcfg.gossip_steps * 2 * c * pb
+                permutes_mix = gcfg.gossip_steps * 2 * c
+                contract = (f"gossip ring conn={c}: {per_mix:,}B/device/"
+                            f"mixed-round ({pcount:,} params)")
+            from repro.obs import trace as obs_trace
+            with obs_trace.use(obs_trace.Tracer()) as run_tr, \
+                    run_tr.attach():
+                res = exec_engine.run_round_blocks(step_fn, states, sched,
+                                                   recorder=recorder,
+                                                   record_mask=record_mask,
+                                                   block_size=block_size)
+        else:
+            res = exec_engine.run_round_blocks(step_fn, states, sched,
+                                               recorder=recorder,
+                                               record_mask=record_mask,
+                                               block_size=block_size)
         if recorder is None:
             return res.state, res.aux
         history = metrics_lib.history_from(recorder, res)
@@ -311,6 +344,26 @@ def make_gossip_block_runner(local_step: Callable, gcfg: GossipConfig, *,
                 "clip": dp.clip, "sigma": dp.sigma, "delta": dp.delta,
                 "per_link": dp.per_link, "releases": final.releases,
                 "rho": final.rho, "epsilon": final.epsilon()}
+        if telemetry:
+            from repro.obs import report as obs_report
+            mixed = int(np.asarray(mix, dtype=bool).sum())
+            t_total = int(np.asarray(mix).shape[0])
+            history["telemetry"] = {
+                "rounds": t_total, "mixed_rounds": mixed,
+                "wire_bytes": mixed * per_mix,
+                "permutes": mixed * permutes_mix,
+                "contract": contract, "stop_round": res.stop_round}
+            if dp is not None and history.get("dp_epsilon"):
+                history["telemetry"]["dp_epsilon"] = \
+                    float(history["dp_epsilon"][-1])
+            obs_report.auto_emit(obs_report.make_report(
+                driver="gossip",
+                problem_fp=exec_engine.fingerprint(gcfg),
+                config=dataclasses.asdict(gcfg),
+                graph={"kind": gcfg.topology,
+                       "num_nodes": gcfg.num_nodes},
+                rounds=t_total, history=history, contract=contract,
+                spans=run_tr.summary()))
         return res.state, res.aux, history
 
     return run

@@ -435,12 +435,17 @@ def test_wire_config_rejections(ridge):
     with pytest.raises(ValueError, match="pipeline requires a quantized"):
         run_cola(ridge, graph, ColaConfig(kappa=1.0, pipeline=True), 4)
     byz = attack.Byzantine(nodes=(0,), mode="sign_flip", scale=10.0, start=1)
-    with pytest.raises(NotImplementedError, match="attacks="):
-        run_cola(ridge, graph, ColaConfig(kappa=1.0, wire="int8"), 4,
-                 attacks=[byz])
-    with pytest.raises(NotImplementedError, match="robust"):
+    # attacks=/robust= now compose with the wire on the SIMULATOR (the
+    # attacked payload is re-encoded, the gate judges decoded rows) — the
+    # remaining composed corners still fail loudly
+    with pytest.raises(NotImplementedError, match="pipeline"):
         run_cola(ridge, graph,
-                 ColaConfig(kappa=1.0, wire="int8", robust="trim"), 4)
+                 ColaConfig(kappa=1.0, wire="int8", pipeline=True), 4,
+                 attacks=[byz])
+    with pytest.raises(NotImplementedError, match="gossip_steps"):
+        run_cola(ridge, graph,
+                 ColaConfig(kappa=1.0, wire="int8", robust="trim",
+                            gossip_steps=2), 4)
     with pytest.raises(NotImplementedError, match="grad_mode"):
         run_cola(ridge, graph,
                  ColaConfig(kappa=1.0, wire="int8", grad_mode="mixed"), 4)
