@@ -90,6 +90,13 @@ _QUANT_SMOKE_MAX = 4.0
 _QUANT_KEY = "quant_gossip_rounds_per_sec"
 _QUANT_MAX_OVERHEAD = 3.0
 _PIPE_KEY = "pipelined_gossip_rounds_per_sec"
+# streamed client sampling (ColaConfig(participation=SampleConfig(...))) is
+# gated on its SAME-RUN ratio against the static full-K run on the same
+# complete graph: deriving each round's mask + reweighted W inside the scan
+# must cost at most _SAMPLED_MAX_OVERHEAD x the static-schedule round
+_SAMPLED_KEY = "sampled_rounds_per_sec"
+_SAMPLED_STATIC_KEY = "staticK_rounds_per_sec"
+_SAMPLED_MAX_OVERHEAD = 2.0
 
 
 def bench_config(smoke: bool = False) -> dict:
@@ -144,8 +151,44 @@ def bench_config(smoke: bool = False) -> dict:
                          "dist": dist_res.history["primal"][-1]},
     }
     result.update(bench_recording(smoke))
+    result.update(bench_sampled(smoke))
     result.update(bench_plan_gossip(smoke))
     return result
+
+
+def bench_sampled(smoke: bool = False) -> dict:
+    """Streamed client sampling vs the static full-K schedule, interleaved.
+
+    Both runs execute the block engine on the same complete graph; the
+    sampled run derives each round's active mask and reweighted W on device
+    inside the scan (``ScheduleProgram``) instead of slicing a
+    pre-materialized stack. The gate holds the SAME-RUN slowdown ratio
+    under ``_SAMPLED_MAX_OVERHEAD`` — machine-drift free, like the robust
+    and quant ratio gates."""
+    from repro.core.schedule import SampleConfig
+
+    rounds = 50 if smoke else 200
+    k = 16
+    n_samples, n_features = (128, 64) if smoke else (256, 128)
+    x, y, _ = synthetic.regression(n_samples, n_features, seed=3)
+    prob = problems.ridge_primal(jnp.asarray(x), jnp.asarray(y), 1e-2)
+    graph = topo.complete(k)
+    cfg_static = ColaConfig(kappa=1.0)
+    cfg_sampled = ColaConfig(
+        kappa=1.0, participation=SampleConfig(k_active=4, mode="dense"))
+
+    def run(c):
+        return run_cola(prob, graph, c, rounds, record_every=rounds - 1,
+                        executor="block", block_size=64)
+
+    bests, _ = timeit_rounds(
+        [lambda: run(cfg_static), lambda: run(cfg_sampled)], rounds,
+        repeats=8 if smoke else 4, label="sampled_pair")
+    static_rps, sampled_rps = bests
+    csv_row("round_bench", "sampled", f"K={k},K'=4,T={rounds}",
+            f"static {static_rps:.1f} / sampled {sampled_rps:.1f}")
+    return {_SAMPLED_STATIC_KEY: round(static_rps, 2),
+            _SAMPLED_KEY: round(sampled_rps, 2)}
 
 
 _PLAN_BENCH_SCRIPT = textwrap.dedent("""
@@ -310,7 +353,8 @@ def delta_table(result: dict, smoke: bool) -> dict | None:
     if not baseline:
         return None
     table = {}
-    for key in (_CONTROL,) + _GATED + (_ROBUST_KEY, _QUANT_KEY, _PIPE_KEY):
+    for key in (_CONTROL,) + _GATED + (_ROBUST_KEY, _QUANT_KEY, _PIPE_KEY,
+                                       _SAMPLED_STATIC_KEY, _SAMPLED_KEY):
         base, got = baseline.get(key), result.get(key)
         if not base or got is None:
             continue
@@ -393,6 +437,23 @@ def check_regression(result: dict, smoke: bool, tolerance: float) -> list[str]:
             failures.append(
                 f"{_QUANT_KEY}: the int8 codec costs {overhead:.2f}x over "
                 f"fp32 plan gossip (bar {quant_bar:.2f}x)")
+    # streamed-sampling overhead: same-run ratio against the static full-K
+    # run (the 2x bar from the streaming schedule's acceptance criterion)
+    sampled, static = result.get(_SAMPLED_KEY), \
+        result.get(_SAMPLED_STATIC_KEY)
+    if not sampled or not static:
+        failures.append(f"missing {_SAMPLED_KEY}/{_SAMPLED_STATIC_KEY} "
+                        "measurement")
+    else:
+        overhead = static / sampled
+        csv_row("round_bench", "gate", _SAMPLED_KEY,
+                f"{overhead:.2f}x overhead vs static full-K "
+                f"(bar {_SAMPLED_MAX_OVERHEAD:.2f}x)")
+        if overhead > _SAMPLED_MAX_OVERHEAD:
+            failures.append(
+                f"{_SAMPLED_KEY}: streamed participation costs "
+                f"{overhead:.2f}x over the static full-K schedule "
+                f"(bar {_SAMPLED_MAX_OVERHEAD:.2f}x)")
     pipe = result.get(_PIPE_KEY)
     if not pipe or not quant:
         failures.append(f"missing {_PIPE_KEY} measurement")

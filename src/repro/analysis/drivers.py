@@ -539,6 +539,50 @@ def check_dist_plan() -> List[Finding]:
         "dist-plan")
 
 
+@register_driver("dist-plan-sampled")
+def check_dist_plan_sampled() -> List[Finding]:
+    """Client sampling on the compiled per-node plan: the complete-graph
+    round program honors the full plan's comm contract, and every sampled
+    cohort's churn-reweighted W stays executable on that SAME static plan
+    — its (diag, coefs) lowering round-trips through
+    ``w_from_coefficients`` exactly (sampling only zeroes edges, never
+    grows support), which is what keeps one compiled program valid across
+    a streamed participation schedule."""
+    from repro import topo as rtopo
+    from repro.core import schedule as schedule_lib, topology as topo
+
+    prob = _lasso()
+    k = 4
+    graph = topo.complete(k)
+    hlo, plan = plan_round_hlo(prob, graph, k)
+    findings = _check_comm_to_findings(
+        lambda: contracts.check_comm(hlo, plan.contract(prob.d)),
+        "dist-plan-sampled")
+    sample = schedule_lib.SampleConfig(k_active=2, mode="dense")
+    mask_fn = schedule_lib.participation_callable(k, sample, run_seed=0)
+    rng = np.random.default_rng(0)
+    for t in range(8):
+        mask = mask_fn(t, rng)
+        w_t = np.asarray(topo.reweight_for_active(graph, mask))
+        try:
+            diag, coefs = rtopo.plan_coefficients(plan, w_t, check=True)
+        except ValueError as e:
+            findings.append(Finding(
+                "comm-contract",
+                f"round {t} sampled mask {mask.astype(int).tolist()} "
+                f"reweights outside the compiled complete-graph plan: {e}",
+                where="dist-plan-sampled"))
+            continue
+        if not (rtopo.w_from_coefficients(plan, diag, coefs) == w_t).all():
+            findings.append(Finding(
+                "comm-contract",
+                f"round {t} (diag, coefs) lowering does not round-trip to "
+                "the sampled W — the plan would execute a different matrix "
+                "than the certificate accounts for",
+                where="dist-plan-sampled"))
+    return findings
+
+
 @register_driver("dist-dense")
 def check_dist_dense() -> List[Finding]:
     from repro.core import topology as topo

@@ -20,11 +20,11 @@ from repro.attack.scenarios import (ATTACK_ENTRY_NAMES, AttackContext,
                                     AttackInfo, Byzantine, Eavesdropper,
                                     FreeRider, LinkCorruption, SCENARIOS,
                                     apply_attacks, register_scenario,
-                                    scenario)
+                                    scenario, streamed_attacks)
 
 __all__ = [
     "ATTACK_ENTRY_NAMES", "AttackContext", "AttackInfo", "Byzantine",
     "Eavesdropper", "FreeRider", "LinkCorruption", "SCENARIOS",
-    "apply_attacks", "register_scenario", "scenario",
+    "apply_attacks", "register_scenario", "scenario", "streamed_attacks",
     "gradient_inversion_report", "payload_cosines",
 ]

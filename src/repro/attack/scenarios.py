@@ -34,6 +34,15 @@ the same entry) and returns the transform summary the drivers need:
 which entries exist, the tap nodes, whether W was touched (the dist plan
 scheduler must then materialize per-round coefficients), and a hashable
 token for compiled-driver cache keys.
+
+Streaming: ``Byzantine`` and ``FreeRider`` are GENERATIVE — their round-t
+transform row is a pure function of ``t`` — so they also expose
+``stream_entries(ctx)``, a jax generator evaluated inside the round-block
+scan (``streamed_attacks`` composes a scenario list into one generator for
+``executor.run_round_blocks(stream=...)``), deriving the same values
+``apply`` would have stacked without any (T, K) materialization.
+``LinkCorruption`` (rewrites materialized W state) and ``Eavesdropper``
+(records trajectories) have no generative form and stay stacked-only.
 """
 from __future__ import annotations
 
@@ -175,6 +184,57 @@ class Byzantine:
             sched["atk_bias"] = np.broadcast_to(base,
                                                 (ctx.rounds,) + base.shape)
 
+    def stream_entry_names(self) -> tuple:
+        return ("coef", "bias_coef", "bias") if self.mode == "random" \
+            else ("coef",)
+
+    def stream_entries(self, ctx: AttackContext):
+        """Generative twin of ``apply``: a pure-jax ``fn(t, entries) ->
+        entries`` deriving this round's transform row from ``t`` alone (the
+        window test is a traced comparison, the node set and random
+        directions are run constants), chaining left to right like the
+        stacked path overwrites."""
+        import jax.numpy as jnp
+
+        if self.mode not in ("sign_flip", "scale", "random"):
+            raise ValueError(f"unknown Byzantine mode {self.mode!r}")
+        nodes = list(_resolve_nodes(self.nodes, self.fraction, ctx,
+                                    self.seed))
+        rows = _window(self.start, self.stop, ctx.rounds)
+        lo, hi = rows.start, rows.stop
+        hit_nodes = np.zeros((ctx.k,), dtype=bool)
+        hit_nodes[nodes] = True
+        nm = jnp.asarray(hit_nodes)
+        k, dtype, scale = ctx.k, ctx.dtype, self.scale
+        if self.mode == "random":
+            base = np.zeros((ctx.k, ctx.d), dtype=ctx.dtype)
+            rng = np.random.default_rng(self.seed)
+            base[nodes] = rng.standard_normal(
+                (len(nodes), ctx.d)).astype(ctx.dtype)
+            base_j = jnp.asarray(base)
+
+        def gen(t, entries):
+            hit = jnp.where((t >= lo) & (t < hi), nm, False)
+            coef = entries.get("atk_coef", jnp.ones((k,), dtype))
+            if self.mode == "sign_flip":
+                coef = jnp.where(hit, -scale, coef)
+            elif self.mode == "scale":
+                coef = jnp.where(hit, scale, coef)
+            else:
+                coef = jnp.where(hit, 0.0, coef)
+                bc = entries.get("atk_bias_coef", jnp.zeros((k,), dtype))
+                entries = {**entries,
+                           "atk_bias_coef": jnp.where(hit, scale, bc),
+                           # window-independent merge, like the stacked
+                           # (T, K, d) broadcast of run-constant directions
+                           "atk_bias": jnp.where(
+                               nm[:, None], base_j,
+                               entries.get("atk_bias",
+                                           jnp.zeros_like(base_j)))}
+            return {**entries, "atk_coef": coef}
+
+        return gen
+
 
 @register_scenario("free_rider")
 @dataclasses.dataclass(frozen=True)
@@ -197,6 +257,32 @@ class FreeRider:
         if self.stale:
             coef = _ensure_entry(sched, "coef", ctx, 1.0)
             coef[rows, nodes] = 0.0
+
+    def stream_entry_names(self) -> tuple:
+        return ("work", "coef") if self.stale else ("work",)
+
+    def stream_entries(self, ctx: AttackContext):
+        """Generative twin of ``apply`` (see ``Byzantine.stream_entries``)."""
+        import jax.numpy as jnp
+
+        nodes = list(_resolve_nodes(self.nodes, None, ctx, 0))
+        rows = _window(self.start, self.stop, ctx.rounds)
+        lo, hi = rows.start, rows.stop
+        hit_nodes = np.zeros((ctx.k,), dtype=bool)
+        hit_nodes[nodes] = True
+        nm = jnp.asarray(hit_nodes)
+        k, dtype, stale = ctx.k, ctx.dtype, self.stale
+
+        def gen(t, entries):
+            hit = jnp.where((t >= lo) & (t < hi), nm, False)
+            work = entries.get("atk_work", jnp.ones((k,), dtype))
+            entries = {**entries, "atk_work": jnp.where(hit, 0.0, work)}
+            if stale:
+                coef = entries.get("atk_coef", jnp.ones((k,), dtype))
+                entries = {**entries, "atk_coef": jnp.where(hit, 0.0, coef)}
+            return entries
+
+        return gen
 
 
 @register_scenario("link_corruption")
@@ -290,3 +376,54 @@ def apply_attacks(sched: dict, attacks, ctx: AttackContext
         w_modified=sched["w"] is not w_before,
     )
     return sched, info
+
+
+def streamed_attacks(attacks, ctx: AttackContext):
+    """Compose a scenario list into ONE jax generator for the streaming
+    executor: ``part(t) -> {"atk_*": row}`` deriving the round's transform
+    entries inside the scan, bitwise the values ``apply_attacks`` would
+    have stacked. Returns ``(part, info)`` where ``info`` is the same
+    ``AttackInfo`` the stacked path yields (``w_modified`` always False —
+    W-rewriting scenarios have no generative form and raise here).
+    """
+    import jax.numpy as jnp
+
+    if attacks is None:
+        attacks = ()
+    if not isinstance(attacks, (list, tuple)):
+        attacks = (attacks,)
+    gens, names = [], set()
+    for atk in attacks:
+        if not hasattr(atk, "stream_entries"):
+            raise NotImplementedError(
+                f"{type(atk).__name__} has no streamable (generative) form "
+                "— it rewrites or records materialized schedule state. Run "
+                "it on the stacked-schedule path (no participation "
+                "streaming).")
+        gens.append(atk.stream_entries(ctx))
+        names.update(atk.stream_entry_names())
+    if {"coef", "bias_coef"} & names:
+        names.add("dishonest")
+    entry_names = tuple(n for n in ATTACK_ENTRY_NAMES if n in names)
+    k, dtype = ctx.k, ctx.dtype
+
+    def part(t):
+        entries: dict = {}
+        for g in gens:
+            entries = g(t, entries)
+        if "atk_coef" in entries or "atk_bias_coef" in entries:
+            dis = jnp.zeros((k,), dtype=bool)
+            if "atk_coef" in entries:
+                dis = dis | (entries["atk_coef"] != 1.0)
+            if "atk_bias_coef" in entries:
+                dis = dis | (entries["atk_bias_coef"] != 0.0)
+            entries = {**entries, "atk_dishonest": dis.astype(dtype)}
+        return entries
+
+    info = AttackInfo(
+        token=tuple(repr(a) for a in attacks) + ("streamed",),
+        entry_names=entry_names,
+        tap_nodes=(),
+        w_modified=False,
+    )
+    return part, info

@@ -40,7 +40,7 @@ import numpy as np
 from jax import lax
 
 from repro.core import executor as exec_engine, metrics as metrics_lib, \
-    mixing, quant, topology as topo
+    mixing, quant, schedule as schedule_lib, topology as topo
 from repro.core.duality import GapReport, gap_report
 from repro.core.partition import Partition, make_partition
 from repro.core.problems import Problem
@@ -92,6 +92,15 @@ class ColaConfig:
     #   land in history["telemetry"] and a RunReport is appended to the
     #   .repro_runs registry. Off: the program is bitwise the untelemetered
     #   one (the counters field stays None and traces away).
+    participation: Any = None       # partial participation (client
+    #   sampling): a repro.core.schedule.SampleConfig — each round K' of K
+    #   nodes are sampled active via a fold_in(round) draw STREAMED inside
+    #   the round scan (no (T, K)-shaped schedule is materialized). Dense
+    #   mode (K <= schedule.DENSE_MAX_NODES) streams the reweighted mixing
+    #   matrix through the standard round body; cohort mode (million-node
+    #   populations) gathers/updates only the (K', ...) cohort slices and
+    #   never builds a (K, K) array. Requires executor="block" and a
+    #   complete base graph (see repro.core.schedule).
 
     def resolved_sigma(self, k: int) -> float:
         return self.gamma * k if self.sigma_prime is None else self.sigma_prime
@@ -203,6 +212,11 @@ def _round_body(problem: Problem, part: Partition, cfg: ColaConfig, *,
     sigma = cfg.resolved_sigma(k)
     spec = SubproblemSpec(sigma_over_tau=sigma / problem.tau, inv_k=1.0 / k)
     quantized = quant.is_quantized(cfg.wire)
+    # a caller-supplied qmix_fn is a LOWERED wire (the dist runtime's
+    # collective codec path — robust-aware when cfg.robust is set): the
+    # composed simulator-oracle branch below must not shadow it, or the
+    # encode would draw LOCAL row keys under shard_map
+    lowered_qmix = qmix_fn is not None
     if quantized and qmix_fn is None:
         # simulator oracle: quantize-dequantize every node's payload (own
         # diagonal term included — the device-count-invariant wire view),
@@ -236,7 +250,7 @@ def _round_body(problem: Problem, part: Partition, cfg: ColaConfig, *,
         # honest (a two-faced attacker — the stealthiest case for the
         # certificate layer to catch). v_self=None flags the honest fast
         # path, which is then bitwise the unattacked program.
-        if quantized and (cfg.robust is not None or atk):
+        if quantized and not lowered_qmix and (cfg.robust is not None or atk):
             # quantized wire composed with attacks and/or a robust defense
             # (simulator only — _check_wire_config scopes it to the dense
             # path, gossip_steps=1, no pipeline): the lie transforms the
@@ -404,6 +418,28 @@ def run_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
     k = graph.num_nodes
     _check_wire_config(cfg, attacks=attacks, leave_mode=leave_mode)
     part = make_partition(problem.n, k)
+    sample = cfg.participation
+    if sample is not None:
+        if not isinstance(sample, schedule_lib.SampleConfig):
+            raise TypeError(
+                f"cfg.participation must be a repro.core.schedule."
+                f"SampleConfig, got {type(sample).__name__}")
+        if active_schedule is not None:
+            raise ValueError(
+                "participation= and active_schedule= both set: client "
+                "sampling IS an active schedule — pass one or the other")
+        if executor != "block":
+            raise ValueError(
+                "cfg.participation requires executor='block' — the sampled "
+                "schedule streams through the round-block scan")
+        schedule_lib.require_complete(graph)
+        if sample.resolve_mode(k) == "cohort":
+            return _run_cola_cohort(
+                problem, graph, cfg, rounds, part=part,
+                record_every=record_every, recorder=recorder, eps=eps,
+                budget_schedule=budget_schedule, leave_mode=leave_mode,
+                seed=seed, w_override=w_override, attacks=attacks,
+                block_size=block_size)
     # honor cfg.cd_mode: forced "gram" must materialize the blocks even when
     # the heuristic declines, forced "residual" must not pay for them
     env = build_env(problem, part,
@@ -417,10 +453,11 @@ def run_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
                                       "active_schedule")
     budget_schedule = _as_schedule_fn(budget_schedule, rounds, k,
                                       "budget_schedule")
-    if active_schedule is not None:
-        # churn: certificates must judge each record round against the
-        # REWEIGHTED exchange (mask + beta of the active subnetwork), not
-        # the static graph baked at init
+    if active_schedule is not None or sample is not None:
+        # churn (and client sampling, which is streamed churn): certificates
+        # must judge each record round against the REWEIGHTED exchange
+        # (mask + beta of the active subnetwork), not the static graph
+        # baked at init
         rec = metrics_lib.dynamize(rec)
     args = (problem, part, env, state, graph, cfg, rounds, record_every,
             rec, active_schedule, budget_schedule, leave_mode, seed, base_w)
@@ -456,11 +493,6 @@ def _check_wire_config(cfg: ColaConfig, *, attacks=None,
         raise NotImplementedError(
             "attacks= with a quantized wire on the distributed runtime: "
             "the shard_map qmix lowerings have no attacked-encode path yet "
-            "(the simulator supports this composition)")
-    if dist and cfg.robust is not None:
-        raise NotImplementedError(
-            "cfg.robust with a quantized wire on the distributed runtime: "
-            "the block qmix lowering has no robust aggregation path yet "
             "(the simulator supports this composition)")
     if composed and cfg.pipeline:
         raise NotImplementedError(
@@ -665,20 +697,27 @@ def _run_cola_block(problem, part, env, state, graph, cfg, rounds,
     ``repro.core.executor``), the Recorder's row computed on device inside
     the scan, certificate-driven early exit handled by the engine."""
     dtype = problem.a.dtype
+    sample = cfg.participation
     sched = _materialize_schedule(graph, rounds, active_schedule,
                                   budget_schedule, leave_mode, seed, base_w,
                                   dtype)
     atk_info = None
+    atk_part = None
     if attacks is not None:
         from repro import attack as attack_lib
-        # attacks transform the schedule AFTER churn/budgets materialize and
-        # BEFORE the certificate schedule derives from it — certificates
-        # judge the corrupted exchange, exactly what ran
-        sched, atk_info = attack_lib.apply_attacks(
-            sched, attacks,
-            attack_lib.AttackContext(graph=graph, rounds=rounds,
-                                     k=part.num_nodes, d=problem.d,
-                                     dtype=dtype, seed=seed))
+        ctx = attack_lib.AttackContext(graph=graph, rounds=rounds,
+                                       k=part.num_nodes, d=problem.d,
+                                       dtype=dtype, seed=seed)
+        if sample is not None:
+            # a participation run streams its schedule, so the attacks must
+            # be generative too: one composed jax part rides the same
+            # stream (W-rewriting / recording scenarios raise here)
+            atk_part, atk_info = attack_lib.streamed_attacks(attacks, ctx)
+        else:
+            # attacks transform the schedule AFTER churn/budgets materialize
+            # and BEFORE the certificate schedule derives from it —
+            # certificates judge the corrupted exchange, exactly what ran
+            sched, atk_info = attack_lib.apply_attacks(sched, attacks, ctx)
         if "dishonest" in atk_info.entry_names:
             # payload-corrupting attacks: the certificate audits the honest
             # cohort against the ground-truth dishonesty mask the schedule
@@ -687,8 +726,28 @@ def _run_cola_block(problem, part, env, state, graph, cfg, rounds,
     atk_names = atk_info.entry_names if atk_info else ()
     tap_nodes = atk_info.tap_nodes if atk_info else ()
     tap_idx = jnp.asarray(tap_nodes, jnp.int32) if tap_nodes else None
+    stream = None
+    if sample is not None:
+        s_cert = metrics_lib.first_certificate(recorder)
+        parts = schedule_lib.participation_parts(
+            part.num_nodes, sample, dtype=dtype, run_seed=seed,
+            cert=s_cert if (s_cert is not None and s_cert.dynamic) else None,
+            leave_reset=(leave_mode == "reset"))
+        if atk_part is not None:
+            parts = parts + (atk_part,)
+        prog = schedule_lib.ScheduleProgram(parts=parts)
+        if sample.stream:
+            # the no-churn broadcast w/active legs give way to the streamed
+            # generator entries, merged inside the scan body each round
+            del sched["w"], sched["active"]
+            stream = prog.stream_fn()
+        else:
+            # escape hatch for the bitwise pins: the SAME jax generator,
+            # evaluated host-side into classical stacked schedules
+            sched.update(prog.materialize(rounds))
     has_budget = "budgets" in sched
-    has_reset = "leavers" in sched
+    has_reset = ("leavers" in sched
+                 or (stream is not None and leave_mode == "reset"))
     quantized = quant.is_quantized(cfg.wire)
     if quantized:
         # per-round codec keys ride the schedule like every other input;
@@ -742,12 +801,13 @@ def _run_cola_block(problem, part, env, state, graph, cfg, rounds,
     rec = (None if cad
            else exec_engine.record_flags(rounds, record_every))
     cert = metrics_lib.first_certificate(recorder)
-    if cert is not None and cert.dynamic:
+    if cert is not None and cert.dynamic and sample is None:
         # dynamic certificate: the per-round neighbor mask + threshold ride
         # the schedule like every other per-round input. Under an adaptive
         # cadence any round may record, so materialize every round's entry.
         # (attack-aware recorders also use the schedule, but their entry —
-        # atk_dishonest — was materialized by apply_attacks already.)
+        # atk_dishonest — was materialized by apply_attacks already; a
+        # participation run's entries come from its own streamed generator.)
         sched.update(metrics_lib.certificate_schedule(
             recorder, sched["w"], sched["active"],
             np.ones((rounds,), dtype=bool) if cad else rec))
@@ -762,7 +822,7 @@ def _run_cola_block(problem, part, env, state, graph, cfg, rounds,
         res = exec_engine.run_round_blocks(
             step_fn, state, sched, context=env, recorder=recorder,
             record_mask=rec, block_size=block_size, cadence=cad,
-            num_rounds=rounds,
+            num_rounds=rounds, stream=stream,
             cache_key=("cola-block", exec_engine.fingerprint(problem), part,
                        cfg, has_budget, has_reset, recorder.cache_token(),
                        atk_info.token if atk_info else None))
@@ -788,6 +848,127 @@ def _run_cola_block(problem, part, env, state, graph, cfg, rounds,
             contract=obs_inc["contract"],
             spans=run_tr.summary() if run_tr is not None else None))
     return RunResult(state=res.state, history=history, taps=taps)
+
+
+def _run_cola_cohort(problem, graph, cfg, rounds, *, part, record_every,
+                     recorder, eps, budget_schedule, leave_mode, seed,
+                     w_override, attacks, block_size) -> RunResult:
+    """Million-node client-sampling driver: each round only the sampled
+    K'-node cohort computes.
+
+    Nothing (K, K)- or (T, K)-shaped exists anywhere. The streamed schedule
+    carries the sorted cohort indices (K',) and the active mask (K,); the
+    round body gathers the cohort's (K', ...) state/env slices, applies the
+    sampled-complete gossip mix in closed form (the induced Metropolis
+    matrix over active nodes of a complete graph is the exact uniform
+    average — see ``schedule.sampled_complete_weights``), runs the vmapped
+    local CD solve on the slices, and scatters the updates back. Frozen
+    nodes are untouched, exactly the dense participation semantics, so the
+    two modes agree to reduction order at small K.
+
+    The certificate stays sound on the sampled subnetwork via the cohort
+    mode of ``metrics.CertificateRecorder`` (beta = 0 closed form over the
+    complete induced subgraph; cond9 judged over ALL K nodes — frozen nodes
+    must hold their thresholds too, matching the materialized-churn oracle).
+    """
+    sample = cfg.participation
+    k = part.num_nodes
+    for flag, what in (
+            (attacks is not None, "attacks="),
+            (budget_schedule is not None, "budget_schedule="),
+            (leave_mode != "freeze", f"leave_mode={leave_mode!r}"),
+            (w_override is not None, "w_override="),
+            (cfg.telemetry, "cfg.telemetry"),
+            (cfg.robust is not None, "cfg.robust"),
+            (quant.is_quantized(cfg.wire), f"wire={cfg.wire!r}"),
+            (cfg.grad_mode != "local", f"grad_mode={cfg.grad_mode!r}"),
+            (cfg.gossip_steps != 1, "gossip_steps != 1"),
+    ):
+        if flag:
+            raise NotImplementedError(
+                f"{what} is not supported in cohort participation mode — "
+                "the gather/scatter round body implements the bare "
+                "Algorithm-1 round over the sampled cohort (dense "
+                f"participation mode, K <= {schedule_lib.DENSE_MAX_NODES}, "
+                "supports these compositions)")
+    env = build_env(problem, part,
+                    with_gram=cfg.use_gram(problem.d, part.block,
+                                           problem.a.dtype.itemsize))
+    state = init_state(problem, part)
+    if isinstance(recorder, str):
+        # make_recorder wants a dense graph/W for the certificate — the
+        # cohort form derives its thresholds without either
+        if recorder not in ("gap", "certificate", "gap+certificate"):
+            raise ValueError(f"unknown recorder {recorder!r} (want 'gap', "
+                             "'certificate', 'gap+certificate' or a "
+                             "Recorder instance)")
+        recs = []
+        if recorder in ("gap", "gap+certificate"):
+            recs.append(metrics_lib.GapRecorder(
+                problem, part, eps=eps if recorder == "gap" else None))
+        if recorder in ("certificate", "gap+certificate"):
+            if eps is None:
+                raise ValueError(
+                    f"recorder={recorder!r} needs eps=: the Prop.-1 "
+                    "conditions certify a specific accuracy")
+            recs.append(metrics_lib.cohort_certificate_recorder(
+                problem, part, env, eps))
+        rec = (recs[0] if len(recs) == 1
+               else metrics_lib.ComposedRecorder(tuple(recs)))
+    else:
+        rec = recorder
+
+    dtype = problem.a.dtype
+    sigma = cfg.resolved_sigma(k)
+    spec = SubproblemSpec(sigma_over_tau=sigma / problem.tau, inv_k=1.0 / k)
+    gamma = cfg.gamma
+    steps = cfg.coord_steps(part.block)
+    use_gram = (env.gram_parts is not None
+                and cfg.use_gram(problem.d, part.block,
+                                 env.a_parts.dtype.itemsize))
+    if cfg.cd_mode == "gram" and env.gram_parts is None:
+        raise ValueError(
+            "cd_mode='gram' but the env has no Gram blocks — build it "
+            "with build_env(problem, part, with_gram=True)")
+
+    def step_fn(st, env_ctx, s_t):
+        idx = s_t["cohort_idx"]                      # (K',) sorted
+        v_sub = st.v_stack[idx]                      # (K', d)
+        a_sub = env_ctx.a_parts[idx]                 # (K', d, n_k)
+        # Step 4 over the sampled complete subnetwork: the mix is the exact
+        # uniform cohort average (rank-one W), inactive nodes untouched
+        v_half = jnp.broadcast_to(jnp.mean(v_sub, axis=0, keepdims=True),
+                                  v_sub.shape)
+        grads = jax.vmap(problem.grad_f)(v_half)
+        dx = cd_solve_all(problem, spec, a_sub, st.x_parts[idx], grads,
+                          env_ctx.gp_parts[idx], env_ctx.masks[idx], steps,
+                          step_budgets=None,
+                          gram_parts=env_ctx.gram_parts[idx] if use_gram
+                          else None)
+        # Steps 6-8 scattered back: frozen nodes keep x and v verbatim
+        dv = jnp.einsum("kdn,kn->kd", a_sub, dx)
+        x_new = st.x_parts.at[idx].add(gamma * dx)
+        v_new = st.v_stack.at[idx].set(v_half + gamma * k * dv)
+        return ColaState(x_parts=x_new, v_stack=v_new), None
+
+    prog = schedule_lib.ScheduleProgram(
+        parts=schedule_lib.cohort_parts(k, sample, dtype=dtype,
+                                        run_seed=seed))
+    if sample.stream:
+        sched, stream = {}, prog.stream_fn()
+    else:
+        sched, stream = prog.materialize(rounds), None
+    cad = metrics_lib.as_cadence(record_every)
+    rec_mask = (None if cad
+                else exec_engine.record_flags(rounds, record_every))
+    res = exec_engine.run_round_blocks(
+        step_fn, state, sched, context=env, recorder=rec,
+        record_mask=rec_mask, block_size=block_size, cadence=cad,
+        num_rounds=rounds, stream=stream,
+        cache_key=("cola-cohort", exec_engine.fingerprint(problem), part,
+                   cfg, rec.cache_token()))
+    return RunResult(state=res.state,
+                     history=metrics_lib.history_from(rec, res))
 
 
 def _reset_leavers(state: ColaState, env: ColaEnv, part: Partition,

@@ -326,7 +326,8 @@ def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
                      block_size: int = 64,
                      num_rounds: int | None = None,
                      cache_key: Any = None,
-                     cadence: Any = None) -> BlockRunResult:
+                     cadence: Any = None,
+                     stream: Callable | None = None) -> BlockRunResult:
     """Run ``T`` rounds of ``step_fn`` in ceil(T / block_size) dispatches.
 
     Args:
@@ -359,6 +360,17 @@ def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
         use ``fingerprint()`` for closed-over objects and the recorder's
         ``cache_token()``. A ``cadence`` is appended to the key
         automatically.
+      stream: optional pure-jax generator ``t -> {entry: array}`` (see
+        ``repro.core.schedule.ScheduleProgram.stream_fn``) evaluated INSIDE
+        the scan body: its output merges over the round's ``schedule``
+        slice (streamed entries win) before the step function and the
+        recorder see it. This is what lets per-round inputs that are
+        cheap to re-derive (participation masks, sampled mixing matrices,
+        attack transform rows — anything keyed by ``fold_in(t)``) avoid
+        (T, ...) host materialization entirely; ``schedule`` must then be
+        a dict and may be empty. The generator is folded into the driver
+        cache key automatically. ``stream=None`` programs are
+        byte-identical to the historical executor.
       cadence: a ``repro.core.metrics.AdaptiveCadence`` — replaces the
         host-side ``record_mask`` with an ON-DEVICE record controller: the
         next record round and current cadence ride the scan carry, each
@@ -376,6 +388,15 @@ def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
       zeros).
     """
     t_total = _num_rounds(schedule, record_mask, num_rounds)
+    if stream is not None:
+        if not isinstance(schedule, dict):
+            raise TypeError(
+                "stream= requires a dict schedule: streamed entries merge "
+                f"into the per-round slice (got {type(schedule).__name__})")
+        # the generator's bytecode + closure are part of the compiled
+        # program's content, exactly like the step function's
+        cache_key = (None if cache_key is None
+                     else (cache_key, ("stream", fingerprint(stream))))
     record_fn = recorder.record_fn if recorder is not None else None
     stop_fn = recorder.stop_fn if recorder is not None else None
     # schedule-aware recorders (e.g. the dynamic churn certificate) receive
@@ -423,6 +444,8 @@ def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
                 def body(carry, xs):
                     s, stopped, nxt, every = carry
                     sched_t, t, force_t = xs
+                    if stream is not None:
+                        sched_t = {**sched_t, **stream(t)}
                     s, aux = lax.cond(
                         stopped, lambda ss: skip_step(ss, ctx, sched_t),
                         lambda ss: step_fn(ss, ctx, sched_t), s)
@@ -448,13 +471,31 @@ def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
             return run_block_adaptive
 
         if not has_stop:
-            # historical engine: no stop carry, no cond around the step —
-            # byte-identical program to the pre-recorder executor, which is
-            # what keeps GapRecorder histories bitwise reproducible
+            if stream is None:
+                # historical engine: no stop carry, no cond around the
+                # step — byte-identical program to the pre-recorder
+                # executor, which is what keeps GapRecorder histories
+                # bitwise reproducible
+                @partial(jax.jit, donate_argnums=(0,))
+                def run_block(st, ctx, sched, rec):
+                    def body(s, xs):
+                        sched_t, rec_t = xs
+                        s, aux = step_fn(s, ctx, sched_t)
+                        if record_fn is None:
+                            return s, (aux, None)
+                        row = lax.cond(rec_t,
+                                       lambda ss: rec_call(ss, sched_t),
+                                       lambda ss: zero_row(ss, sched_t), s)
+                        return s, (aux, row)
+                    return lax.scan(body, st, (sched, rec))
+
+                return run_block
+
             @partial(jax.jit, donate_argnums=(0,))
-            def run_block(st, ctx, sched, rec):
+            def run_block_streamed(st, ctx, sched, rec, t_idx):
                 def body(s, xs):
-                    sched_t, rec_t = xs
+                    sched_t, rec_t, t = xs
+                    sched_t = {**sched_t, **stream(t)}
                     s, aux = step_fn(s, ctx, sched_t)
                     if record_fn is None:
                         return s, (aux, None)
@@ -462,15 +503,19 @@ def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
                                    lambda ss: rec_call(ss, sched_t),
                                    lambda ss: zero_row(ss, sched_t), s)
                     return s, (aux, row)
-                return lax.scan(body, st, (sched, rec))
+                return lax.scan(body, st, (sched, rec, t_idx))
 
-            return run_block
+            return run_block_streamed
 
         @partial(jax.jit, donate_argnums=(0,))
-        def run_block_stop(carry0, ctx, sched, rec):
+        def run_block_stop(carry0, ctx, sched, rec, t_idx=None):
             def body(carry, xs):
                 s, stopped = carry
-                sched_t, rec_t = xs
+                if stream is None:
+                    sched_t, rec_t = xs
+                else:
+                    sched_t, rec_t, t = xs
+                    sched_t = {**sched_t, **stream(t)}
 
                 s, aux = lax.cond(
                     stopped, lambda ss: skip_step(ss, ctx, sched_t),
@@ -482,7 +527,8 @@ def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
                 stop_now = jnp.logical_and(do_rec, stop_fn(row))
                 return (s, jnp.logical_or(stopped, stop_now)), \
                     (aux, row, do_rec)
-            return lax.scan(body, carry0, (sched, rec))
+            xs = (sched, rec) if stream is None else (sched, rec, t_idx)
+            return lax.scan(body, carry0, xs)
 
         return run_block_stop
 
@@ -532,14 +578,19 @@ def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
                     state, stop_flag = carry[0], carry[1]
                     valids.append(valid_b)
                 elif has_stop:
-                    (state, stop_flag), (aux_b, rows_b, valid_b) = run_block(
-                        (state, stop_flag), context, sched_b,
-                        jnp.asarray(rec_all[start:stop]))
+                    args = ((state, stop_flag), context, sched_b,
+                            jnp.asarray(rec_all[start:stop]))
+                    if stream is not None:
+                        args += (jnp.arange(start, stop, dtype=jnp.int32),)
+                    (state, stop_flag), (aux_b, rows_b, valid_b) = \
+                        run_block(*args)
                     valids.append(valid_b)
                 else:
-                    state, (aux_b, rows_b) = run_block(
-                        state, context, sched_b,
-                        jnp.asarray(rec_all[start:stop]))
+                    args = (state, context, sched_b,
+                            jnp.asarray(rec_all[start:stop]))
+                    if stream is not None:
+                        args += (jnp.arange(start, stop, dtype=jnp.int32),)
+                    state, (aux_b, rows_b) = run_block(*args)
                 if rows_b is not None:
                     rows.append(rows_b)
                 if aux_b is not None and jax.tree.leaves(aux_b):
@@ -568,6 +619,9 @@ def run_round_blocks(step_fn: Callable[[Any, Any, Any], tuple[Any, Any]],
                 sched0 = jax.tree.map(
                     lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
                     schedule)
+                if stream is not None:
+                    sched0 = {**sched0,
+                              **jax.eval_shape(stream, jnp.int32(0))}
                 row_sd = jax.eval_shape(record_fn, state, sched0)
             else:
                 row_sd = jax.eval_shape(record_fn, state)

@@ -180,7 +180,10 @@ class CertificateRecorder:
     a_parts: jax.Array      # (K, d, n_k) — condition (9) needs A_[k]
     gp_parts: jax.Array     # (K, n_k)
     masks: jax.Array        # (K, n_k)
-    neigh_mask: jax.Array   # (K, K) 0/1, self-inclusive
+    # (K, K) 0/1 self-inclusive neighbor mask; None in cohort mode, where a
+    # dense mask would be O(K^2) at million-node populations and the
+    # neighborhood structure is the closed-form sampled-complete one
+    neigh_mask: jax.Array | None
     sigma_k: jax.Array      # (K,) spectral-norm cache
     eps: float
     beta_ub: float
@@ -224,12 +227,22 @@ class CertificateRecorder:
     # while an undefended run absorbs the lies into honest states and
     # trips ``certificate_violated``.
     attack_aware: bool = False
+    # client-sampling mode (million-node populations, see
+    # ``core.schedule.SampleConfig``): the Eq.-10 neighborhood is the
+    # sampled COMPLETE subnetwork — its mixing matrix is the exact uniform
+    # average, so the neighborhood mean is one cohort-mean broadcast (no
+    # (K, K) mask anywhere) and the dynamic threshold collapses to the
+    # beta=0 run constant baked into ``grad_thresh`` at build time. The
+    # schedule supplies ``cohort_idx`` (K',) and ``active`` (K,); frozen
+    # nodes keep their own gradient as the neighborhood mean (disagreement
+    # exactly 0), matching the churn oracle's isolated-node semantics.
+    cohort: bool = False
 
     labels = CERT_METRICS
 
     @property
     def uses_schedule(self) -> bool:
-        return self.dynamic or self.attack_aware
+        return self.dynamic or self.attack_aware or self.cohort
 
     def local_row_inputs(self, x_parts, v_stack, grads, neigh_mean):
         """(local_gap, disagreement) per node — shared by the stacked
@@ -303,6 +316,8 @@ class CertificateRecorder:
         return jnp.stack([v_sum, ax_sum])
 
     def record_fn(self, state, sched=None) -> jax.Array:
+        if self.cohort:
+            return self._cohort_record(state, sched)
         grads = jax.vmap(self.problem.grad_f)(state.v_stack)   # (K, d)
         if self.dynamic:
             mask = sched["cert_mask"]
@@ -324,6 +339,23 @@ class CertificateRecorder:
         resid = consensus_residual(sums[0], sums[1], self.part.num_nodes)
         return self.summarize(local_gap, disagree, resid=resid,
                               grad_thresh=grad_thresh, honest=hon)
+
+    def _cohort_record(self, state, sched) -> jax.Array:
+        """Cohort-mode row: everything O(K * d) or O(K' * d) — the Eq.-9
+        gaps and Lemma-1 sums run over the full population (frozen nodes
+        must still satisfy condition 9, exactly as under churn), while the
+        Eq.-10 neighborhood mean is the one cohort-mean broadcast."""
+        idx = sched["cohort_idx"]                               # (K',)
+        act = jnp.asarray(sched["active"]) > 0                  # (K,)
+        grads = jax.vmap(self.problem.grad_f)(state.v_stack)    # (K, d)
+        cohort_mean = jnp.mean(grads[idx], axis=0)              # (d,)
+        neigh_mean = jnp.where(act[:, None], cohort_mean[None, :], grads)
+        local_gap, disagree = self.local_row_inputs(
+            state.x_parts, state.v_stack, grads, neigh_mean)
+        sums = self.invariant_sums(state.x_parts, state.v_stack,
+                                   self.a_parts)
+        resid = consensus_residual(sums[0], sums[1], self.part.num_nodes)
+        return self.summarize(local_gap, disagree, resid=resid)
 
     @property
     def stop_fn(self) -> Callable | None:
@@ -349,14 +381,17 @@ class CertificateRecorder:
         return jnp.maximum(gap_r, dis_r)
 
     def init_spec(self) -> dict:
+        if self.neigh_mask is None:
+            return {"sigma_k": self.sigma_k}
         return {"sigma_k": self.sigma_k, "neigh_mask": self.neigh_mask}
 
     def cache_token(self):
         return ("CertificateRecorder", self.eps, self.beta_ub, self.l_bound,
                 self.gap_thresh, self.grad_thresh, self.stop_on_certified,
                 self.dynamic, self.cons_tol, self.viol_tol,
-                self.stop_on_violation, self.attack_aware,
-                np.asarray(self.neigh_mask).tobytes())
+                self.stop_on_violation, self.attack_aware, self.cohort,
+                None if self.neigh_mask is None
+                else np.asarray(self.neigh_mask).tobytes())
 
     def collective_footprint(self, k: int, d: int, n_k: int,
                              itemsize: int = 4, comm: str = "dense",
@@ -527,6 +562,38 @@ def certificate_recorder(problem, part: Partition, env, neighbors,
         gap_thresh=float(gap_thresh), grad_thresh=float(grad_thresh),
         stop_on_certified=stop_on_certified, cons_tol=cons_tol,
         viol_tol=viol_tol, stop_on_violation=stop_on_violation)
+
+
+def cohort_certificate_recorder(problem, part: Partition, env,
+                                eps: float, *,
+                                stop_on_certified: bool = True,
+                                cons_tol: float = 1e-2,
+                                viol_tol: float = 0.1,
+                                stop_on_violation: bool = False
+                                ) -> CertificateRecorder:
+    """Build the client-sampling certificate (``cohort=True``): Prop.-1
+    over the sampled subnetwork of a COMPLETE base graph. No (K, K) array
+    is ever built — the neighbor mask is structural (the cohort) and the
+    thresholds derive with the sampled-complete contraction factor
+    beta = 0 (the induced mixing matrix is a rank-one projector)."""
+    l_bound = float(problem.l_bound)
+    if not math.isfinite(l_bound):
+        raise ValueError(
+            f"problem {problem.name!r} has unbounded g_i support "
+            "(l_bound=inf): Prop. 1 needs an L-bounded problem "
+            "(lasso / box-constrained) — use the gap recorder instead")
+    k = part.num_nodes
+    sigma_k = block_spectral_norms(env.a_parts)
+    gap_thresh, grad_thresh = certificate_thresholds(
+        env.masks, sigma_k, 0.0, l_bound, eps, k)
+    return CertificateRecorder(
+        problem=problem, part=part, a_parts=env.a_parts,
+        gp_parts=env.gp_parts, masks=env.masks, neigh_mask=None,
+        sigma_k=sigma_k, eps=float(eps), beta_ub=0.0, l_bound=l_bound,
+        gap_thresh=float(gap_thresh), grad_thresh=float(grad_thresh),
+        stop_on_certified=stop_on_certified, cons_tol=cons_tol,
+        viol_tol=viol_tol, stop_on_violation=stop_on_violation,
+        cohort=True)
 
 
 def dynamize(recorder):

@@ -1,0 +1,301 @@
+"""Streaming on-device schedules + partial participation (client sampling).
+
+The round-block executor historically consumed only pre-materialized
+``(T, ...)`` schedule stacks (mixing matrices, active masks, CD budgets,
+attack rows), so host memory scaled as T x K long before compute did. This
+module provides the streaming alternative: a ``ScheduleProgram`` bundles
+named per-round *generators* — pure jax functions ``t -> {entry: array}``
+whose randomness derives from ``jax.random.fold_in(key, t)`` — and the
+executor evaluates them INSIDE the ``lax.scan`` round body (see
+``executor.run_round_blocks(stream=...)``). Nothing T-shaped is ever
+materialized; the same program can also be ``materialize()``-d into the
+classical stacks, which is what the streaming-vs-stacked bitwise pins and
+the chunked-host fallback (non-generative schedules like eavesdropper
+taps) use.
+
+On top of it, ``SampleConfig`` implements FedAvg-style partial
+participation (McMahan et al.; the elasticity regime of CoLA Sec. 4):
+every round samples K' << K active nodes uniformly via a ``fold_in(t)``
+top-k draw. Two execution modes:
+
+* ``dense``  — small K: the generator emits the round's ``active`` mask
+  and the reweighted mixing matrix ``w`` (the induced Metropolis weights
+  of the complete graph's active subgraph are EXACTLY ones/K' on the
+  active block, inactive diagonal 1), plus the dynamic-certificate
+  entries, so the standard round body and churn certificate machinery run
+  unchanged — bitwise equal to the materialized path for the same draws.
+* ``cohort`` — million-node populations: the generator emits the sorted
+  active index vector ``cohort_idx`` and the round body gathers/updates
+  only the (K', ...) cohort slices (``cola._run_cola_cohort``); the
+  certificate stays sound on the sampled subnetwork via the cohort mode
+  of ``metrics.CertificateRecorder``.
+
+Participation requires a complete base graph (the sampled subnetwork of a
+sparse graph may disconnect, and its contraction factor has no cheap
+on-device form); the distributed runtime instead lowers participation to
+its existing time-varying-plan churn path (any graph) by evaluating the
+same generator host-side (``participation_callable``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# auto mode switches to the cohort path above this population size: a dense
+# (K, K) mixing matrix at 4096 nodes is 64 MB/round of schedule — past that
+# the O(K'^2 + K) cohort round is the only sane regime
+DENSE_MAX_NODES = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleConfig:
+    """Partial-participation sampler: K' of K nodes active per round.
+
+    ``mode="auto"`` picks ``dense`` (full stacked state, streamed W) up to
+    ``DENSE_MAX_NODES`` nodes and ``cohort`` (gather/scatter on the sampled
+    index set, no (K, K) array anywhere) beyond. ``stream=False`` is the
+    escape hatch for equivalence tests: the SAME jax generator is evaluated
+    host-side into classical stacked schedules, so a streamed run and its
+    materialized twin are bitwise comparable. ``seed=None`` derives the
+    sampling key from the run seed.
+    """
+
+    k_active: int
+    mode: str = "auto"          # "auto" | "dense" | "cohort"
+    stream: bool = True
+    seed: int | None = None
+
+    def __post_init__(self):
+        if self.k_active < 1:
+            raise ValueError(f"need k_active >= 1, got {self.k_active}")
+        if self.mode not in ("auto", "dense", "cohort"):
+            raise ValueError(f"unknown participation mode {self.mode!r} "
+                             "(want 'auto', 'dense' or 'cohort')")
+
+    def resolve_mode(self, k: int) -> str:
+        if self.k_active > k:
+            raise ValueError(f"k_active={self.k_active} exceeds the "
+                             f"population K={k}")
+        if self.mode != "auto":
+            return self.mode
+        return "dense" if k <= DENSE_MAX_NODES else "cohort"
+
+    def resolve_seed(self, run_seed: int) -> int:
+        return int(run_seed if self.seed is None else self.seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleProgram:
+    """Named per-round schedule generators, evaluated inside the scan.
+
+    ``parts`` is a tuple of pure jax functions ``t -> {name: array}`` whose
+    outputs merge left to right into the round's schedule slice. The
+    program streams (``stream_fn`` — what the executor's ``stream=`` hook
+    consumes) or materializes (``materialize`` — the classical stacked
+    schedule, for bitwise pins and non-streaming drivers). Functions must
+    derive all randomness from ``fold_in``-style keys on ``t`` so the two
+    forms see identical draws.
+    """
+
+    parts: tuple
+
+    def stream_fn(self) -> Callable[[jax.Array], dict]:
+        parts = self.parts
+
+        def stream(t):
+            out: dict = {}
+            for p in parts:
+                out.update(p(t))
+            return out
+
+        return stream
+
+    def entry_structs(self) -> dict:
+        """{name: ShapeDtypeStruct} of ONE round's streamed entries."""
+        return dict(jax.eval_shape(self.stream_fn(), jnp.int32(0)))
+
+    def materialize(self, rounds: int) -> dict:
+        """Evaluate the generators host-side into stacked (T, ...) arrays —
+        the classical schedule form, bitwise the values the streamed scan
+        would derive round by round."""
+        fn = jax.jit(self.stream_fn())
+        cols: dict = {name: [] for name in self.entry_structs()}
+        for t in range(rounds):
+            out = fn(jnp.int32(t))
+            for name, val in out.items():
+                cols[name].append(np.asarray(val))
+        return {name: np.stack(vals) if vals else
+                np.zeros((0,) + tuple(self.entry_structs()[name].shape),
+                         self.entry_structs()[name].dtype)
+                for name, vals in cols.items()}
+
+    def footprint(self, rounds: int) -> dict:
+        """Streamed vs stacked schedule memory, bytes: what ``dryrun
+        --plan --active`` renders. ``streamed`` is one round's entries
+        (resident inside the scan); ``stacked`` is the (T, ...) alternative
+        this program replaces."""
+        per_round = {name: int(np.prod(sd.shape, dtype=np.int64))
+                     * np.dtype(sd.dtype).itemsize
+                     for name, sd in self.entry_structs().items()}
+        streamed = int(sum(per_round.values()))
+        return {"entries": per_round, "streamed_bytes": streamed,
+                "stacked_bytes": streamed * int(rounds)}
+
+
+def active_mask(key: jax.Array, t, k: int, k_active: int) -> jax.Array:
+    """(K,) bool participation mask for round ``t``: the top-``k_active``
+    entries of a ``fold_in(key, t)``-keyed uniform draw — a uniformly random
+    K'-subset, re-derivable at any round without carrying sampler state."""
+    u = jax.random.uniform(jax.random.fold_in(key, t), (k,))
+    _, idx = jax.lax.top_k(u, k_active)
+    return jnp.zeros((k,), bool).at[idx].set(True)
+
+
+def cohort_indices(key: jax.Array, t, k: int, k_active: int) -> jax.Array:
+    """(K',) sorted int32 active-node indices for round ``t`` — the SAME
+    draw as ``active_mask`` (same fold_in key, same top-k), in gather
+    order."""
+    u = jax.random.uniform(jax.random.fold_in(key, t), (k,))
+    _, idx = jax.lax.top_k(u, k_active)
+    return jnp.sort(idx.astype(jnp.int32))
+
+
+def sampled_complete_weights(mask: jax.Array, k_active: int,
+                             dtype) -> jax.Array:
+    """Induced Metropolis mixing matrix of the complete graph's active
+    subgraph: every active pair (self included) gets weight 1/K' — the
+    induced subgraph is itself complete, so the Metropolis construction
+    collapses to the exact uniform average — and inactive nodes keep
+    W_kk = 1 (frozen, as ``topo.reweight_for_active`` builds host-side)."""
+    m = mask.astype(dtype)
+    inv = jnp.asarray(1.0 / k_active, dtype)
+    return jnp.outer(m, m) * inv + jnp.diag(jnp.asarray(1.0, dtype) - m)
+
+
+def require_complete(graph) -> None:
+    if getattr(graph, "name", None) != "complete":
+        raise ValueError(
+            "participation= requires a complete base graph (topology "
+            f"{getattr(graph, 'name', type(graph).__name__)!r}): the "
+            "sampled subnetwork of a sparse graph may disconnect and its "
+            "contraction factor has no on-device closed form. The "
+            "distributed runtime supports sparse graphs via its host-side "
+            "churn plan path.")
+
+
+def participation_parts(k: int, sample: SampleConfig, *, dtype,
+                        run_seed: int, cert=None,
+                        leave_reset: bool = False) -> tuple:
+    """The dense-mode generator parts for a participation run: the active
+    mask + streamed mixing matrix, optionally the dynamic-certificate
+    entries (complete graph => beta of the sampled subnetwork is exactly 0,
+    so the Eq.-10 threshold is a run constant) and the leaver reset flags.
+    """
+    key = jax.random.PRNGKey(sample.resolve_seed(run_seed))
+    k_active = sample.k_active
+
+    def part_mix(t):
+        mask = active_mask(key, t, k, k_active)
+        return {"active": mask.astype(dtype),
+                "w": sampled_complete_weights(mask, k_active, dtype)}
+
+    parts = [part_mix]
+    if cert is not None:
+        thresh = cohort_grad_thresh(cert)
+
+        def part_cert(t):
+            mask = active_mask(key, t, k, k_active)
+            cmask = jnp.outer(mask, mask) | jnp.eye(k, dtype=bool)
+            return {"cert_mask": cmask.astype(dtype),
+                    "cert_grad_thresh": jnp.asarray(thresh, dtype)}
+
+        parts.append(part_cert)
+    if leave_reset:
+        ones = jnp.ones((k,), bool)
+
+        def part_reset(t):
+            prev = jnp.where(t == 0, ones, active_mask(key, t - 1, k,
+                                                       k_active))
+            leave = prev & ~active_mask(key, t, k, k_active)
+            return {"leavers": leave, "reset_any": jnp.any(leave)}
+
+        parts.append(part_reset)
+    return tuple(parts)
+
+
+def cohort_parts(k: int, sample: SampleConfig, *, dtype,
+                 run_seed: int) -> tuple:
+    """The cohort-mode generator part: sorted active indices (what the
+    gather/scatter round body consumes) plus the (K,) mask the certificate
+    uses to split active from frozen nodes."""
+    key = jax.random.PRNGKey(sample.resolve_seed(run_seed))
+    k_active = sample.k_active
+
+    def part(t):
+        idx = cohort_indices(key, t, k, k_active)
+        mask = jnp.zeros((k,), bool).at[idx].set(True)
+        return {"cohort_idx": idx, "active": mask.astype(dtype)}
+
+    return (part,)
+
+
+def cohort_grad_thresh(cert) -> float:
+    """The Eq.-10 threshold over a sampled COMPLETE subnetwork. The induced
+    mixing matrix is the exact uniform average (a rank-one projector), so
+    the active subnetwork's contraction factor beta is 0 and the dynamic
+    threshold of ``metrics.certificate_round_inputs`` collapses to this run
+    constant — the closed form that lets the certificate stream."""
+    n_sizes = np.sum(np.asarray(cert.masks), axis=1)
+    scale = float(np.sum(n_sizes ** 2 * np.asarray(cert.sigma_k)))
+    k = cert.part.num_nodes
+    return float((scale ** -0.5) / (2.0 * cert.l_bound * np.sqrt(float(k)))
+                 * cert.eps)
+
+
+def participation_callable(k: int, sample: SampleConfig,
+                           run_seed: int) -> Callable:
+    """Adapter for the stacked-schedule drivers (the loop reference driver
+    and the distributed runtime's churn plan path): an
+    ``active_schedule(t, rng)`` callable that replays the SAME fold_in
+    draws as the streamed generator, host-side. Ignores the shared
+    schedule rng — participation draws come from the sampler key."""
+    key = jax.random.PRNGKey(sample.resolve_seed(run_seed))
+    k_active = sample.k_active
+    fn = jax.jit(lambda t: active_mask(key, t, k, k_active))
+
+    def schedule(t, rng):
+        return np.asarray(fn(jnp.int32(t)))
+
+    return schedule
+
+
+def render_stream_footprint(k: int, k_active: int, rounds: int,
+                            d: int, *, seed: int = 0,
+                            dtype=np.float32) -> str:
+    """Human-readable streamed-schedule footprint (the ``dryrun --plan
+    --active`` section): per-entry bytes resident inside the scan vs the
+    (T, ...) stacks streaming replaces. Uses the cohort generator above
+    ``DENSE_MAX_NODES`` (exactly what ``run_cola`` would execute)."""
+    sample = SampleConfig(k_active=k_active)
+    mode = sample.resolve_mode(k)
+    if mode == "cohort":
+        parts = cohort_parts(k, sample, dtype=np.dtype(dtype),
+                             run_seed=seed)
+    else:
+        parts = participation_parts(k, sample, dtype=np.dtype(dtype),
+                                    run_seed=seed)
+    prog = ScheduleProgram(parts=parts)
+    fp = prog.footprint(rounds)
+    lines = [f"[streamed schedule] K={k:,} K'={k_active:,} T={rounds:,} "
+             f"mode={mode} (schedule bytes resident per round)"]
+    for name, b in sorted(fp["entries"].items()):
+        lines.append(f"  {name:<12} {b:>14,} B/round")
+    lines.append(f"  {'streamed':<12} {fp['streamed_bytes']:>14,} B total "
+                 "(scan-resident)")
+    lines.append(f"  {'stacked':<12} {fp['stacked_bytes']:>14,} B total "
+                 "(the (T, ...) alternative)")
+    return "\n".join(lines)

@@ -91,6 +91,28 @@ def complete(k: int) -> Topology:
     return Topology("complete", adj)
 
 
+@dataclasses.dataclass(frozen=True)
+class ImplicitTopology:
+    """A graph too large for a dense (K, K) adjacency matrix.
+
+    Duck-types the ``Topology`` surface the drivers actually touch
+    (``name``, ``num_nodes``); anything needing the dense adjacency or a
+    materialized mixing matrix must special-case it (the cohort-sampling
+    path in ``repro.core.cola`` does — its mixing is the closed-form
+    uniform average over the sampled subnetwork, never a matrix).
+    """
+
+    name: str
+    num_nodes: int
+
+
+def implicit_complete(k: int) -> ImplicitTopology:
+    """Complete graph over K nodes without the O(K^2) adjacency — the
+    million-node population form ``ColaConfig(participation=...)``'s cohort
+    mode consumes."""
+    return ImplicitTopology("complete", k)
+
+
 def star(k: int) -> Topology:
     adj = _empty_adj(k)
     adj[0, 1:] = True

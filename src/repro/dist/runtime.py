@@ -261,6 +261,14 @@ def _dist_qmixers(axis: str, local_nodes: int, comm: str, cfg: ColaConfig,
     dequantized neighborhood buffer, one dot against the W rows. ``dense``:
     quantize locally, all-gather the NARROW payload + scales (the oracle
     keeps the byte reduction), dequantize, dense mix, slice back.
+
+    ``cfg.robust`` composes on both paths: the outlier gate judges the
+    DEQUANTIZED neighborhood rows — the same values an honest receiver
+    would consume — via ``lowering.block_robust_qmix_step`` (block plan;
+    ``run_dist_cola`` always compiles a BlockPlan when robust is set) or
+    ``mixing.robust_mix_steps`` on the gathered dequantized stack
+    (``dense``), bitwise the simulator's composed branch for trim/median
+    (clip: allclose, see ``lowering.block_robust_mix_step``).
     """
     wire, steps = cfg.wire, cfg.gossip_steps
 
@@ -285,9 +293,19 @@ def _dist_qmixers(axis: str, local_nodes: int, comm: str, cfg: ColaConfig,
             ef_new = None if ef is None else (p - deq)[None]
             return q[None], s[None], deq[None], ef_new
     elif comm == "plan":
-        def qmix_fn(payload, v, ef, qkey, buf):
-            return topo_lowering.block_qmix_steps(
-                v, ef, axis, plan, payload, steps, wire, qkey, payload=buf)
+        if cfg.robust is not None:
+            # composed robust x quantized wire: single-step by the
+            # _check_wire_config scoping (and buf is always None — pipeline
+            # is rejected when composed)
+            def qmix_fn(payload, v, ef, qkey, buf):
+                return topo_lowering.block_robust_qmix_step(
+                    v, ef, axis, plan, payload, wire, qkey, cfg.robust,
+                    trim=cfg.robust_trim, clip=cfg.robust_clip)
+        else:
+            def qmix_fn(payload, v, ef, qkey, buf):
+                return topo_lowering.block_qmix_steps(
+                    v, ef, axis, plan, payload, steps, wire, qkey,
+                    payload=buf)
 
         def qencode_fn(v, ef, nkey):
             p = v if ef is None else v + ef
@@ -324,7 +342,15 @@ def _dist_qmixers(axis: str, local_nodes: int, comm: str, cfg: ColaConfig,
                 else:
                     qf = lax.all_gather(q, axis, tiled=True)
                 sf = lax.all_gather(sc, axis, tiled=True)
-                mixed = mixing.dense_mix(w, quant.dequantize(qf, sf))
+                deq_full = quant.dequantize(qf, sf)
+                if cfg.robust is not None:
+                    # composed oracle: the gate judges the dequantized
+                    # stack, exactly the simulator's composed branch
+                    mixed = mixing.robust_mix_steps(
+                        w, deq_full, cfg.robust, trim=cfg.robust_trim,
+                        clip=cfg.robust_clip, steps=1)
+                else:
+                    mixed = mixing.dense_mix(w, deq_full)
                 out = lax.dynamic_slice_in_dim(
                     mixed, lax.axis_index(axis) * local_nodes, local_nodes)
             return out.reshape(v.shape), ef_l
@@ -817,9 +843,14 @@ def run_dist_cola(problem: Problem, graph: topo.Topology, cfg: ColaConfig,
                            else s_t["_pad"]))
         if obs_upd is None:
             return core, None
-        # robust gating only exists on the dense / block-plan paths, both
-        # of which carry the full (K, K) round W in the schedule slice
         w = s_t.get("plan_w", s_t.get("w"))
+        if w is None and plan is not None and not block_mode:
+            # the per-node CommPlan path dropped the (T, K, K) W stack at
+            # lowering time; rebuild this round's matrix from the executed
+            # coefficients so the gate recompute judges the true W (and
+            # make_update's robust-without-W guard never silently zeroes)
+            w = topo_plan.w_from_coefficients_device(
+                plan, s_t["plan_diag"], s_t["plan_coefs"])
         cts, obs_row = obs_upd(st, core, s_t, atk if atk_names else None, w)
         return core._replace(counters=cts), {"obs": obs_row}
 

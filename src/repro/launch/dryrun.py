@@ -471,6 +471,14 @@ def main() -> None:
                          "topology's byte budget (and enforced contract "
                          "line) for the quantized payload + fp32 scale "
                          "sidecar instead of the fp32 wire")
+    ap.add_argument("--active", type=int, default=None,
+                    help="--plan: ALSO render the streamed participation "
+                         "schedule footprint for K'=ACTIVE of --cola-k "
+                         "sampled nodes per round "
+                         "(ColaConfig(participation=SampleConfig(...)))")
+    ap.add_argument("--rounds", type=int, default=1000,
+                    help="--plan --active: round count T the streamed-vs-"
+                         "stacked schedule byte comparison assumes")
     ap.add_argument("--topo", default="ring,torus2d,expander,complete",
                     help="--plan: comma-separated topology names "
                          "(repro.topo.GRAPHS) whose compiled comm plans to "
@@ -515,6 +523,14 @@ def main() -> None:
         # node-sharded gate vector — budget it next to the recorders
         from repro.obs import counters as obs_counters
         print(obs_counters.render_footprint(k_nodes), flush=True)
+        # streamed participation schedules (client sampling): per-round
+        # schedule bytes resident inside the scan vs the (T, ...) stacks
+        # streaming replaces — the million-node population budget
+        if args.active is not None:
+            from repro.core import schedule as cola_schedule
+            print(cola_schedule.render_stream_footprint(
+                args.cola_k, args.active, args.rounds, args.cola_d),
+                flush=True)
         # compiled comm plans for arbitrary gossip topologies: color count,
         # the ppermute matchings, and per-link / per-device bytes per round
         # — the neighbor-only communication budget the topology-program
@@ -525,9 +541,20 @@ def main() -> None:
         # than the graph): block-level colors, per-link BLOCK bytes and the
         # intra- vs inter-block edge split.
         if args.topo != "none":
+            from repro.core import schedule as cola_schedule
             from repro.core import topology as cola_topo
             from repro import topo as topo_programs
             wire = None if args.wire in (None, "fp32") else args.wire
+            if args.cola_k > cola_schedule.DENSE_MAX_NODES:
+                # a dense (K, K) adjacency/plan at this K would not fit —
+                # the streamed cohort path above is the whole story
+                print(f"[topology program] skipped: K={args.cola_k:,} > "
+                      f"{cola_schedule.DENSE_MAX_NODES:,} "
+                      "(dense adjacency/coloring does not materialize at "
+                      "this population; sampled runs use the implicit "
+                      "complete graph + streamed cohort schedule)",
+                      flush=True)
+                return
             for name in args.topo.split(","):
                 graph = topo_programs.build(name.strip(), args.cola_k)
                 plan = topo_programs.compile_plan(graph)

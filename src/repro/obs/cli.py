@@ -56,8 +56,13 @@ def _fmt(v: Any) -> str:
 
 def cmd_list(args) -> int:
     reports = report_lib.load_reports(args.dir)
+    pruned = report_lib.pruned_total(args.dir)
     if not reports:
         print(f"no runs in {report_lib.runs_file(args.dir)}")
+        if pruned:
+            print(f"({pruned} older run(s) pruned by retention; "
+                  f"cap={report_lib.retention_limit()}, "
+                  f"override with {report_lib.ENV_KEEP})")
         return 0
     print(f"{'#':>3} {'run_id':<12} {'when':<19} {'driver':<13} "
           f"{'K':>3} {'rounds':>6} {'stop':>5} {'final':<22}")
@@ -73,6 +78,10 @@ def cmd_list(args) -> int:
               f"{(r.get('graph') or {}).get('num_nodes', '?'):>3} "
               f"{r.get('rounds', '?'):>6} "
               f"{'-' if stop is None else stop:>5} {lead:<22}")
+    if pruned:
+        print(f"({pruned} older run(s) pruned by retention; "
+              f"cap={report_lib.retention_limit()}, "
+              f"override with {report_lib.ENV_KEEP})")
     return 0
 
 

@@ -124,9 +124,12 @@ def make_update(cfg, k: int, inc: dict):
     where ``before``/``after`` are the (global-array) ColaStates around one
     executed round, ``s_t`` the round's schedule slice, ``atk`` the round's
     attack operand dict (or None) and ``w`` the round's (K, K) mixing
-    matrix (or None when the comm mode carries no full W — only legal when
-    ``cfg.robust`` is off). ``obs_row`` is the f32 (3,) per-round series
-    row ``[saturation, ef_norm, gate_total]``.
+    matrix — None is only legal when ``cfg.robust`` is off (a comm path
+    that lowered W away must reconstruct it, e.g. via
+    ``topo.plan.w_from_coefficients_device``, before the gate recompute;
+    silently skipping would report zero rejections for a defended run).
+    ``obs_row`` is the f32 (3,) per-round series row
+    ``[saturation, ef_norm, gate_total]``.
     """
     quantized = quant.is_quantized(cfg.wire)
     b_inc = jnp.float32(inc["bytes_per_round"])
@@ -156,7 +159,14 @@ def make_update(cfg, k: int, inc: dict):
         # -- robust-gate rejections: recompute the exact gate the defended
         # mix applied this round (step 0) — same helpers, so XLA CSEs it
         gate_t = jnp.zeros((k,), jnp.int32)
-        if cfg.robust is not None and w is not None:
+        if cfg.robust is not None and w is None:
+            raise ValueError(
+                "telemetry gate recompute needs the round's (K, K) mixing "
+                f"matrix but the comm path supplied none with robust="
+                f"{cfg.robust!r} — reconstruct it from the lowered schedule "
+                "(topo.plan.w_from_coefficients_device on plan_diag/"
+                "plan_coefs) instead of dropping gate counts to zero")
+        if cfg.robust is not None:
             v_send = _apply_payload_attack(before.v_stack, atk)
             if quantized:
                 key0 = step0_key(s_t)

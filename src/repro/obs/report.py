@@ -24,6 +24,10 @@ from typing import Any
 
 DEFAULT_DIR = ".repro_runs"
 ENV_DIR = "REPRO_RUNS_DIR"
+#: retention cap on registry lines; ``REPRO_RUNS_KEEP`` overrides (0 or a
+#: negative value disables pruning entirely)
+ENV_KEEP = "REPRO_RUNS_KEEP"
+DEFAULT_KEEP = 200
 
 #: report fields that describe telemetry itself, not the computation — the
 #: diff classifier (and the bitwise-twin acceptance check) keys off this
@@ -38,6 +42,21 @@ def runs_dir(path: str | None = None) -> str:
 
 def runs_file(path: str | None = None) -> str:
     return os.path.join(runs_dir(path), "runs.jsonl")
+
+
+def pruned_file(path: str | None = None) -> str:
+    """Sidecar holding the cumulative count of retention-pruned lines."""
+    return os.path.join(runs_dir(path), "runs.pruned")
+
+
+def pruned_total(dir: str | None = None) -> int:
+    """How many registry lines retention has dropped over this registry's
+    lifetime (what ``obs list`` surfaces so pruning is never silent)."""
+    try:
+        with open(pruned_file(dir)) as f:
+            return int(f.read().strip() or 0)
+    except (FileNotFoundError, ValueError):
+        return 0
 
 
 @dataclasses.dataclass
@@ -110,14 +129,64 @@ def make_report(*, driver: str, problem_fp: str, config: dict, graph: dict,
                      series=_series(history, telemetry), **body)
 
 
-def append_report(report: RunReport | dict, dir: str | None = None) -> str:
-    """Append one report line to the registry; returns the JSONL path."""
+def retention_limit(keep: int | None = None) -> int:
+    """Registry line cap (``REPRO_RUNS_KEEP``, default ``DEFAULT_KEEP``);
+    ``<= 0`` means unbounded."""
+    if keep is not None:
+        return keep
+    raw = os.environ.get(ENV_KEEP, "")
+    try:
+        return int(raw) if raw else DEFAULT_KEEP
+    except ValueError:
+        raise ValueError(
+            f"{ENV_KEEP}={raw!r} is not an integer (want a line cap, "
+            "or <= 0 to disable registry pruning)")
+
+
+def prune_registry(dir: str | None = None, *,
+                   keep: int | None = None) -> int:
+    """Drop the OLDEST registry lines past the retention cap.
+
+    Returns how many lines were pruned (0 when under the cap or pruning is
+    disabled). Appending is the hot path, so the rewrite only happens on
+    the appends that actually overflow; order is preserved, which keeps
+    ``find_report`` index references stable for the surviving tail.
+    """
+    limit = retention_limit(keep)
+    if limit <= 0:
+        return 0
+    path = runs_file(dir)
+    if not os.path.exists(path):
+        return 0
+    with open(path) as f:
+        lines = [ln for ln in f if ln.strip()]
+    excess = len(lines) - limit
+    if excess <= 0:
+        return 0
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.writelines(lines[excess:])
+    os.replace(tmp, path)
+    total = pruned_total(dir) + excess
+    with open(pruned_file(dir), "w") as f:
+        f.write(str(total))
+    return excess
+
+
+def append_report(report: RunReport | dict, dir: str | None = None, *,
+                  keep: int | None = None) -> str:
+    """Append one report line to the registry; returns the JSONL path.
+
+    Enforces the retention cap (``REPRO_RUNS_KEEP``, default
+    ``DEFAULT_KEEP`` lines) by pruning oldest-first after the append, so
+    an always-on telemetry fleet cannot grow the JSONL without bound."""
     d = runs_dir(dir)
     os.makedirs(d, exist_ok=True)
     path = os.path.join(d, "runs.jsonl")
     rec = report.to_dict() if isinstance(report, RunReport) else report
     with open(path, "a") as f:
         f.write(json.dumps(rec, sort_keys=True, default=str) + "\n")
+    prune_registry(dir, keep=keep)
     return path
 
 

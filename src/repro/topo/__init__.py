@@ -30,7 +30,8 @@ from repro.topo.plan import (BlockPlan, BlockPlanSchedule, CommPlan,
                              PlanSchedule, block_mix_dense, check_plan_covers,
                              compile_block_plan, compile_plan,
                              mix_with_block_plan, mix_with_plan,
-                             plan_coefficients, plan_mix_dense)
+                             plan_coefficients, plan_mix_dense,
+                             w_from_coefficients, w_from_coefficients_device)
 
 __all__ = [
     "BlockPlan", "BlockPlanSchedule", "CommPlan", "PlanSchedule", "GRAPHS",
@@ -41,4 +42,5 @@ __all__ = [
     "misra_gries_edge_coloring", "mix_with_block_plan", "mix_with_plan",
     "plan_coefficients", "plan_mix_dense", "plan_mix_step", "plan_mix_steps",
     "plan_neighborhood_stats", "random_geometric", "undirected_edges",
+    "w_from_coefficients", "w_from_coefficients_device",
 ]

@@ -274,6 +274,42 @@ def block_qmix_steps(v_block, ef_block, axis_name: str, plan: BlockPlan,
     return out, ef
 
 
+def block_robust_qmix_step(v_block, ef_block, axis_name: str,
+                           plan: BlockPlan, w_rows, wire: str, round_key,
+                           mode: str, *, trim: int = 1,
+                           clip: float | None = None):
+    """ONE robust gossip step on a QUANTIZED wire — the composed
+    ``cfg.robust`` x ``cfg.wire`` lowering for the block plan path.
+
+    Encodes this device's block exactly like ``block_qmix_steps`` (per-node
+    absmax rows, SR keys from GLOBAL node ids, EF folded), ppermutes the
+    narrow payload + sidecar per block color into the DEQUANTIZED
+    neighborhood buffer, then aggregates each node row with
+    ``mixing.robust_neighborhood_mix`` instead of the linear dot — so the
+    outlier gate judges the same dequantized values the receivers would
+    consume, bitwise the simulator's composed branch in
+    ``cola._round_body`` (trim/median; clip is allclose, see
+    ``block_robust_mix_step``). Single step by construction: the composed
+    wire is scoped to ``gossip_steps == 1`` (re-encoding mixed values is
+    unmodeled), which ``cola._check_wire_config`` enforces up front.
+    Returns ``(mixed, ef_new)``.
+    """
+    ln = plan.local_nodes
+    row_ids = lax.axis_index(axis_name) * ln + jnp.arange(ln)
+    flat = v_block.reshape(ln, -1)
+    key = None if round_key is None else quant.step_key(round_key, 0)
+    p = flat if ef_block is None else flat + ef_block.reshape(ln, -1)
+    q, sc = quant.quantize_rows(p, wire, key, node_ids=row_ids)
+    deq = quant.dequantize(q, sc)
+    ef_new = (None if ef_block is None
+              else (p - deq).reshape(ef_block.shape))
+    buf = block_gather_neighbors_q(q, sc, deq, axis_name, plan)   # (K, d)
+    out = mixing.robust_neighborhood_mix(w_rows, buf, row_ids, mode,
+                                         trim=trim, clip=clip,
+                                         self_override=None)
+    return out.reshape(v_block.shape).astype(v_block.dtype), ef_new
+
+
 def block_robust_mix_step(v_block, axis_name: str, plan: BlockPlan, w_rows,
                           mode: str, *, trim: int = 1,
                           clip: float | None = None, v_self=None):

@@ -506,6 +506,57 @@ def plan_coefficients(plan: CommPlan, w, *, check: bool = True
     return diag, coefs
 
 
+def w_from_coefficients(plan: CommPlan, diag, coefs) -> np.ndarray:
+    """Reassemble the (K, K) mixing matrix from one round's plan entries.
+
+    Exact inverse of ``plan_coefficients`` over the plan's support: the
+    diagonal comes back from ``diag``, and each color's coefficient row
+    scatters to ``W[k, partner_c(k)]`` (unmatched slots carry 0 and stay
+    off the matrix). Consumers that only see the lowered schedule —
+    telemetry on the per-node CommPlan dist path reconstructs W from
+    ``plan_diag``/``plan_coefs`` this way — get the same matrix the round
+    actually mixed with, because every executable off-diagonal entry lives
+    in exactly one color.
+    """
+    diag = np.asarray(diag)
+    coefs = np.asarray(coefs)
+    k = plan.num_nodes
+    if diag.shape != (k,):
+        raise ValueError(f"diag shape {diag.shape} != ({k},)")
+    if coefs.shape != (plan.num_colors, k):
+        raise ValueError(
+            f"coefs shape {coefs.shape} != ({plan.num_colors}, {k})")
+    w = np.zeros((k, k), dtype=np.result_type(diag.dtype, coefs.dtype))
+    np.fill_diagonal(w, diag)
+    rows = np.arange(k)
+    for c, partner in enumerate(plan.partner_arrays()):
+        matched = partner != rows
+        w[rows[matched], partner[matched]] = coefs[c, matched]
+    return w
+
+
+def w_from_coefficients_device(plan: CommPlan, diag, coefs):
+    """``w_from_coefficients`` for traced (on-device) schedule slices.
+
+    Same scatter driven by the plan's static partner tables, built with
+    ``jnp`` so it can run inside the dist runtime's jitted round step —
+    this is how telemetry on the per-node CommPlan path recovers the round
+    W the executed coefficients encode (the (T, K, K) stack was dropped
+    from the device schedule at lowering time).
+    """
+    import jax.numpy as jnp
+
+    k = plan.num_nodes
+    diag = jnp.asarray(diag)
+    rows = np.arange(k)
+    w = jnp.zeros((k, k), dtype=diag.dtype)
+    w = w.at[rows, rows].set(diag)
+    for c, partner in enumerate(plan.partner_arrays()):
+        matched = partner != rows
+        w = w.at[rows[matched], partner[matched]].set(coefs[c][matched])
+    return w
+
+
 @dataclasses.dataclass(frozen=True)
 class PlanSchedule:
     """Per-round plan coefficients, materialized like the churn masks.

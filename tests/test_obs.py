@@ -150,6 +150,56 @@ def test_diff_only_telemetry(prob, graph, tmp_path, monkeypatch):
     assert obs_report.diff_reports(reports[0], reports[1]) == twin
 
 
+def test_registry_retention_prunes_oldest_first(tmp_path, monkeypatch):
+    """The JSONL registry is capped (REPRO_RUNS_KEEP, default 200): the
+    append path prunes oldest-first, keeps order, and accounts the total
+    pruned in the sidecar `obs list` reports."""
+    monkeypatch.setenv(obs_report.ENV_DIR, str(tmp_path))
+    monkeypatch.setenv(obs_report.ENV_KEEP, "5")
+    for i in range(9):
+        obs_report.append_report({"run_id": f"run{i:02d}", "rounds": i})
+    reports = obs_report.load_reports()
+    assert [r["run_id"] for r in reports] == \
+        [f"run{i:02d}" for i in range(4, 9)]
+    assert obs_report.pruned_total() == 4
+    # the cap is re-enforced on every append, not only at the threshold
+    obs_report.append_report({"run_id": "run09", "rounds": 9})
+    assert len(obs_report.load_reports()) == 5
+    assert obs_report.pruned_total() == 5
+
+
+def test_registry_retention_env_and_overrides(tmp_path, monkeypatch):
+    monkeypatch.setenv(obs_report.ENV_DIR, str(tmp_path))
+    monkeypatch.delenv(obs_report.ENV_KEEP, raising=False)
+    assert obs_report.retention_limit() == obs_report.DEFAULT_KEEP
+    assert obs_report.retention_limit(keep=7) == 7
+    monkeypatch.setenv(obs_report.ENV_KEEP, "3")
+    assert obs_report.retention_limit() == 3
+    # keep= beats the env; <= 0 disables pruning entirely
+    for i in range(6):
+        obs_report.append_report({"run_id": f"r{i}"}, keep=0)
+    assert len(obs_report.load_reports()) == 6
+    assert obs_report.pruned_total() == 0
+    obs_report.append_report({"run_id": "r6"})  # env cap=3 kicks in
+    assert len(obs_report.load_reports()) == 3
+    assert obs_report.pruned_total() == 4
+    monkeypatch.setenv(obs_report.ENV_KEEP, "many")
+    with pytest.raises(ValueError, match="REPRO_RUNS_KEEP"):
+        obs_report.retention_limit()
+
+
+def test_obs_list_reports_pruned_count(tmp_path, monkeypatch, capsys):
+    from repro.obs import cli as obs_cli
+    monkeypatch.setenv(obs_report.ENV_DIR, str(tmp_path))
+    monkeypatch.setenv(obs_report.ENV_KEEP, "2")
+    for i in range(4):
+        obs_report.append_report({"run_id": f"run{i}", "rounds": i})
+    assert obs_cli.main(["--dir", str(tmp_path), "list"]) == 0
+    out = capsys.readouterr().out
+    assert "2 older run(s) pruned by retention" in out
+    assert obs_report.ENV_KEEP in out
+
+
 def test_cache_listener_nesting():
     outer, inner = [], []
     exec_engine.cached_driver(("obs-test", 0), lambda: (lambda: None))

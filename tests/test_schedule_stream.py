@@ -1,0 +1,308 @@
+"""Streaming on-device schedules + client sampling (partial participation).
+
+The tentpole pins ride here: a streamed participation run (`stream=True`,
+the generator evaluated INSIDE the round-block scan) must be bitwise equal
+to its materialized twin (`stream=False`, the SAME jax generator evaluated
+host-side into classical (T, ...) stacks), and the sampled-subnetwork
+certificate must match the churn-oracle run that replays the identical
+fold_in draws through the pre-existing `active_schedule=` machinery
+(`participation_callable`). The cohort driver (million-node regime, no
+(K, K) array anywhere) is pinned against the dense path at small K, and a
+K=10^6 / K'=10^3 smoke proves nothing (T, K)-shaped materializes.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro import attack
+from repro.core import problems, schedule as schedule_lib, topology as topo
+from repro.core.cola import ColaConfig, run_cola
+from repro.data import synthetic
+
+K = 16
+ROUNDS = 24
+
+
+@pytest.fixture(autouse=True)
+def _registry_off(monkeypatch):
+    monkeypatch.setenv("REPRO_RUNS_DIR", "off")
+
+
+@pytest.fixture(scope="module")
+def prob():
+    x, y, _ = synthetic.regression(48, 16, seed=2, sparsity_solution=0.2)
+    return problems.lasso(jnp.asarray(x), jnp.asarray(y), 5e-2, box=5.0)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return topo.complete(K)
+
+
+def _cfg(k_active=4, *, stream=True, mode="dense", **kw):
+    return ColaConfig(kappa=1.0,
+                      participation=schedule_lib.SampleConfig(
+                          k_active=k_active, mode=mode, stream=stream),
+                      **kw)
+
+
+def _assert_runs_equal(ra, rb, *, what):
+    assert np.array_equal(np.asarray(ra.state.x_parts), np.asarray(rb.state.x_parts)), \
+        f"{what}: x diverged"
+    assert np.array_equal(np.asarray(ra.state.v_stack),
+                          np.asarray(rb.state.v_stack)), \
+        f"{what}: v_stack diverged"
+    assert set(ra.history) == set(rb.history), what
+    for key, val in ra.history.items():
+        got = rb.history[key]
+        if isinstance(val, dict):
+            continue  # telemetry sub-dict, covered elsewhere
+        assert np.array_equal(np.asarray(val), np.asarray(got)), \
+            f"{what}: history[{key!r}] diverged"
+
+
+# ---------------------------------------------------------------------------
+# streamed vs materialized: the bitwise pin
+# ---------------------------------------------------------------------------
+
+def test_streamed_vs_stacked_bitwise(prob, graph):
+    """`stream=True` (generator inside the scan) and `stream=False` (same
+    generator materialized host-side into (T, ...) stacks) are bitwise
+    identical — state AND recorded history."""
+    runs = {s: run_cola(prob, graph, _cfg(stream=s), ROUNDS,
+                        record_every=4, seed=7)
+            for s in (True, False)}
+    _assert_runs_equal(runs[True], runs[False], what="stream twin")
+
+
+def test_streamed_certificate_vs_stacked(prob, graph):
+    runs = {s: run_cola(prob, graph, _cfg(stream=s), ROUNDS,
+                        record_every=4, recorder="gap+certificate",
+                        eps=1.0, seed=3)
+            for s in (True, False)}
+    _assert_runs_equal(runs[True], runs[False], what="certificate twin")
+
+
+def _oracle_problem():
+    # the hypothesis fallback's @given cannot thread pytest fixtures, so the
+    # property builds (and caches) its own problem/graph pair
+    if not hasattr(_oracle_problem, "cached"):
+        x, y, _ = synthetic.regression(48, 16, seed=2,
+                                       sparsity_solution=0.2)
+        _oracle_problem.cached = (
+            problems.lasso(jnp.asarray(x), jnp.asarray(y), 5e-2, box=5.0),
+            topo.complete(K))
+    return _oracle_problem.cached
+
+
+@given(seed=st.integers(0, 10 ** 6), k_active=st.sampled_from([2, 4, 6]))
+@settings(max_examples=8, deadline=None)
+def test_sampled_certificate_matches_churn_oracle(seed, k_active):
+    """Certificate soundness on the sampled subnetwork: a streamed
+    participation run must reproduce — exactly — the run the pre-existing
+    churn machinery produces when fed the SAME fold_in draws host-side
+    (`participation_callable`). Both reweight over the active subgraph,
+    both dynamize the certificate; participation is streamed churn."""
+    prob, graph = _oracle_problem()
+    sample = schedule_lib.SampleConfig(k_active=k_active, mode="dense")
+    streamed = run_cola(prob, graph,
+                        ColaConfig(kappa=1.0, participation=sample),
+                        12, record_every=4, recorder="gap+certificate",
+                        eps=1.0, seed=seed)
+    oracle = run_cola(prob, graph, ColaConfig(kappa=1.0), 12,
+                      record_every=4, recorder="gap+certificate", eps=1.0,
+                      seed=seed,
+                      active_schedule=schedule_lib.participation_callable(
+                          K, sample, seed))
+    _assert_runs_equal(streamed, oracle, what="churn oracle")
+
+
+def test_participation_draws_are_uniform_ksubsets():
+    key_runs = schedule_lib.participation_callable(
+        K, schedule_lib.SampleConfig(k_active=3), run_seed=0)
+    rng = np.random.default_rng(0)
+    masks = np.stack([key_runs(t, rng) for t in range(50)])
+    assert masks.dtype == bool and masks.shape == (50, K)
+    assert (masks.sum(axis=1) == 3).all()
+    assert len({tuple(m) for m in map(tuple, masks)}) > 1  # not a constant
+    # every node participates eventually (uniform sampling, 50 draws)
+    assert masks.any(axis=0).all()
+
+
+def test_sample_seed_decouples_from_run_seed(prob, graph):
+    """`SampleConfig(seed=...)` pins the participation draws independently
+    of the run seed: two different run seeds with the same sampler seed
+    visit the same active sets."""
+    sample = schedule_lib.SampleConfig(k_active=4, seed=11)
+    fn_a = schedule_lib.participation_callable(K, sample, run_seed=0)
+    fn_b = schedule_lib.participation_callable(K, sample, run_seed=99)
+    rng = np.random.default_rng(0)
+    for t in range(8):
+        assert (fn_a(t, rng) == fn_b(t, rng)).all()
+
+
+# ---------------------------------------------------------------------------
+# cohort mode: the million-node regime
+# ---------------------------------------------------------------------------
+
+def test_cohort_matches_dense_small_k(prob, graph):
+    """The gather/scatter cohort round is the same Algorithm-1 round the
+    dense participation path runs — pinned at small K where both exist."""
+    dense = run_cola(prob, graph, _cfg(mode="dense"), ROUNDS,
+                     record_every=4, seed=5)
+    cohort = run_cola(prob, graph, _cfg(mode="cohort"), ROUNDS,
+                      record_every=4, seed=5)
+    np.testing.assert_allclose(np.asarray(cohort.state.x_parts),
+                               np.asarray(dense.state.x_parts),
+                               rtol=0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cohort.history["gap"]),
+                               np.asarray(dense.history["gap"]),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_cohort_certificate_small_k(prob, graph):
+    """Cohort certificate rows certify the sampled subnetwork: the
+    recorded keys exist and the run still converges monotonically-ish."""
+    res = run_cola(prob, graph, _cfg(mode="cohort"), ROUNDS,
+                   record_every=4, recorder="gap+certificate", eps=1.0,
+                   seed=5)
+    assert "certified" in res.history
+    gaps = np.asarray(res.history["gap"], dtype=np.float64)
+    assert np.isfinite(gaps).all()
+    assert gaps[-1] < gaps[0]
+
+
+def test_auto_mode_switches_on_population():
+    s = schedule_lib.SampleConfig(k_active=8)
+    assert s.resolve_mode(schedule_lib.DENSE_MAX_NODES) == "dense"
+    assert s.resolve_mode(schedule_lib.DENSE_MAX_NODES + 1) == "cohort"
+    assert schedule_lib.SampleConfig(k_active=2, mode="cohort") \
+        .resolve_mode(16) == "cohort"
+
+
+@pytest.mark.slow
+def test_million_node_cohort_smoke():
+    """K=10^6, K'=10^3: the population only ever appears as (K,)-shaped
+    state — no (T, K) or (K, K) array exists anywhere. A handful of rounds
+    must run and record finite metrics."""
+    k, k_active, n = 1_000_000, 1_000, 2_000_000
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((8, n)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((8,)).astype(np.float32))
+    prob = problems.lasso(a, y, 1e-3)
+    cfg = ColaConfig(kappa=1.0, participation=schedule_lib.SampleConfig(
+        k_active=k_active))
+    assert cfg.participation.resolve_mode(k) == "cohort"
+    res = run_cola(prob, topo.implicit_complete(k), cfg, 2,
+                   record_every=1, seed=0)
+    gaps = np.asarray(res.history["gap"], dtype=np.float64)
+    assert gaps.shape[0] >= 1 and np.isfinite(gaps).all()
+
+
+# ---------------------------------------------------------------------------
+# streamed attacks ride the same stream
+# ---------------------------------------------------------------------------
+
+def test_streamed_attacks_bitwise(prob, graph):
+    """Generative attack transforms (Byzantine random payload, windowed;
+    stale FreeRider) composed onto the participation stream are bitwise
+    the stacked `apply_attacks` rows — pinned via the stream=False twin."""
+    atks = [attack.Byzantine(nodes=(1, 5), mode="random", scale=4.0,
+                             start=2, stop=18, seed=13),
+            attack.FreeRider(nodes=(9,), stale=True, start=4)]
+    runs = {s: run_cola(prob, graph, _cfg(stream=s), ROUNDS,
+                        record_every=4, seed=2, attacks=atks)
+            for s in (True, False)}
+    _assert_runs_equal(runs[True], runs[False], what="streamed attacks")
+
+
+def test_non_generative_attack_rejected(prob, graph):
+    """W-rewriting scenarios have no generative form: composing them with
+    a (streaming) participation run must fail loudly, not silently skip."""
+    atk = attack.LinkCorruption(edges=((0, 1),), scale=0.0)
+    with pytest.raises(NotImplementedError, match="generative"):
+        run_cola(prob, graph, _cfg(), ROUNDS, attacks=[atk])
+
+
+# ---------------------------------------------------------------------------
+# configuration validation
+# ---------------------------------------------------------------------------
+
+def test_participation_requires_block_executor(prob, graph):
+    with pytest.raises(ValueError, match="executor='block'"):
+        run_cola(prob, graph, _cfg(), ROUNDS, executor="loop")
+
+
+def test_participation_requires_complete_graph(prob):
+    with pytest.raises(ValueError, match="complete"):
+        run_cola(prob, topo.ring(K), _cfg(), ROUNDS)
+
+
+def test_participation_excludes_active_schedule(prob, graph):
+    with pytest.raises(ValueError, match="active_schedule"):
+        run_cola(prob, graph, _cfg(), ROUNDS,
+                 active_schedule=np.ones((ROUNDS, K), dtype=bool))
+
+
+def test_participation_type_checked(prob, graph):
+    with pytest.raises(TypeError, match="SampleConfig"):
+        run_cola(prob, graph,
+                 ColaConfig(kappa=1.0, participation={"k_active": 4}),
+                 ROUNDS)
+
+
+def test_sample_config_validation():
+    with pytest.raises(ValueError, match="k_active"):
+        schedule_lib.SampleConfig(k_active=0)
+    with pytest.raises(ValueError, match="mode"):
+        schedule_lib.SampleConfig(k_active=2, mode="sparse")
+    with pytest.raises(ValueError, match="exceeds"):
+        schedule_lib.SampleConfig(k_active=32).resolve_mode(K)
+
+
+# ---------------------------------------------------------------------------
+# footprint accounting (what `dryrun --plan --active` renders)
+# ---------------------------------------------------------------------------
+
+def test_schedule_program_footprint_matches_entries():
+    parts = schedule_lib.cohort_parts(
+        1000, schedule_lib.SampleConfig(k_active=10, mode="cohort"),
+        dtype=np.dtype(np.float32), run_seed=0)
+    prog = schedule_lib.ScheduleProgram(parts=parts)
+    fp = prog.footprint(100)
+    assert fp["streamed_bytes"] == sum(fp["entries"].values())
+    assert fp["stacked_bytes"] == fp["streamed_bytes"] * 100
+    # cohort entries: (K',) int32 indices + (K,) mask — never (K, K)
+    assert fp["entries"]["cohort_idx"] == 10 * 4
+    assert fp["entries"]["active"] == 1000 * 4
+
+
+def test_render_stream_footprint_million_nodes():
+    text = schedule_lib.render_stream_footprint(
+        1_000_000, 1_000, 1_000, 8)
+    assert "mode=cohort" in text
+    assert "4,004,000 B total" in text            # streamed: one round
+    assert "4,004,000,000 B total" in text        # stacked alternative
+    small = schedule_lib.render_stream_footprint(16, 4, 100, 8)
+    assert "mode=dense" in small and "w" in small
+
+
+def test_materialize_matches_stream_fn():
+    """`materialize` is the host-side evaluation of the same generators the
+    scan consumes — entry by entry, round by round, bitwise."""
+    parts = schedule_lib.participation_parts(
+        8, schedule_lib.SampleConfig(k_active=3, mode="dense"),
+        dtype=np.dtype(np.float32), run_seed=4)
+    prog = schedule_lib.ScheduleProgram(parts=parts)
+    stacked = prog.materialize(6)
+    fn = prog.stream_fn()
+    for t in range(6):
+        row = fn(jnp.int32(t))
+        for name, stack in stacked.items():
+            assert np.array_equal(stack[t], np.asarray(row[name])), (name, t)
+    # masks really hold K' active nodes and W rows renormalize over them
+    act = stacked["active"]
+    assert (act.sum(axis=1) == 3).all()
+    w = stacked["w"]
+    np.testing.assert_allclose(w.sum(axis=2), 1.0, rtol=0, atol=1e-6)

@@ -215,6 +215,55 @@ def test_plan_support_roundtrip():
     assert plan.num_edges == graph.adjacency.sum() // 2
 
 
+@given(k=st.integers(4, 20), p=st.floats(0.1, 0.9), seed=st.integers(0, 99))
+@settings(max_examples=30, deadline=None)
+def test_w_from_coefficients_inverts_plan_coefficients(k, p, seed):
+    """`w_from_coefficients` is the exact inverse of `plan_coefficients`:
+    lower any in-support W (including churn-reweighted supports) to
+    (diag, coefs) and scattering back reproduces W bitwise — what the
+    telemetry gate recompute relies on when the per-node CommPlan path has
+    dropped the (T, K, K) stack."""
+    rng = np.random.default_rng(seed)
+    graph = topo.Topology("rand", _random_support(k, p, seed))
+    plan = rtopo.compile_plan(graph)
+    w = np.asarray(topo.metropolis_weights(graph))
+    diag, coefs = rtopo.plan_coefficients(plan, w)
+    np.testing.assert_array_equal(
+        rtopo.w_from_coefficients(plan, diag, coefs), w)
+    # churn subset of the support round-trips too
+    active = rng.random(k) >= 0.3
+    if not active.any():
+        active[:] = True
+    w_t = np.asarray(topo.reweight_for_active(graph, active))
+    diag, coefs = rtopo.plan_coefficients(plan, w_t)
+    np.testing.assert_array_equal(
+        rtopo.w_from_coefficients(plan, diag, coefs), w_t)
+
+
+def test_w_from_coefficients_device_matches_host():
+    """The jax variant (what `dist.runtime` rebuilds the round's W with for
+    the gate recompute) scatters the same matrix as the numpy inverse —
+    compared in f32, the dtype the runtime lowers schedules to."""
+    graph = topo.connected_cycle(6, 2)
+    plan = rtopo.compile_plan(graph)
+    w32 = np.asarray(topo.metropolis_weights(graph)).astype(np.float32)
+    diag, coefs = rtopo.plan_coefficients(plan, w32)
+    host = rtopo.w_from_coefficients(plan, diag, coefs)
+    dev = np.asarray(rtopo.w_from_coefficients_device(plan, diag, coefs))
+    np.testing.assert_array_equal(dev, host)
+    np.testing.assert_array_equal(dev, w32)
+
+
+def test_w_from_coefficients_validates_shapes():
+    plan = rtopo.compile_plan(topo.ring(6))
+    diag, coefs = rtopo.plan_coefficients(
+        plan, topo.metropolis_weights(topo.ring(6)))
+    with pytest.raises(ValueError):
+        rtopo.w_from_coefficients(plan, diag[:-1], coefs)
+    with pytest.raises(ValueError):
+        rtopo.w_from_coefficients(plan, diag, coefs[:-1])
+
+
 # ---------------------------------------------------------------------------
 # block plans: K nodes quotiented onto M < K devices
 # ---------------------------------------------------------------------------
